@@ -1,0 +1,48 @@
+"""Shared benchmark helpers: tiny-LM training for PTQ quality experiments."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, global_batch
+from repro.launch.steps import make_train_step
+from repro.models import forward_train, model_defs
+from repro.models.params import init_params
+from repro.optim.adamw import AdamWConfig, init_opt_state
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+TINY = ModelConfig(
+    name="tiny_lm", n_layers=4, d_model=128, n_heads=4, n_kv_heads=4,
+    head_dim=32, d_ff=512, vocab_size=512, remat=False, attn_chunk=64,
+)
+
+DATA = DataConfig(vocab_size=512, seq_len=128, global_batch=16, seed=7)
+
+
+@functools.lru_cache(maxsize=1)
+def trained_tiny_lm(steps: int = 300, lr: float = 3e-3):
+    """Train the shared tiny LM once per process; returns (cfg, params)."""
+    cfg = TINY
+    params = init_params(model_defs(cfg), seed=0, dtype_override="float32")
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(
+        cfg, AdamWConfig(lr=lr, warmup_steps=20, total_steps=steps)))
+    for s in range(steps):
+        params, opt, m = step(params, opt, global_batch(DATA, s))
+    return cfg, params, float(m["ce"])
+
+
+def eval_ce(cfg, params, n_batches: int = 4, start_step: int = 10_000):
+    """Held-out CE (steps the model never trained on)."""
+    from repro.models.transformer import loss_fn
+    tot = 0.0
+    f = jax.jit(lambda p, b: loss_fn(p, b, cfg)[1]["ce"])
+    for i in range(n_batches):
+        tot += float(f(params, global_batch(DATA, start_step + i)))
+    return tot / n_batches

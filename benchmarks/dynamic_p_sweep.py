@@ -1,0 +1,51 @@
+"""Beyond-paper (= the paper's §VIII future work): dynamic per-layer p.
+
+Compares uniform-p MIP2Q against the SQNR-floor-driven per-layer selection
+(core/dynamic_p.py) on the tiny-LM: quality (held-out CE) vs achieved
+average compression — the per-layer policy should trace a better frontier
+than the three uniform points.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import RESULTS_DIR, eval_ce, trained_tiny_lm
+from repro.core.apply import fake_quantize_tree
+from repro.core.dynamic_p import achieved_ratio, choose_layer_p, dynamic_policy
+from repro.core.policy import StruMConfig, default_policy
+
+
+def run():
+    t0 = time.time()
+    cfg, params, _ = trained_tiny_lm()
+    rows = []
+    for p in (0.25, 0.5, 0.75):
+        scfg = StruMConfig(method="mip2q", p=p, L=7)
+        qp = fake_quantize_tree(params, default_policy(scfg))
+        rows.append({"policy": f"uniform_p{p}", "avg_r": scfg.compression_ratio,
+                     "eval_ce": eval_ce(cfg, qp)})
+    for floor in (24.0, 28.0, 32.0):
+        chosen = choose_layer_p(params, sqnr_floor_db=floor)
+        pol = dynamic_policy(chosen)
+        qp = fake_quantize_tree(params, pol)
+        dist = {}
+        for c in chosen.values():
+            key = f"p{c.p}" if c else "int8"
+            dist[key] = dist.get(key, 0) + 1
+        rows.append({"policy": f"dynamic_floor{floor:.0f}db",
+                     "avg_r": achieved_ratio(chosen, params),
+                     "eval_ce": eval_ce(cfg, qp), "p_distribution": dist})
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "dynamic_p.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"dynamic_p/{r['policy']},{(time.time()-t0)*1e6/len(rows):.0f},"
+              f"avg_r={r['avg_r']:.4f};eval_ce={r['eval_ce']:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

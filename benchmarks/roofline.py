@@ -1,0 +1,101 @@
+"""§Roofline report: read the dry-run results and emit the per-cell table.
+
+For every (arch × shape × mesh): the three roofline terms (seconds), the
+dominant bottleneck, MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D
+(inference), the useful-FLOPs ratio, and a one-line lever on the dominant
+term.  Also ranks cells to select the three §Perf hillclimb targets.
+
+Interpretation note (recorded in EXPERIMENTS.md): `bytes accessed` comes
+from the CPU-backend cost model, which under-fuses relative to TPU — the
+memory term is an upper bound and is primarily useful for *ranking* and for
+before/after deltas of the §Perf loop, both of which hold the backend
+constant.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun.json")
+
+LEVERS = {
+    "compute": "raise MXU utilization: fewer remat recomputes, larger per-op "
+               "tiles (bigger per-device batch), fused QKV projections",
+    "memory": "cut HBM traffic: StruM-packed weights (x{r:.3f}), bf16 "
+              "master/optimizer state, remat policy that saves matmul "
+              "outputs instead of recomputing them",
+    "collective": "cut ICI bytes: bf16 (not f32) TP all-reduces, remat "
+                  "policy that saves collective outputs, StruM-compressed "
+                  "FSDP gathers, gradient compression on the DP axis",
+}
+
+
+def load(path=RESULTS):
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt_table(rows, mesh="16x16"):
+    out = []
+    hdr = (f"{'arch':26s}{'shape':13s}{'mesh':9s}{'t_comp(s)':>10s}"
+           f"{'t_mem(s)':>10s}{'t_coll(s)':>10s} {'bound':11s}"
+           f"{'model_TF/dev':>13s}{'useful':>8s}{'roofline%':>10s}")
+    out.append(hdr)
+    out.append("-" * len(hdr))
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] != "OK":
+            out.append(f"{r['arch']:26s}{r['shape']:13s}{r['mesh']:9s}"
+                       f"{r['status']}")
+            continue
+        ro = r["roofline"]
+        dom = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        frac = ro["compute_s"] / dom if dom > 0 else 0.0
+        out.append(
+            f"{r['arch']:26s}{r['shape']:13s}{r['mesh']:9s}"
+            f"{ro['compute_s']:10.3f}{ro['memory_s']:10.3f}"
+            f"{ro['collective_s']:10.3f} {ro['bottleneck']:11s}"
+            f"{r['model_flops_per_dev']/1e12:13.2f}"
+            f"{r.get('useful_flops_ratio', 0):8.2f}{100*frac:9.1f}%")
+    return "\n".join(out)
+
+
+def pick_hillclimb_cells(rows):
+    """worst roofline fraction / most collective-bound / most
+    paper-representative (decode = weight-bandwidth-bound serving)."""
+    ok = [r for r in rows if r["status"] == "OK" and r["mesh"] == "16x16"]
+
+    def frac(r):
+        ro = r["roofline"]
+        dom = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        return ro["compute_s"] / dom if dom else 0.0
+
+    trains = [r for r in ok if r["kind"] == "train"]
+    worst = min(trains, key=frac)
+    coll = max(ok, key=lambda r: (r["roofline"]["collective_s"]
+                                  / max(r["roofline"]["compute_s"], 1e-9)
+                                  if r["kind"] != "decode" else 0))
+    decodes = [r for r in ok if r["kind"] == "decode" and r["shape"] == "decode_32k"]
+    paper = max(decodes, key=lambda r: r["roofline"]["memory_s"]
+                + r["roofline"]["collective_s"])
+    return worst, coll, paper
+
+
+def main():
+    rows = load()
+    print(fmt_table(rows, "16x16"))
+    print()
+    print(fmt_table(rows, "2x16x16"))
+    w, c, p = pick_hillclimb_cells(rows)
+    print("\n§Perf hillclimb cells:")
+    print(f"  worst-roofline-fraction : {w['arch']} x {w['shape']}")
+    print(f"  most-collective-bound   : {c['arch']} x {c['shape']}")
+    print(f"  paper-representative    : {p['arch']} x {p['shape']} "
+          f"(decode = the weight-bandwidth regime StruM targets)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

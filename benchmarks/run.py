@@ -1,0 +1,35 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (one per benchmark case).
+
+  table1   Table I   — PTQ quality across methods × p (tiny-LM analog)
+  fig10    Fig. 10   — DLIQ block/p/q sweep (SQNR)
+  fig11    Fig. 11   — MIP2Q block/p/L sweep (SQNR)
+  fig12    Fig. 12   — quality vs compression level r
+  fig13    Fig. 13   — PE/array/DPU area+power analytic model
+  kernel   (§V)      — packed-kernel byte footprint + projected decode time
+  roofline (§scale)  — printed separately via ``python -m benchmarks.roofline``
+                       (reads benchmarks/results/dryrun.json from the dry-run)
+
+The tiny-LM used by table1/fig10-12 is trained once and cached in-process.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (dynamic_p_sweep, fig10_dliq_sweep,
+                            fig11_mip2q_sweep, fig12_accuracy_vs_compression,
+                            fig13_efficiency, kernel_bench, table1_accuracy)
+    table1_accuracy.run()
+    fig10_dliq_sweep.run()
+    fig11_mip2q_sweep.run()
+    fig12_accuracy_vs_compression.run()
+    fig13_efficiency.run()
+    kernel_bench.run()
+    dynamic_p_sweep.run()   # beyond-paper: the paper's §VIII future work
+
+
+if __name__ == '__main__':
+    sys.exit(main())

@@ -1,0 +1,32 @@
+"""Lower + compile ONE (arch × shape × mesh) cell and print its roofline.
+
+This is the single-cell view of the launcher's multi-pod dry-run — useful
+for iterating on sharding changes without the full 80-cell sweep.
+
+Run:  PYTHONPATH=src python examples/dryrun_cell.py --arch qwen2_7b \
+          --shape decode_32k [--multi-pod]
+(first import forces 512 host devices; run in a fresh process)
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+
+from repro.launch.dryrun import lower_cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_7b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    rec = lower_cell(args.arch, args.shape, args.multi_pod)
+    rec.pop("traceback", None)
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

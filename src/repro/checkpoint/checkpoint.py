@@ -1,0 +1,150 @@
+"""Checkpointing: sharded save/restore with async writes, keep-k GC, and
+crash-consistent commits.
+
+Layout (one directory per step)::
+
+    <dir>/step_000123/
+        manifest.json        # tree structure, shapes, dtypes, step, extras
+        arrays.npz           # flattened leaves (this host's shard set)
+        COMMITTED            # written last — readers ignore dirs without it
+
+Design notes for the 1000-node regime (runtime/fault_tolerance.py):
+  * each host writes only the leaves (or leaf-shards) it owns; the manifest
+    records the host->leaf mapping.  In this container there is one host,
+    so the whole tree lands in one npz — the layout is unchanged.
+  * COMMITTED-last gives atomic visibility; a killed writer leaves a
+    garbage dir that GC removes.
+  * ``save_async`` runs serialization on a background thread so the train
+    loop only blocks on device->host transfer.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save", "save_async", "restore", "latest_step", "gc_keep"]
+
+_COMMIT = "COMMITTED"
+
+
+def _step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:09d}")
+
+
+def _flatten(tree: Any):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = np.asarray(leaf)
+        true_dtype = str(arr.dtype)
+        if arr.dtype == jnp.bfloat16:
+            # npz can't round-trip ml_dtypes; store raw bits, manifest keeps
+            # the true dtype for restore
+            arr = arr.view(np.uint16)
+        out[name] = (arr, true_dtype)
+    return out
+
+
+def save(directory: str, step: int, tree: Any, extras: Optional[dict] = None) -> str:
+    d = _step_dir(directory, step)
+    tmp = d + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{k: v[0] for k, v in leaves.items()})
+    manifest = {
+        "step": step,
+        "extras": extras or {},
+        "leaves": {k: {"shape": list(v[0].shape), "dtype": v[1]}
+                   for k, v in leaves.items()},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, _COMMIT), "w") as f:
+        f.write("ok")
+    if os.path.exists(d):
+        shutil.rmtree(d)
+    os.replace(tmp, d)
+    return d
+
+
+def save_async(directory: str, step: int, tree: Any,
+               extras: Optional[dict] = None) -> threading.Thread:
+    """Device->host copy happens now; disk write on a background thread."""
+    host_tree = jax.tree.map(np.asarray, tree)
+    t = threading.Thread(target=save, args=(directory, step, host_tree, extras),
+                         daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, _COMMIT)):
+                steps.append(int(name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(directory: str, template: Any, step: Optional[int] = None):
+    """Restore into ``template``'s tree structure (shapes/dtypes verified).
+
+    Returns (tree, step, extras).  Raises FileNotFoundError if nothing
+    committed exists — callers (runtime.fault_tolerance) treat that as a
+    cold start.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    d = _step_dir(directory, step)
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = data[name]
+        true_dtype = manifest["leaves"][name]["dtype"]
+        if true_dtype == "bfloat16" and arr.dtype == np.uint16:
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        want = tuple(getattr(leaf, "shape", arr.shape))
+        if tuple(arr.shape) != want:
+            raise ValueError(f"{name}: checkpoint {arr.shape} vs template {want}")
+        leaves.append(jnp.asarray(arr, dtype=getattr(leaf, "dtype", arr.dtype)))
+    tree = jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+    return tree, manifest["step"], manifest["extras"]
+
+
+def gc_keep(directory: str, keep: int = 3) -> None:
+    """Delete all but the newest ``keep`` committed checkpoints + any tmp."""
+    if not os.path.isdir(directory):
+        return
+    committed = []
+    for name in sorted(os.listdir(directory)):
+        full = os.path.join(directory, name)
+        if name.endswith(".tmp"):
+            shutil.rmtree(full, ignore_errors=True)
+        elif name.startswith("step_"):
+            if os.path.exists(os.path.join(full, _COMMIT)):
+                committed.append(full)
+            else:
+                shutil.rmtree(full, ignore_errors=True)
+    for full in committed[:-keep] if keep else committed:
+        shutil.rmtree(full, ignore_errors=True)

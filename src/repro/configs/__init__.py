@@ -1,0 +1,6 @@
+"""Architecture configs: one module per assigned arch (CONFIG + SMOKE)."""
+from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig, ShapeSpec,
+                                get_config, get_smoke_config, tiny_variant)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ModelConfig", "ShapeSpec", "get_config",
+           "get_smoke_config", "tiny_variant"]

@@ -1,0 +1,208 @@
+"""Model/run configuration system.
+
+``ModelConfig`` is the single source of truth a model is built from; each
+assigned architecture contributes one ``configs/<id>.py`` exporting CONFIG
+(the exact published shape) and SMOKE (a reduced same-family variant for
+CPU tests).  ``ShapeSpec`` describes the assigned input-shape cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.policy import StruMConfig
+
+__all__ = ["ModelConfig", "ShapeSpec", "SHAPES", "ARCH_IDS", "get_config",
+           "get_smoke_config", "tiny_variant"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    family: str = "dense"          # dense | moe | ssm | hybrid
+    modality: str = "text"         # text | audio | vlm  (non-text: stub frontend)
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    qkv_bias: bool = False
+    norm: str = "rms"              # rms | nonparam (OLMo layer norm w/o params)
+    gated_mlp: bool = True         # SwiGLU vs plain-GELU MLP
+    tie_embeddings: bool = False
+    rope_theta: float = 1e4
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1             # MoE FFN every k-th layer (Jamba: 2)
+    capacity_factor: float = 2.0
+    router_aux_weight: float = 0.01
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    attn_every: int = 0            # hybrid: one attention layer per period
+    # numerics / runtime
+    dtype: str = "bfloat16"
+    remat: bool = True
+    remat_policy: str = "full"  # full: recompute everything (min memory);
+    #                             dots: save matmul outputs (no recompute of
+    #                             TP-sharded contractions -> no re-played
+    #                             all-reduces in backward)  [§Perf knob]
+    accum_dtype: str = "float32"  # cross-shard partial-sum dtype; "bfloat16"
+    #                             halves TP all-reduce payloads [§Perf knob]
+    scan_layers: bool = True   # False: python-unrolled (cost measurement)
+    attn_heads_constraint: bool = False  # pin q/k/v head sharding through the
+    #                             chunk loop (kills SPMD involuntary remat
+    #                             reshards seen in prefill)  [§Perf knob]
+    ssm_split_proj: bool = False  # four separate in-projections (z/x/bc/dt)
+    #                             instead of one fused one whose split points
+    #                             straddle model shards -> SPMD resharding
+    #                             of (B,S,d_inner) activations  [§Perf knob]
+    attn_chunk: int = 1024         # flash-style chunk for train/prefill
+    strum: Optional[StruMConfig] = None   # runtime StruM config (serving)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to 256 so the vocab-sharded embedding/LM-head
+        divide any mesh axis (TPU lane alignment; MaxText does the same).
+        Labels always index the true vocab; extra columns are inert."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def ssm_heads(self) -> int:
+        return (self.ssm_expand * self.d_model) // self.ssm_head_dim
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k (SSM / hybrid-with-sparse-attention)."""
+        return self.family in ("ssm", "hybrid")
+
+    def layer_kind(self, i: int) -> str:
+        """'attn' | 'ssm' for layer i (hybrid interleave; Jamba 1:7)."""
+        if self.family == "ssm":
+            return "ssm"
+        if self.family == "hybrid" and self.attn_every > 0:
+            # one attention layer per period, at the last slot of each period
+            return "attn" if (i % self.attn_every) == self.attn_every - 1 else "ssm"
+        return "attn"
+
+    def layer_is_moe(self, i: int) -> bool:
+        return self.n_experts > 0 and (i % max(self.moe_every, 1)) == self.moe_every - 1
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + layers), for roofline 6ND."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        hd, nh, nkv = self.hd, self.n_heads, self.n_kv_heads
+        total = v * d * (1 if self.tie_embeddings else 2)
+        for i in range(self.n_layers):
+            kind = self.layer_kind(i)
+            if kind == "attn":
+                total += d * (nh * hd) + 2 * d * (nkv * hd) + (nh * hd) * d
+            else:  # ssm
+                di, ns, nh_s = self.d_inner, self.ssm_state, self.ssm_heads
+                total += d * (2 * di + 2 * ns + nh_s) + di * d  # in/out proj (+B,C,dt)
+            if self.layer_is_moe(i):
+                mult = 3 if self.gated_mlp else 2
+                total += self.n_experts * mult * d * f + d * self.n_experts
+            elif f > 0:
+                mult = 3 if self.gated_mlp else 2
+                total += mult * d * f
+        return total
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: top_k of n_experts)."""
+        if self.n_experts == 0:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        mult = 3 if self.gated_mlp else 2
+        dense = self.param_count()
+        for i in range(self.n_layers):
+            if self.layer_is_moe(i):
+                dense -= (self.n_experts - self.top_k) * mult * d * f
+        return dense
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS = (
+    "jamba_1_5_large_398b",
+    "qwen2_7b",
+    "olmo_1b",
+    "stablelm_12b",
+    "deepseek_67b",
+    "musicgen_medium",
+    "internvl2_26b",
+    "qwen3_moe_235b_a22b",
+    "moonshot_v1_16b_a3b",
+    "mamba2_780m",
+)
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch.replace('-', '_')}")
+    return mod.SMOKE
+
+
+def tiny_variant(cfg: ModelConfig, **over) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    period = cfg.attn_every if cfg.family == "hybrid" else 0
+    fields = dict(
+        n_layers=4 if cfg.family == "hybrid" else 2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads else 4,
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=256,
+        n_experts=min(cfg.n_experts, 4),
+        top_k=min(cfg.top_k, 2),
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        ssm_head_dim=16,
+        attn_every=2 if period else 0,
+        attn_chunk=32,
+        capacity_factor=4.0,  # tiny token counts need slack
+        name=cfg.name + "_smoke",
+    )
+    fields.update(over)
+    return dataclasses.replace(cfg, **fields)

@@ -1,0 +1,9 @@
+"""OLMo-1B — dense, non-parametric LayerNorm, tied embeddings.
+[arXiv:2402.00838; hf]."""
+from repro.configs.base import ModelConfig, tiny_variant
+
+CONFIG = ModelConfig(
+    name="olmo_1b", n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=8192, vocab_size=50304, norm="nonparam", tie_embeddings=True,
+)
+SMOKE = tiny_variant(CONFIG)

@@ -1,0 +1,9 @@
+"""Qwen2-7B — dense, GQA kv=4, QKV bias.  [arXiv:2407.10671; hf]."""
+from repro.configs.base import ModelConfig, tiny_variant
+
+CONFIG = ModelConfig(
+    name="qwen2_7b", n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4,
+    head_dim=128, d_ff=18944, vocab_size=152064, qkv_bias=True,
+    rope_theta=1e6,
+)
+SMOKE = tiny_variant(CONFIG)

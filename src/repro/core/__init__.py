@@ -1,0 +1,47 @@
+"""StruM core: structured mixed-precision quantization (the paper's contribution).
+
+Public API re-exports the pieces most callers need; see module docstrings in
+``blocking``, ``quantizers``, ``packing``, ``policy``, ``apply`` for the
+paper-section mapping.
+"""
+from repro.core.apply import (
+    fake_quantize_array,
+    fake_quantize_tree,
+    int8_baseline_array,
+    pack_array,
+    pack_tree,
+    tree_compression_report,
+    unpack_array,
+)
+from repro.core.metrics import cosine_sim, l2_error, rel_l2_error, sqnr_db
+from repro.core.packing import (
+    PackedStruM,
+    compression_ratio,
+    compression_ratio_sparsity,
+    decode_matrix,
+    dequantize,
+    pack,
+)
+from repro.core.policy import LayerPolicy, StruMConfig, default_policy, q_for_L
+from repro.core.quantizers import (
+    METHODS,
+    QuantizedBlocks,
+    dliq,
+    int8_symmetric,
+    mip2q,
+    n_low_for_p,
+    pow2_round,
+    quantize_blocks,
+    structured_sparsity,
+)
+
+__all__ = [
+    "fake_quantize_array", "fake_quantize_tree", "int8_baseline_array",
+    "pack_array", "pack_tree", "tree_compression_report", "unpack_array",
+    "cosine_sim", "l2_error", "rel_l2_error", "sqnr_db",
+    "PackedStruM", "compression_ratio", "compression_ratio_sparsity",
+    "decode_matrix", "dequantize", "pack",
+    "LayerPolicy", "StruMConfig", "default_policy", "q_for_L",
+    "METHODS", "QuantizedBlocks", "dliq", "int8_symmetric", "mip2q",
+    "n_low_for_p", "pow2_round", "quantize_blocks", "structured_sparsity",
+]

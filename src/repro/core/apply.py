@@ -1,0 +1,158 @@
+"""Apply StruM to whole parameter pytrees (post-training, no retraining).
+
+Two modes, both one-shot offline transforms (the paper's "one-time effort
+spent during the encoding process"):
+
+``fake_quantize_tree``   replaces each eligible weight with its dequantized
+                         StruM value (same shapes/dtypes) — used to evaluate
+                         application-level quality (Table-I analog) and to
+                         run StruM models through the unmodified forward.
+``pack_tree``            replaces each eligible weight with a
+                         :class:`~repro.core.packing.PackedStruM` — the
+                         compressed form consumed by the Pallas kernels and
+                         by the serving weight loader.
+
+Rank handling: StruM blocks run along the reduction dim, which by framework
+convention is axis ``-2`` of every kernel (``(..., in_features,
+out_features)``; expert stacks are ``(E, in, out)``).  Leading dims are
+folded into the output-channel dim — each (lead..., out) column keeps its
+own int8 scale, matching the paper's per-output-channel scheme.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocking, packing
+from repro.core.policy import LayerPolicy, StruMConfig, default_policy
+from repro.core.quantizers import int8_symmetric, n_low_for_p, quantize_blocks
+
+__all__ = [
+    "fake_quantize_array",
+    "pack_array",
+    "unpack_array",
+    "fake_quantize_tree",
+    "pack_tree",
+    "tree_compression_report",
+]
+
+
+def _to_2d(x: jnp.ndarray) -> tuple[jnp.ndarray, tuple]:
+    """(..., K, N) -> (K, prod(lead)*N) with per-column identity preserved."""
+    k = x.shape[-2]
+    x2 = jnp.moveaxis(x, -2, 0).reshape(k, -1)
+    return x2, x.shape
+
+
+def _from_2d(x2: jnp.ndarray, shape: tuple) -> jnp.ndarray:
+    k = shape[-2]
+    lead = shape[:-2] + (shape[-1],)
+    return jnp.moveaxis(x2.reshape((k,) + lead), 0, -2)
+
+
+def fake_quantize_array(x: jnp.ndarray, cfg: StruMConfig) -> jnp.ndarray:
+    """INT8 calibrate → block → set-quantize → dequantize.  Shape-preserving."""
+    x2, shape = _to_2d(x)
+    codes, scale = int8_symmetric(x2, axis=0)
+    blocks = blocking.to_blocks(codes, cfg.w)
+    qb = quantize_blocks(blocks, cfg.method, cfg.n_low, q=cfg.q, L=cfg.L)
+    vals = blocking.from_blocks(qb.values, x2.shape[0])
+    return _from_2d((vals.astype(jnp.float32) * scale).astype(x.dtype), shape)
+
+
+def int8_baseline_array(x: jnp.ndarray) -> jnp.ndarray:
+    """The paper's baseline: plain symmetric INT8 round-trip."""
+    x2, shape = _to_2d(x)
+    codes, scale = int8_symmetric(x2, axis=0)
+    return _from_2d((codes.astype(jnp.float32) * scale).astype(x.dtype), shape)
+
+
+def pack_array(x: jnp.ndarray, cfg: StruMConfig) -> packing.PackedStruM:
+    """Compress one weight tensor to the Fig.-5 encoded form."""
+    x2, shape = _to_2d(x)
+    codes, scale = int8_symmetric(x2, axis=0)
+    blocks = blocking.to_blocks(codes, cfg.w)
+    qb = quantize_blocks(blocks, cfg.method, cfg.n_low, q=cfg.q, L=cfg.L)
+    p = packing.pack(qb, method=cfg.method, scale=scale, k_dim=x2.shape[0],
+                     n_low=cfg.n_low, q=cfg.q, L=cfg.L)
+    return p._replace(scale=p.scale)  # (metadata: orig shape kept by caller)
+
+
+def unpack_array(p: packing.PackedStruM, shape: tuple, dtype=jnp.float32) -> jnp.ndarray:
+    """Decompress a packed tensor back to its original shape."""
+    return _from_2d(packing.dequantize(p, dtype), shape)
+
+
+def _named_leaves(tree: Any):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+        )
+        yield name, leaf
+
+
+def fake_quantize_tree(params: Any, policy: Optional[LayerPolicy] = None,
+                       baseline_int8: bool = True) -> Any:
+    """StruM-fake-quantize every eligible leaf; others get the plain INT8
+    round-trip when ``baseline_int8`` (so comparisons isolate StruM's delta
+    on top of the INT8 baseline, as in the paper) or pass through untouched.
+    """
+    policy = policy or default_policy()
+
+    def visit(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if not isinstance(leaf, jnp.ndarray) or leaf.dtype not in (
+            jnp.float32, jnp.bfloat16, jnp.float16,
+        ):
+            return leaf
+        cfg = policy.resolve(name, leaf.shape)
+        if cfg is None:
+            return int8_baseline_array(leaf) if (
+                baseline_int8 and leaf.ndim >= 2 and min(leaf.shape[-2:]) >= 2
+                and "embed" not in name.lower()
+            ) else leaf
+        return fake_quantize_array(leaf, cfg)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def pack_tree(params: Any, policy: Optional[LayerPolicy] = None) -> dict:
+    """Compress a pytree: {name: (PackedStruM, orig_shape)} for eligible
+    leaves, {name: raw array} otherwise.  Flat dict keyed by path names —
+    the serving loader's manifest format."""
+    policy = policy or default_policy()
+    out = {}
+    for name, leaf in _named_leaves(params):
+        cfg = policy.resolve(name, getattr(leaf, "shape", ()))
+        if cfg is None or not hasattr(leaf, "ndim"):
+            out[name] = leaf
+        else:
+            out[name] = (pack_array(leaf, cfg), tuple(leaf.shape))
+    return out
+
+
+def tree_compression_report(params: Any, policy: Optional[LayerPolicy] = None) -> dict:
+    """Bytes before/after + realized ratio per tensor and total (Eq. 1/2)."""
+    policy = policy or default_policy()
+    rows, tot_in, tot_out = [], 0, 0
+    for name, leaf in _named_leaves(params):
+        if not hasattr(leaf, "size"):
+            continue
+        int8_bytes = int(leaf.size)  # vs the INT8 baseline, as in the paper
+        cfg = policy.resolve(name, leaf.shape)
+        if cfg is None:
+            comp = int8_bytes
+            ratio = 1.0
+        else:
+            comp = int(round(int8_bytes * cfg.compression_ratio))
+            ratio = cfg.compression_ratio
+        rows.append({"name": name, "int8_bytes": int8_bytes,
+                     "strum_bytes": comp, "ratio": ratio})
+        tot_in += int8_bytes
+        tot_out += comp
+    return {"tensors": rows, "total_int8_bytes": tot_in,
+            "total_strum_bytes": tot_out,
+            "total_ratio": tot_out / max(tot_in, 1)}

@@ -1,0 +1,81 @@
+"""Hardware-aware block division (paper §IV-B).
+
+StruM partitions weights depth-wise — along the *reduction* (input-channel)
+dimension — into ``[l, w]`` blocks, padding the last block with zeros.  The
+paper uses ``[1, 16]`` because 16 input channels is FlexNN's minimum compute
+granularity; on TPU we keep ``w`` a divisor of the 128-lane register tile so
+packed blocks stay DMA-aligned.
+
+All functions operate on 2-D weight matrices ``(K, N)`` where ``K`` is the
+reduction dim (rows are blocked) and ``N`` is the output-channel dim.  Higher
+rank tensors (conv filters, per-expert stacks) are reshaped to 2-D by the
+caller (see :mod:`repro.core.apply`).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "pad_to_block",
+    "unpad_from_block",
+    "to_blocks",
+    "from_blocks",
+    "num_blocks",
+]
+
+
+def num_blocks(k: int, w: int) -> int:
+    """Number of ``[1, w]`` blocks covering a reduction dim of size ``k``."""
+    return -(-k // w)
+
+
+def pad_to_block(x: jnp.ndarray, w: int) -> jnp.ndarray:
+    """Zero-pad the reduction (first) dim of ``(K, N)`` to a multiple of ``w``.
+
+    Paper: "the last block padded with zeros if necessary".
+    """
+    k = x.shape[0]
+    pad = num_blocks(k, w) * w - k
+    if pad == 0:
+        return x
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths)
+
+
+def unpad_from_block(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Inverse of :func:`pad_to_block`."""
+    return x[:k]
+
+
+def to_blocks(x: jnp.ndarray, w: int) -> jnp.ndarray:
+    """``(K, N) -> (nb, w, N)`` — one ``[1, w]`` block per (nb, :, n) slice.
+
+    The block runs along the reduction dim, matching the depth-first weight
+    layout of §IV-B (a dot-product unit consumes ``w`` consecutive reduction
+    elements of one output channel per cycle).
+    """
+    x = pad_to_block(x, w)
+    kp, n = x.shape[0], x.shape[1:]
+    return x.reshape((kp // w, w) + n)
+
+
+def from_blocks(blocks: jnp.ndarray, k: int) -> jnp.ndarray:
+    """``(nb, w, N) -> (K, N)`` inverse of :func:`to_blocks`."""
+    nb, w = blocks.shape[:2]
+    x = blocks.reshape((nb * w,) + blocks.shape[2:])
+    return unpad_from_block(x, k)
+
+
+def block_shape_ok(w: int) -> bool:
+    """TPU alignment guard: w must divide 128 so packed tiles stay aligned."""
+    return w > 0 and 128 % w == 0
+
+
+def np_to_blocks(x: np.ndarray, w: int) -> np.ndarray:
+    """NumPy twin of :func:`to_blocks` for offline encoders."""
+    k = x.shape[0]
+    pad = num_blocks(k, w) * w - k
+    if pad:
+        x = np.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1))
+    return x.reshape((x.shape[0] // w, w) + x.shape[1:])

@@ -1,0 +1,31 @@
+"""Quantization quality + efficiency metrics used across benchmarks."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["l2_error", "rel_l2_error", "sqnr_db", "cosine_sim"]
+
+
+def l2_error(x: jnp.ndarray, xq: jnp.ndarray) -> jnp.ndarray:
+    """The paper's objective: ‖x − x_q‖₂ (per tensor)."""
+    return jnp.linalg.norm((x - xq).astype(jnp.float32).ravel())
+
+
+def rel_l2_error(x: jnp.ndarray, xq: jnp.ndarray) -> jnp.ndarray:
+    denom = jnp.maximum(jnp.linalg.norm(x.astype(jnp.float32).ravel()), 1e-12)
+    return l2_error(x, xq) / denom
+
+
+def sqnr_db(x: jnp.ndarray, xq: jnp.ndarray) -> jnp.ndarray:
+    """Signal-to-quantization-noise ratio in dB (higher = better)."""
+    sig = jnp.sum(jnp.square(x.astype(jnp.float32)))
+    noise = jnp.maximum(jnp.sum(jnp.square((x - xq).astype(jnp.float32))), 1e-20)
+    return 10.0 * jnp.log10(jnp.maximum(sig, 1e-20) / noise)
+
+
+def cosine_sim(x: jnp.ndarray, xq: jnp.ndarray) -> jnp.ndarray:
+    a = x.astype(jnp.float32).ravel()
+    b = xq.astype(jnp.float32).ravel()
+    na = jnp.maximum(jnp.linalg.norm(a), 1e-12)
+    nb = jnp.maximum(jnp.linalg.norm(b), 1e-12)
+    return jnp.dot(a, b) / (na * nb)

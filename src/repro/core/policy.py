@@ -1,0 +1,95 @@
+"""Per-layer StruM policy (paper §VI + §VII assumptions).
+
+The paper applies StruM to every conv/matmul layer of an already-INT8 model,
+with the standard exclusions its INT8 baseline (Graffitist) uses — first and
+last layers stay high precision.  For our LM substrate that means: embedding
+tables and the LM head are excluded; 1-D params (norm scales, biases) are
+never quantized; everything else ("kernel"-like 2-D-contractible weights)
+gets the block/set treatment.
+
+``StruMConfig`` carries the paper's parameters:
+  method ∈ {sparsity, dliq, mip2q},  block [l, w] = [1, w],  p,  q,  L.
+The dynamically-configurable-PE story (paper Fig. 9) maps to per-layer
+overrides: a regex → config table, resolved at encode time ("programmed via
+the compiler before each layer execution").
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+from repro.core.quantizers import METHODS, n_low_for_p
+
+__all__ = ["StruMConfig", "LayerPolicy", "default_policy", "q_for_L"]
+
+
+def q_for_L(L: int) -> int:
+    """Paper: q = ceil(log2(L+1)) + 1 (sign bit + shift field)."""
+    return int(math.ceil(math.log2(L + 1))) + 1 if L > 0 else 1
+
+
+@dataclasses.dataclass(frozen=True)
+class StruMConfig:
+    """One StruM configuration (paper defaults: [1,16], p=0.5, q=4 / L=5)."""
+
+    method: str = "mip2q"
+    w: int = 16                     # block width ([l, w] with l = 1)
+    p: float = 0.5                  # fraction of low-precision values
+    q: int = 4                      # DLIQ payload bits
+    L: int = 5                      # MIP2Q max shift (q derived when mip2q)
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(f"method {self.method!r} not in {METHODS}")
+        if self.method == "mip2q":
+            object.__setattr__(self, "q", q_for_L(self.L))
+        n_low_for_p(self.p, self.w)  # validates p
+
+    @property
+    def n_low(self) -> int:
+        return n_low_for_p(self.p, self.w)
+
+    @property
+    def bits_per_element(self) -> float:
+        if self.method == "sparsity":
+            return 9 - 8 * self.p          # Eq. 2 numerator
+        return self.p * (self.q - 8) + 9   # Eq. 1 numerator
+
+    @property
+    def compression_ratio(self) -> float:
+        return self.bits_per_element / 8.0
+
+
+#: params whose *name* matches any of these regexes are never StruM-quantized
+DEFAULT_EXCLUDE = (
+    r"embed", r"embedding", r"lm_head", r"logits", r"norm", r"scale",
+    r"bias", r"/b$", r"ln_", r"layernorm", r"a_log", r"dt_bias", r"conv",
+    r"router", r"gate_w",  # MoE router: tiny + accuracy-critical
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPolicy:
+    """Resolves which StruMConfig (if any) applies to a named parameter."""
+
+    default: Optional[StruMConfig] = StruMConfig()
+    exclude: tuple = DEFAULT_EXCLUDE
+    overrides: tuple = ()  # ((regex, StruMConfig | None), ...) first match wins
+
+    def resolve(self, name: str, shape: tuple) -> Optional[StruMConfig]:
+        lname = name.lower()
+        for pat, cfg in self.overrides:
+            if re.search(pat, lname):
+                return cfg
+        for pat in self.exclude:
+            if re.search(pat, lname):
+                return None
+        if len(shape) < 2 or min(shape[-2:]) < 2:
+            return None  # nothing 2-D-contractible to block
+        return self.default
+
+
+def default_policy(cfg: Optional[StruMConfig] = None) -> LayerPolicy:
+    return LayerPolicy(default=cfg if cfg is not None else StruMConfig())

@@ -1,0 +1,224 @@
+"""Set-quantization strategies (paper §IV-C).
+
+All three strategies operate *inside* ``[1, w]`` blocks of weights that were
+already INT8-quantized (symmetric, per-output-channel) — the paper's setting:
+"let's assume the initial weights are quantized to 8-bit (INT8) values".
+
+Strategies
+----------
+``structured_sparsity``   NVIDIA-style: the ``n_low`` smallest-|magnitude|
+                          values in every block become 0.
+``dliq``                  Dual-Level Integer Quantization: the ``n_low``
+                          smallest-|magnitude| values are re-quantized to
+                          ``q`` bits.  Hardware-faithful form: an INT4×INT8
+                          multiplier consumes the top ``q`` bits of the INT8
+                          value, i.e. the code is ``round(v / 2**(8-q))``
+                          (clipped to the signed ``q``-bit range) and dequant
+                          is an arithmetic shift-left by ``8-q``.
+``mip2q``                 Mixed Integer + Power-of-2: ``n_low`` values per
+                          block become ``±2**k`` with ``k ∈ [0, L]``; the
+                          mask is the *exact* minimizer of the paper's
+                          ‖x − (x⊙m + x̂⊙m̄)‖₂ objective.
+
+Exactness of the MIP2Q mask (replaces the paper's exhaustive search)
+--------------------------------------------------------------------
+The objective decomposes element-wise:
+
+    ‖x − (x⊙m + x̂⊙m̄)‖₂² = Σ_{i: m_i = 0} (x_i − x̂_i)²
+
+so the optimal low set (m̄) of fixed size ``n_low`` is simply the ``n_low``
+elements with the smallest pow2-rounding error.  We compute that with a
+vectorized rank — O(w log w) per block instead of C(w, n_low) candidates —
+and property-test equivalence against brute force (tests/test_core_quant.py).
+
+Zero handling: the (sign, shift) payload has no zero code, so an int8 value
+of 0 pow2-rounds to +1 (error = 1 LSB of the int8 grid).  This costs the
+objective 1 per zero element and such elements are naturally absorbed into
+the low set; structured sparsity is unaffected (it *produces* zeros, which
+need no payload at all — paper Eq. 2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantizedBlocks",
+    "int8_symmetric",
+    "dequantize_int8",
+    "rank_in_block",
+    "magnitude_low_mask",
+    "pow2_round",
+    "pow2_error_low_mask",
+    "structured_sparsity",
+    "dliq",
+    "mip2q",
+    "quantize_blocks",
+    "n_low_for_p",
+    "METHODS",
+]
+
+METHODS = ("sparsity", "dliq", "mip2q")
+
+
+class QuantizedBlocks(NamedTuple):
+    """Result of set-quantizing blocked int8 codes ``(nb, w, N)``.
+
+    values    int32 — dequantized values on the int8 grid (what the MACs see)
+    low_mask  bool  — True where the element is in the *low-precision* set
+                      (paper's mask-header bit is the complement: 1 = high)
+    low_code  int32 — payload code for low elements (DLIQ: signed q-bit
+                      mantissa; MIP2Q: ``sign * (k + 1)`` so |code|-1 = shift
+                      and sign(code) = sign of the value; 0 where high)
+    """
+
+    values: jnp.ndarray
+    low_mask: jnp.ndarray
+    low_code: jnp.ndarray
+
+
+def n_low_for_p(p: float, w: int) -> int:
+    """Fixed per-block low count for precision ratio ``p`` (paper: p·w)."""
+    n = int(round(p * w))
+    if not 0 <= n <= w:
+        raise ValueError(f"p={p} out of range for block width {w}")
+    return n
+
+
+# ---------------------------------------------------------------------------
+# First-level INT8 quantization (the paper's Graffitist-calibrated baseline)
+# ---------------------------------------------------------------------------
+
+def int8_symmetric(w: jnp.ndarray, axis: int = 0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-output-channel symmetric INT8 quantization.
+
+    ``axis`` is the reduction axis (scales are per the *other* axes).
+    Returns ``(codes int8 in [-127,127], scale f32)`` with
+    ``w ≈ codes * scale``.
+    """
+    amax = jnp.max(jnp.abs(w), axis=axis, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0).astype(jnp.float32)
+    codes = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def dequantize_int8(codes: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return codes.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Block-local ranking / masks
+# ---------------------------------------------------------------------------
+
+def rank_in_block(key: jnp.ndarray) -> jnp.ndarray:
+    """Dense rank (0 = smallest key) along the block axis (axis=1).
+
+    Deterministic under ties (stable argsort), which matters for bit-exact
+    encode/decode round trips across hosts.
+    """
+    order = jnp.argsort(key, axis=1, stable=True)
+    return jnp.argsort(order, axis=1, stable=True)
+
+
+def magnitude_low_mask(codes: jnp.ndarray, n_low: int) -> jnp.ndarray:
+    """Paper's split for sparsity/DLIQ: lowest-|magnitude| n_low per block."""
+    rank = rank_in_block(jnp.abs(codes.astype(jnp.int32)))
+    return rank < n_low
+
+
+def pow2_round(v: jnp.ndarray, L: int) -> jnp.ndarray:
+    """Nearest signed power of two with shift clipped to ``[0, L]``.
+
+    Linear-domain nearest (minimizes the paper's L2 objective): the decision
+    boundary between 2**k and 2**(k+1) is 1.5·2**k.  v = 0 maps to +1 (no
+    zero code in the sign+shift payload — see module docstring).
+    """
+    a = jnp.abs(v.astype(jnp.float32))
+    sgn = jnp.where(v < 0, -1, 1).astype(jnp.int32)
+    # floor(log2 a) for a >= 1; values in [0, 1) get k = 0.
+    kf = jnp.floor(jnp.log2(jnp.maximum(a, 1.0)))
+    lo = jnp.exp2(kf)
+    k = jnp.where(a - lo > 2.0 * lo - a, kf + 1.0, kf)
+    k = jnp.clip(k, 0.0, float(L))
+    mag = jnp.exp2(k).astype(jnp.int32)
+    return sgn * mag
+
+
+def pow2_shift(v: jnp.ndarray, L: int) -> jnp.ndarray:
+    """Shift amount ``k`` such that pow2_round(v) = sign(v)·2**k."""
+    p2 = jnp.abs(pow2_round(v, L))
+    return jnp.round(jnp.log2(p2.astype(jnp.float32))).astype(jnp.int32)
+
+
+def pow2_error_low_mask(codes: jnp.ndarray, n_low: int, L: int) -> jnp.ndarray:
+    """Exact argmin of the MIP2Q objective: low set = smallest pow2 error.
+
+    Equivalent to the paper's exhaustive search over all C(w, n_low) masks
+    because the L2 objective decomposes element-wise (module docstring).
+    """
+    err = jnp.abs(codes.astype(jnp.int32) - pow2_round(codes, L))
+    # tie-break by |magnitude| (prefer demoting small values) then position;
+    # err <= 255 and |code| <= 127 so the combined key fits int32 easily
+    key = err * 256 + jnp.abs(codes.astype(jnp.int32))
+    rank = rank_in_block(key)
+    return rank < n_low
+
+
+# ---------------------------------------------------------------------------
+# The three set-quantization strategies
+# ---------------------------------------------------------------------------
+
+def structured_sparsity(codes: jnp.ndarray, n_low: int) -> QuantizedBlocks:
+    """NVIDIA-style: n_low smallest-|magnitude| per block → 0 (paper Fig. 1)."""
+    c = codes.astype(jnp.int32)
+    low = magnitude_low_mask(codes, n_low)
+    values = jnp.where(low, 0, c)
+    return QuantizedBlocks(values, low, jnp.zeros_like(c))
+
+
+def dliq(codes: jnp.ndarray, n_low: int, q: int = 4) -> QuantizedBlocks:
+    """Dual-Level Integer Quantization (paper §IV-C.1).
+
+    Low set: round the int8 code to the nearest multiple of ``2**(8-q)``;
+    the stored payload is the signed ``q``-bit mantissa (INT4×INT8 multiplier
+    + shift-left-(8-q) accumulate in hardware).
+    """
+    if not 1 <= q <= 8:
+        raise ValueError(f"q={q} must be in [1, 8]")
+    c = codes.astype(jnp.int32)
+    low = magnitude_low_mask(codes, n_low)
+    step = 1 << (8 - q)
+    qmax = (1 << (q - 1)) - 1
+    mant = jnp.clip(jnp.round(c.astype(jnp.float32) / step), -qmax, qmax).astype(jnp.int32)
+    values = jnp.where(low, mant * step, c)
+    return QuantizedBlocks(values, low, jnp.where(low, mant, 0))
+
+
+def mip2q(codes: jnp.ndarray, n_low: int, L: int = 7) -> QuantizedBlocks:
+    """Mixed Integer + Power-of-2 Quantization (paper §IV-C.2).
+
+    Low set: exact L2-optimal selection; values become ±2**k, k ∈ [0, L];
+    payload code = sign·(k+1) (|code|−1 = barrel-shift amount).
+    """
+    if L < 0:
+        raise ValueError("L must be >= 0")
+    c = codes.astype(jnp.int32)
+    low = pow2_error_low_mask(codes, n_low, L)
+    p2 = pow2_round(codes, L)
+    k = pow2_shift(codes, L)
+    sgn = jnp.where(p2 < 0, -1, 1)
+    values = jnp.where(low, p2, c)
+    return QuantizedBlocks(values, low, jnp.where(low, sgn * (k + 1), 0))
+
+
+def quantize_blocks(codes: jnp.ndarray, method: str, n_low: int, *, q: int = 4,
+                    L: int = 7) -> QuantizedBlocks:
+    """Dispatch on method name ('sparsity' | 'dliq' | 'mip2q')."""
+    if method == "sparsity":
+        return structured_sparsity(codes, n_low)
+    if method == "dliq":
+        return dliq(codes, n_low, q)
+    if method == "mip2q":
+        return mip2q(codes, n_low, L)
+    raise ValueError(f"unknown StruM method {method!r}; want one of {METHODS}")

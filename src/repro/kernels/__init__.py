@@ -1,0 +1,13 @@
+"""StruM Pallas TPU kernels (validated in interpret mode on CPU).
+
+strum_matmul — tiled matmul streaming compressed StruM weights, in-VMEM
+decode (the paper's accelerated PE, §IV-D.2, mapped to the TPU memory
+hierarchy).  ``ops`` holds the jit'd wrappers, ``ref`` the pure-jnp oracles.
+"""
+from repro.kernels.ops import default_interpret, strum_gemv, strum_matmul
+from repro.kernels.ref import strum_dequant_ref, strum_matmul_ref
+
+__all__ = [
+    "strum_matmul", "strum_gemv", "default_interpret",
+    "strum_matmul_ref", "strum_dequant_ref",
+]

@@ -1,0 +1,99 @@
+"""jit'd public wrappers around the StruM Pallas kernels.
+
+Handles tile-size selection, padding to tile multiples, payload-axis
+minimum sizes, and output dtype — callers just hand in activations and a
+:class:`~repro.core.packing.PackedStruM`.
+
+``interpret`` defaults to True off-TPU (the container validates kernels in
+interpret mode); on a real TPU backend the same code path lowers through
+Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packing import PackedStruM
+from repro.kernels.strum_matmul import strum_matmul_pallas
+
+__all__ = ["strum_matmul", "strum_gemv", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(a: jnp.ndarray, axis: int, to: int) -> jnp.ndarray:
+    pad = (-a.shape[axis]) % to
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths)
+
+
+def _pick_block(dim: int, pref: int, align: int) -> int:
+    """Largest tile <= pref that is a multiple of ``align``."""
+    if dim <= align:
+        return align
+    return min(pref, (dim // align) * align if dim % align else min(pref, dim))
+
+
+def strum_matmul(x: jnp.ndarray, packed: PackedStruM, *,
+                 out_dtype=None, block_m: int = 128, block_n: int = 256,
+                 block_k: int = 256, interpret: bool | None = None) -> jnp.ndarray:
+    """y = x @ dequant(packed), streaming compressed weights.
+
+    x: (..., K) — leading dims are flattened into M.
+    Returns (..., N) in ``out_dtype`` (default: x.dtype).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    k_in = x.shape[-1]
+    if k_in != packed.k_dim:
+        raise ValueError(f"x K={k_in} vs packed k_dim={packed.k_dim}")
+    x2 = x.reshape(-1, k_in)
+    m, n = x2.shape[0], packed.n_out
+    w = packed.w
+
+    k_pad = packed.mask.shape[0] * w               # padded K (block multiple)
+    x2 = _pad_axis(x2, 1, k_pad) if k_pad != k_in else x2
+
+    bm = max(8, min(block_m, m))
+    bn = min(block_n, max(128, n))
+    bk = min(block_k, k_pad)
+    bk = (bk // w) * w or w
+
+    x2 = _pad_axis(_pad_axis(x2, 0, bm), 1, bk)
+    def _min1(a):  # payload axes must be >= 1 for BlockSpec; zeros are inert
+        if a.shape[1] == 0:
+            return jnp.zeros((a.shape[0], 1, a.shape[2]), a.dtype)
+        return a
+
+    mask = _pad_axis(_pad_axis(packed.mask, 0, bk // w), 2, bn)
+    hi = _pad_axis(_pad_axis(_min1(packed.hi), 0, bk // w), 2, bn)
+    lo = _pad_axis(_pad_axis(_min1(packed.lo), 0, bk // w), 2, bn)
+    # zero scale in padded columns kills any junk the decoder would produce
+    scale = _pad_axis(packed.scale, 1, bn)
+
+    y = strum_matmul_pallas(
+        x2, mask, hi, lo, scale,
+        w=w, n_low=packed.n_low, q=packed.q, method=packed.method,
+        block_m=bm, block_n=bn, block_k=bk, interpret=interpret,
+    )
+    return y[:m, :n].reshape(lead + (n,)).astype(out_dtype)
+
+
+def strum_gemv(x: jnp.ndarray, packed: PackedStruM, *, out_dtype=None,
+               interpret: bool | None = None) -> jnp.ndarray:
+    """Decode-path matvec: tiny M (a few tokens), full weight stream.
+
+    This is where StruM's bandwidth ratio converts 1:1 into decode latency —
+    the op is HBM-bound, so bytes saved = time saved (DESIGN.md §2).
+    """
+    return strum_matmul(x, packed, out_dtype=out_dtype, block_m=8,
+                        block_n=512, block_k=512, interpret=interpret)

@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the StruM kernels.
+
+These are the ground truth the Pallas kernels are allclose-tested against
+(tests/test_kernels.py sweeps shapes/dtypes in interpret mode).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import packing
+
+__all__ = ["strum_matmul_ref", "strum_dequant_ref"]
+
+
+def strum_dequant_ref(packed: packing.PackedStruM, dtype=jnp.float32) -> jnp.ndarray:
+    """(K, N) dequantized weights straight from the compressed form."""
+    return packing.dequantize(packed, dtype)
+
+
+def strum_matmul_ref(x: jnp.ndarray, packed: packing.PackedStruM,
+                     out_dtype=jnp.float32) -> jnp.ndarray:
+    """y = x @ dequant(W): (M, K) @ (K, N) with f32 accumulation."""
+    w = strum_dequant_ref(packed, jnp.float32)
+    y = jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+    return y.astype(out_dtype)

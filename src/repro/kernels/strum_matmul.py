@@ -1,0 +1,163 @@
+"""Pallas TPU kernel: tiled matmul over *compressed* StruM weights.
+
+This is the TPU-native realization of the paper's accelerated PE (§IV-D.2,
+Fig. 6).  On FlexNN the mask header routes values to INT8 multipliers vs
+barrel shifters; on TPU the win is the **memory roofline**: the kernel
+streams the packed form (mask header + mixed payload — r× fewer HBM bytes,
+paper Eq. 1/2) into VMEM and dequantizes there, so the MXU sees ordinary
+bf16/f32 tiles while HBM traffic shrinks by exactly the paper's ratio.
+
+Because StruM fixes ``n_low`` per ``[1, w]`` block, every compressed tile has
+a static shape — BlockSpecs address the payload with plain block indices, no
+indirection tables (the paper's "slowest-PE balance" property, here:
+uniform DMA descriptors).
+
+Decode strategy inside the kernel (vectorized, gather-free):
+  1. unpack mask bits with shift/and on a broadcasted iota,
+  2. per-position rank among its set via ``lax.cumsum`` along the block dim,
+  3. payload → position scatter as a one-hot ⋅ payload contraction
+     (w ≤ 32, n_high ≤ 16 → tiny VPU-friendly einsum, no dynamic gather),
+  4. low codes decoded per method:  DLIQ  mantissa << (8-q)  (the INT4×INT8
+     multiplier path),  MIP2Q  ±2**k  (the barrel-shifter path — an exact
+     shift, computed as an exp2 on the shift field),
+  5. f32 (values · per-channel scale) tile → MXU dot, f32 accumulation.
+
+Validated in ``interpret=True`` mode on CPU against ``ref.strum_matmul_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+__all__ = ["strum_matmul_pallas"]
+
+
+def _unpack_mask(mask_u8: jnp.ndarray, w: int) -> jnp.ndarray:
+    """(bnb, w//8, bn) uint8 -> (bnb, w, bn) bool (LSB-first), iota-based."""
+    bnb, mb, bn = mask_u8.shape
+    bits_shape = (bnb, mb, 8, bn)
+    bit_idx = lax.broadcasted_iota(jnp.uint8, bits_shape, 2)
+    bits = (mask_u8[:, :, None, :] >> bit_idx) & jnp.uint8(1)
+    return bits.reshape(bnb, mb * 8, bn).astype(jnp.bool_)[:, :w, :]
+
+
+def _unpack_fields(lo_u8: jnp.ndarray, n_low: int, q: int) -> jnp.ndarray:
+    """(bnb, ceil(n_low*q/8), bn) uint8 -> (bnb, n_low, bn) int32 codes."""
+    bnb, lb, bn = lo_u8.shape
+    bit_idx = lax.broadcasted_iota(jnp.uint8, (bnb, lb, 8, bn), 2)
+    bits = ((lo_u8[:, :, None, :] >> bit_idx) & jnp.uint8(1)).reshape(bnb, lb * 8, bn)
+    bits = bits[:, : n_low * q, :].reshape(bnb, n_low, q, bn).astype(jnp.int32)
+    weights = lax.broadcasted_iota(jnp.int32, (bnb, n_low, q, bn), 2)
+    return jnp.sum(bits << weights, axis=2)
+
+
+def _scatter_onehot(payload: jnp.ndarray, member: jnp.ndarray) -> jnp.ndarray:
+    """Place payload[r] at the r-th True position of ``member`` along axis 1.
+
+    payload: (bnb, count, bn) f32/int32;  member: (bnb, w, bn) bool.
+    Returns (bnb, w, bn) with zeros off-set.  One-hot contraction — no
+    dynamic gather, Mosaic-friendly.
+    """
+    bnb, count, bn = payload.shape
+    w = member.shape[1]
+    if count == 0:
+        return jnp.zeros((bnb, w, bn), payload.dtype)
+    m32 = member.astype(jnp.int32)
+    rank = lax.cumsum(m32, axis=1) - m32                    # (bnb, w, bn)
+    r_idx = lax.broadcasted_iota(jnp.int32, (bnb, w, count, bn), 2)
+    onehot = (rank[:, :, None, :] == r_idx) & member[:, :, None, :]
+    return jnp.sum(
+        onehot.astype(payload.dtype) * payload[:, None, :, :], axis=2
+    )
+
+
+def _decode_low(codes: jnp.ndarray, method: str, q: int) -> jnp.ndarray:
+    """q-bit payload fields -> f32 values on the int8 grid."""
+    if method == "sparsity":
+        return jnp.zeros_like(codes, jnp.float32)
+    if method == "dliq":
+        sign_bit = 1 << (q - 1)
+        mant = (codes ^ sign_bit) - sign_bit        # sign-extend q bits
+        return (mant << (8 - q)).astype(jnp.float32)
+    if method == "mip2q":
+        sgn = 1.0 - 2.0 * (codes >> (q - 1)).astype(jnp.float32)
+        k = (codes & ((1 << (q - 1)) - 1)).astype(jnp.float32)
+        return sgn * jnp.exp2(k)                    # the barrel shift ±2**k
+    raise ValueError(method)
+
+
+def _decode_tile(mask_u8, hi_i8, lo_u8, scale_f32, *, w, n_low, q, method):
+    """Decompress one (bk, bn) weight tile in VMEM; returns f32."""
+    high = _unpack_mask(mask_u8, w)                          # (bnb, w, bn)
+    hi_vals = _scatter_onehot(hi_i8.astype(jnp.float32), high)
+    if method == "sparsity" or n_low == 0:
+        vals = hi_vals
+    else:
+        codes = _unpack_fields(lo_u8, n_low, q)
+        lo_dec = _decode_low(codes, method, q)               # (bnb, n_low, bn)
+        lo_vals = _scatter_onehot(lo_dec, ~high)
+        vals = jnp.where(high, hi_vals, lo_vals)
+    bnb, _, bn = vals.shape
+    return vals.reshape(bnb * w, bn) * scale_f32             # (bk, bn) f32
+
+
+def _kernel(x_ref, mask_ref, hi_ref, lo_ref, scale_ref, o_ref, *,
+            w, n_low, q, method, k_steps):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    wv = _decode_tile(mask_ref[...], hi_ref[...], lo_ref[...], scale_ref[...],
+                      w=w, n_low=n_low, q=q, method=method)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x, wv, preferred_element_type=jnp.float32)
+
+
+def strum_matmul_pallas(x, mask, hi, lo, scale, *, w: int, n_low: int, q: int,
+                        method: str, block_m: int = 128, block_n: int = 128,
+                        block_k: int = 128, interpret: bool = True):
+    """y(M,N) = x(M,K) @ dequant(packed W).  All dims pre-padded to tiles.
+
+    Operands are the PackedStruM fields:
+      mask  (nb, w//8, N) uint8,  hi (nb, n_high, N) int8,
+      lo    (nb, lb, N)   uint8,  scale (1, N) f32.
+    """
+    m, k_dim = x.shape
+    nb = mask.shape[0]
+    n = mask.shape[2]
+    assert k_dim == nb * w, (k_dim, nb, w)
+    assert w % 8 == 0, "kernel path requires byte-aligned mask rows"
+    assert block_k % w == 0
+    assert m % block_m == 0 and n % block_n == 0 and k_dim % block_k == 0
+    bnb = block_k // w
+    grid = (m // block_m, n // block_n, k_dim // block_k)
+
+    kern = functools.partial(_kernel, w=w, n_low=n_low, q=q, method=method,
+                             k_steps=grid[2])
+    n_high = w - n_low
+    lb = lo.shape[1]
+    mb = w // 8
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bnb, mb, block_n), lambda i, j, kk: (kk, 0, j)),
+            pl.BlockSpec((bnb, max(n_high, 1), block_n), lambda i, j, kk: (kk, 0, j)),
+            pl.BlockSpec((bnb, max(lb, 1), block_n), lambda i, j, kk: (kk, 0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("parallel", "parallel", "arbitrary"))
+        ) if not interpret else None,
+    )(x, mask, hi, lo, scale)
+    return out

@@ -1,0 +1,276 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
+extract roofline terms.  THE FIRST TWO LINES force 512 host platform
+devices — they must run before any other import touches jax.
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_shardings, input_specs
+from repro.launch.steps import make_decode_step, make_prefill_step, make_train_step
+from repro.models.sharding import rules_for_mesh
+from repro.optim.adamw import AdamWConfig
+
+# --------------------------------------------------------------- roofline --
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (~3 links usable per axis hop)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\()?([a-z0-9]+)\[([0-9,]*)\][^=]*?"
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in partitioned HLO.
+
+    Bytes are per-device payload (the partitioned module is per-device);
+    ring-model link bytes ≈ payload for all-gather/reduce-scatter and
+    2×payload for all-reduce (RS+AG).
+    """
+    sums = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+            "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(sums, 0)
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if kind.endswith("-done"):
+            continue
+        nelem = 1
+        for d in dims.split(","):
+            if d:
+                nelem *= int(d)
+        b = nelem * _DTYPE_BYTES.get(dtype, 4)
+        sums[kind] += b
+        counts[kind] += 1
+    link_bytes = (2 * sums["all-reduce"] + sums["all-gather"]
+                  + sums["reduce-scatter"] + sums["all-to-all"]
+                  + sums["collective-permute"])
+    return {"per_kind_bytes": sums, "per_kind_count": counts,
+            "link_bytes": link_bytes}
+
+
+def roofline_terms(flops_per_dev, hbm_bytes_per_dev, link_bytes_per_dev):
+    t_c = flops_per_dev / PEAK_FLOPS
+    t_m = hbm_bytes_per_dev / HBM_BW
+    t_x = link_bytes_per_dev / ICI_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "bottleneck": dom}
+
+
+# ----------------------------------------------------------------- lower --
+
+def _lower_costs(cfg, shape, mesh, rules):
+    """flops/bytes/link_bytes per device for one lowered depth variant."""
+    specs = input_specs(cfg, shape)
+    shardings = input_shardings(cfg, shape, mesh, rules)
+    if shape.kind == "train":
+        step = make_train_step(cfg, AdamWConfig(), mesh=mesh, rules=rules)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, mesh=mesh, rules=rules)
+    else:
+        step = make_decode_step(cfg, mesh=mesh, rules=rules)
+    with mesh:
+        compiled = jax.jit(step, in_shardings=shardings).lower(*specs).compile()
+        cost = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            float(coll["link_bytes"]))
+
+
+def extrapolated_costs(cfg, shape, mesh, rules):
+    """XLA cost_analysis counts `scan` bodies ONCE regardless of trip count
+    (verified: EXPERIMENTS.md §Dry-run), so per-device costs are measured at
+    depth P and 2P (one and two scan groups) and extrapolated linearly to
+    the full depth — exact, since groups are structurally identical."""
+    import dataclasses as _dc
+    from repro.models.transformer import period as _period
+    p = _period(cfg)
+    c1 = _dc.replace(cfg, n_layers=p, scan_layers=False)
+    c2 = _dc.replace(cfg, n_layers=2 * p, scan_layers=False)
+    f1, b1, x1 = _lower_costs(c1, shape, mesh, rules)
+    f2, b2, x2 = _lower_costs(c2, shape, mesh, rules)
+    groups = cfg.n_layers // p
+    fl = f1 + (f2 - f1) * (groups - 1)
+    by = b1 + (b2 - b1) * (groups - 1)
+    lk = x1 + (x2 - x1) * (groups - 1)
+    return fl, by, lk
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: dict | None = None, variant: str = "baseline"):
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "SKIP(full-attn)",
+                "note": "quadratic attention at 512k context — see DESIGN.md §4"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules_for_mesh(mesh, shape.global_batch)
+    specs = input_specs(cfg, shape)
+    shardings = input_shardings(cfg, shape, mesh, rules)
+
+    if shape.kind == "train":
+        step = make_train_step(cfg, AdamWConfig(), mesh=mesh, rules=rules)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, mesh=mesh, rules=rules)
+    else:
+        step = make_decode_step(cfg, mesh=mesh, rules=rules)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(step, in_shardings=shardings).lower(*specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    n_dev = mesh.size
+    flops_dev, bytes_dev, link_dev = extrapolated_costs(cfg, shape, mesh, rules)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant,
+        "status": "OK",
+        "kind": shape.kind,
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "hlo_flops_per_dev": flops_dev,          # depth-extrapolated
+        "hlo_bytes_per_dev": bytes_dev,          # depth-extrapolated
+        "hlo_flops_per_dev_raw": float(cost.get("flops", 0.0)),
+        "link_bytes_per_dev": link_dev,          # depth-extrapolated
+        "collectives": coll,                     # full-HLO static counts
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+        },
+        "roofline": roofline_terms(flops_dev, bytes_dev, link_dev),
+    }
+    # useful-FLOPs ratio vs the 6·N·D model (train) / 2·N·D (one fwd token-set)
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    model_flops = mult * n_active * tokens
+    rec["model_flops_total"] = model_flops
+    rec["model_flops_per_dev"] = model_flops / n_dev
+    if flops_dev > 0:
+        rec["useful_flops_ratio"] = model_flops / n_dev / flops_dev
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one arch id, or omit for all")
+    ap.add_argument("--shape", default=None, help="one shape name, or omit for all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun.json")
+    ap.add_argument("--variant", default="baseline",
+                    help="label recorded with each cell (perf iterations)")
+    ap.add_argument("--accum-dtype", default=None,
+                    help="override cfg.accum_dtype (e.g. bfloat16)")
+    ap.add_argument("--remat-policy", default=None,
+                    help="override cfg.remat_policy (full|dots)")
+    ap.add_argument("--serve-packed", default=None,
+                    help="StruM method for packed serving (mip2q|dliq|sparsity)")
+    ap.add_argument("--strum-p", type=float, default=0.5)
+    ap.add_argument("--strum-L", type=int, default=5)
+    ap.add_argument("--attn-constraint", action="store_true")
+    ap.add_argument("--ssm-split", action="store_true")
+    args = ap.parse_args(argv)
+
+    overrides = {}
+    if args.attn_constraint:
+        overrides["attn_heads_constraint"] = True
+    if "--ssm-split" in (argv or sys.argv):
+        overrides["ssm_split_proj"] = True
+    if args.accum_dtype:
+        overrides["accum_dtype"] = args.accum_dtype
+    if args.remat_policy:
+        overrides["remat_policy"] = args.remat_policy
+    if args.serve_packed:
+        from repro.core.policy import StruMConfig
+        overrides["strum"] = StruMConfig(method=args.serve_packed,
+                                         p=args.strum_p, L=args.strum_L)
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"], r.get("variant", "baseline"))
+            for r in results}
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = (arch, shape, "2x16x16" if mp else "16x16",
+                       args.variant)
+                if key in done:
+                    print(f"cached {key}", flush=True)
+                    continue
+                print(f"lowering {key} ...", flush=True)
+                try:
+                    rec = lower_cell(arch, shape, mp, overrides, args.variant)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    rec = {"arch": arch, "shape": shape, "mesh": key[2],
+                           "variant": args.variant,
+                           "status": f"FAIL: {type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                results.append(rec)
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "OK":
+                    r = rec["roofline"]
+                    extra = (f" bottleneck={r['bottleneck']}"
+                             f" tc={r['compute_s']:.3f}s tm={r['memory_s']:.3f}s"
+                             f" tx={r['collective_s']:.3f}s"
+                             f" compile={rec['compile_s']:.0f}s")
+                print(f"  -> {status}{extra}", flush=True)
+    n_ok = sum(r["status"] == "OK" for r in results)
+    n_skip = sum(r["status"].startswith("SKIP") for r in results)
+    print(f"TOTAL {len(results)} cells: {n_ok} OK, {n_skip} SKIP, "
+          f"{len(results) - n_ok - n_skip} FAIL")
+    return 0 if len(results) == n_ok + n_skip else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

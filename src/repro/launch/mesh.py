@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init; tests and benches see the real single device.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips) or 2×16×16 dual pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1, pp: int = 0):
+    """Small mesh over whatever devices exist (tests on forced host devices)."""
+    n = len(jax.devices())
+    assert data * model * max(pp, 1) <= n, (data, model, pp, n)
+    if pp:
+        return jax.make_mesh((pp, data, model), ("pp", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

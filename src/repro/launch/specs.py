@@ -1,0 +1,119 @@
+"""Dry-run input specs: ShapeDtypeStruct stand-ins + NamedSharding trees for
+every (arch × shape × mesh) cell — weak-type-correct, shardable, zero
+allocation.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import cache_defs, model_defs
+from repro.models.params import abstract_params, param_shardings
+from repro.models.sharding import Rules, rules_for_mesh, spec_for_axes
+from repro.optim.adamw import OptState
+
+__all__ = ["input_specs", "input_shardings", "batch_axes", "padded_cache_len"]
+
+
+def padded_cache_len(seq_len: int) -> int:
+    """Cache length (seq + 1 headroom slot) rounded to 512 so the
+    model-sharded cache_seq dim divides any mesh axis."""
+    return -(-(seq_len + 1) // 512) * 512
+
+
+def batch_axes(mesh: Mesh, global_batch: int | None = None):
+    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    if global_batch is not None:
+        import math
+        n = math.prod(mesh.shape[a] for a in axes)
+        if global_batch % n:
+            return ()  # tiny batches (long_500k B=1): replicate; model axis
+            # still shards the cache/seq — see DESIGN.md §3
+    return axes
+
+
+def _batch_specs(cfg: ModelConfig, seq: int, batch: int) -> dict:
+    out = {"labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.modality == "text":
+        out["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    else:  # stub modality frontend: precomputed frame/patch embeddings
+        out["embeds"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model),
+                                             jnp.bfloat16)
+    return out
+
+
+def _defs_for(cfg: ModelConfig, kind: str):
+    """Dense defs for training; StruM-packed defs for inference when
+    cfg.strum is set (packed serving — §Perf knob 3)."""
+    if cfg.strum is not None and kind in ("prefill", "decode"):
+        from repro.models.quantize import packed_model_defs
+        return packed_model_defs(cfg)
+    return model_defs(cfg)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, param_dtype: str = "bfloat16"):
+    """ShapeDtypeStructs for the step inputs of this cell.
+
+    train   -> (params, opt_state, batch)
+    prefill -> (params, batch)               (no labels)
+    decode  -> (params, token, caches, cache_len)
+    """
+    defs = _defs_for(cfg, shape.kind)
+    params = abstract_params(defs, dtype_override=param_dtype)
+    if shape.kind == "train":
+        f32 = abstract_params(defs, dtype_override="float32")
+        opt = OptState(jax.ShapeDtypeStruct((), jnp.int32), f32,
+                       jax.tree.map(lambda x: x, f32))
+        return params, opt, _batch_specs(cfg, shape.seq_len, shape.global_batch)
+    if shape.kind == "prefill":
+        b = _batch_specs(cfg, shape.seq_len, shape.global_batch)
+        b.pop("labels")
+        return params, b
+    # decode: one new token against a cache of length seq_len (padded with
+    # headroom so the model-sharded seq dim divides the mesh)
+    cdefs = cache_defs(cfg, shape.global_batch, padded_cache_len(shape.seq_len))
+    caches = abstract_params(cdefs)
+    if cfg.modality == "text":
+        token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    else:
+        token = jax.ShapeDtypeStruct((shape.global_batch, 1, cfg.d_model),
+                                     jnp.bfloat16)
+    cache_len = jax.ShapeDtypeStruct((), jnp.int32)
+    return params, token, caches, cache_len
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                    rules: Optional[Rules] = None):
+    """NamedSharding trees matching :func:`input_specs` leaf-for-leaf."""
+    rules = rules or rules_for_mesh(mesh)
+    defs = _defs_for(cfg, shape.kind)
+    pshard = param_shardings(defs, mesh, rules)
+    baxes = batch_axes(mesh, shape.global_batch)
+    bshard_2d = NamedSharding(mesh, P(baxes, None))
+    bshard_3d = NamedSharding(mesh, P(baxes, None, None))
+    repl = NamedSharding(mesh, P())
+
+    def batch_sharding(spec_dict):
+        return {k: bshard_3d if v.ndim == 3 else bshard_2d
+                for k, v in spec_dict.items()}
+
+    if shape.kind == "train":
+        opt = OptState(repl, pshard, jax.tree.map(lambda x: x, pshard))
+        _, _, bspecs = input_specs(cfg, shape)
+        return pshard, opt, batch_sharding(bspecs)
+    if shape.kind == "prefill":
+        _, bspecs = input_specs(cfg, shape)
+        return pshard, batch_sharding(bspecs)
+    cdefs = cache_defs(cfg, shape.global_batch, padded_cache_len(shape.seq_len))
+    ctable = dict(rules.table)
+    if not baxes:
+        ctable["batch"] = None  # B=1 long-context: cache batch replicated
+    from repro.models.params import param_shardings as _ps
+    from repro.models.sharding import Rules as _R
+    cshard = _ps(cdefs, mesh, _R(ctable))
+    token = bshard_3d if cfg.modality != "text" else bshard_2d
+    return pshard, token, cshard, repl

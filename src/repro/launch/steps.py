@@ -1,0 +1,67 @@
+"""Step builders: jit-able train / prefill / decode steps with shardings.
+
+These are shared by the trainer, the server, and the dry-run — one
+definition of each step so what we lower at 512 devices is exactly what we
+run in tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.sharding import Rules, rules_for_mesh
+from repro.optim import adamw
+from repro.runtime import compression as gcomp
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step"]
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, mesh=None,
+                    rules: Optional[Rules] = None,
+                    grad_compression: bool = False):
+    """(params, opt_state[, ef_state], batch) -> updated state + metrics."""
+    rules = rules or (rules_for_mesh(mesh) if mesh is not None else None)
+
+    def loss(params, batch):
+        return tfm.loss_fn(params, batch, cfg, mesh=mesh, rules=rules)
+
+    if grad_compression:
+        def step(params, opt_state, ef_state, batch):
+            (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+                params, batch)
+            grads, ef_state = gcomp.compress_tree_with_ef(grads, ef_state)
+            params, opt_state, stats = adamw.adamw_update(
+                opt_cfg, params, grads, opt_state)
+            metrics = dict(metrics, loss=l, **stats)
+            return params, opt_state, ef_state, metrics
+        return step
+
+    def step(params, opt_state, batch):
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+            params, batch)
+        params, opt_state, stats = adamw.adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=l, **stats)
+        return params, opt_state, metrics
+    return step
+
+
+def make_prefill_step(cfg, mesh=None, rules: Optional[Rules] = None):
+    rules = rules or (rules_for_mesh(mesh) if mesh is not None else None)
+
+    def step(params, batch):
+        return tfm.prefill(params, batch, cfg, mesh=mesh, rules=rules)
+    return step
+
+
+def make_decode_step(cfg, mesh=None, rules: Optional[Rules] = None):
+    rules = rules or (rules_for_mesh(mesh) if mesh is not None else None)
+
+    def step(params, token, caches, cache_len):
+        return tfm.decode_step(params, token, caches, cache_len, cfg,
+                               mesh=mesh, rules=rules)
+    return step

@@ -1,0 +1,97 @@
+"""End-to-end trainer: data pipeline → jit'd train step → fault-tolerant
+loop with async checkpoints.
+
+CPU-scale usage (the integration test / examples run this):
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo_1b --smoke \
+        --steps 200 --batch 8 --seq 128 --workdir /tmp/run1
+
+On a real fleet the same entry point runs per host with
+``jax.distributed.initialize()`` and the production mesh; the step function,
+shardings, checkpoint layout and data pipeline are identical (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config, get_smoke_config
+from repro.data.pipeline import DataConfig, global_batch
+from repro.launch.steps import make_train_step
+from repro.models import model_defs
+from repro.models.params import init_params
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.runtime import compression as gcomp
+from repro.runtime.fault_tolerance import TrainLoopRunner, resume_or_init
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--workdir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-compression", action="store_true",
+                    help="StruM-MIP2Q gradient compression w/ error feedback")
+    ap.add_argument("--param-dtype", default="float32")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = dataclasses.replace(cfg, remat=False) if args.smoke else cfg
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 10 + 1),
+                          total_steps=args.steps)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch, seed=args.seed)
+
+    defs = model_defs(cfg)
+
+    def cold_start():
+        params = init_params(defs, seed=args.seed,
+                             dtype_override=args.param_dtype)
+        state = {"params": params, "opt": init_opt_state(params)}
+        if args.grad_compression:
+            state["ef"] = gcomp.init_ef_state(params)
+        return state
+
+    init_state = cold_start()
+    state, start = resume_or_init(os.path.join(args.workdir, "ckpt"),
+                                  template=init_state,
+                                  init_fn=lambda: init_state)
+    if start:
+        print(f"resumed from step {start}")
+
+    step_fn_raw = make_train_step(cfg, opt_cfg,
+                                  grad_compression=args.grad_compression)
+
+    if args.grad_compression:
+        @jax.jit
+        def step_fn(state, batch):
+            p, o, ef, metrics = step_fn_raw(state["params"], state["opt"],
+                                            state["ef"], batch)
+            return {"params": p, "opt": o, "ef": ef}, metrics
+    else:
+        @jax.jit
+        def step_fn(state, batch):
+            p, o, metrics = step_fn_raw(state["params"], state["opt"], batch)
+            return {"params": p, "opt": o}, metrics
+
+    runner = TrainLoopRunner(args.workdir, ckpt_every=args.ckpt_every)
+    state = runner.run(state, start, args.steps, step_fn,
+                       lambda s: global_batch(dcfg, s))
+    print("done; final checkpoint at", runner.ckpt_dir)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,7 @@
+"""Model substrate: layers, attention, MoE, Mamba2 SSD, decoder stacks."""
+from repro.models.transformer import (cache_defs, decode_step, forward_train,
+                                      loss_fn, model_defs, n_groups, period,
+                                      prefill)
+
+__all__ = ["model_defs", "forward_train", "loss_fn", "prefill",
+           "decode_step", "cache_defs", "period", "n_groups"]

@@ -1,0 +1,179 @@
+"""GQA attention: flash-style chunked causal for train/prefill, cache-based
+decode.  Pure JAX (the paper's kernel-level contribution is the StruM matmul,
+not attention), shaped so pjit's SPMD partitioner produces the intended
+collectives:
+
+* train/prefill: heads shard over ``model``; the kv-chunk loop keeps the
+  materialized score block at (B, H, qc, kc) — flash-attention memory
+  behaviour without a custom kernel.  Off-diagonal future chunks are skipped
+  with ``lax.cond`` so runtime matches causal FLOPs (the dry-run
+  cost_analysis conservatively counts both branches; see EXPERIMENTS.md).
+* decode: the KV cache shards its *sequence* dim over ``model``
+  (flash-decode): QKᵀ is local, softmax / AV reduce over the sharded axis
+  as small collectives — no cache gather.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, linear, linear_def
+from repro.models.params import ParamDef
+
+__all__ = ["attn_def", "attention", "decode_attention", "init_cache_spec"]
+
+NEG_INF = -1e30
+
+
+def attn_def(cfg, lead=()) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    return {
+        "wq": linear_def(d, nh * hd, "embed", "qkv", bias=cfg.qkv_bias, lead=lead),
+        "wk": linear_def(d, nkv * hd, "embed", "qkv", bias=cfg.qkv_bias, lead=lead),
+        "wv": linear_def(d, nkv * hd, "embed", "qkv", bias=cfg.qkv_bias, lead=lead),
+        "wo": linear_def(nh * hd, d, "qkv", "embed", lead=lead),
+    }
+
+
+def _qkv(p, x, cfg, positions, **kw):
+    b, s, _ = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    kw_c = dict(kw, tp_pattern="col")
+    q = linear(p["wq"], x, **kw_c).reshape(b, s, nh, hd)
+    k = linear(p["wk"], x, **kw_c).reshape(b, s, nkv, hd)
+    v = linear(p["wv"], x, **kw_c).reshape(b, s, nkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _chunked_causal(q, k, v, chunk: int):
+    """Online-softmax blocked causal attention.
+
+    q: (B, S, H, D), k/v: (B, S, KV, D).  Returns (B, S, H, D) f32.
+    """
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    rep = h // kv
+    qc = kc = min(chunk, s)
+    pad = (-s) % qc
+    s_real = s
+    if pad:  # ragged tail: padded keys sit at future positions (masked out
+        # by causality for every real query); padded query rows are sliced.
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    nq, nk = s // qc, s // kc
+    scale = 1.0 / math.sqrt(d)
+
+    qf = (q.astype(jnp.float32) * scale).reshape(b, nq, qc, kv, rep, d)
+    kf = k.astype(jnp.float32).reshape(b, nk, kc, kv, d)
+    vf = v.astype(jnp.float32).reshape(b, nk, kc, kv, d)
+    q_pos = jnp.arange(s).reshape(nq, qc)
+    k_pos = jnp.arange(s).reshape(nk, kc)
+
+    def q_block(qi, q_i):
+        # q_i: (B, qc, KV, rep, D)
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, k_j, v_j, kp = inp
+
+            def do(_):
+                sc = jnp.einsum("bqgrd,bkgd->bgrqk", q_i, k_j)
+                mask = q_pos[qi][:, None] >= kp[None, :]
+                sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+                m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+                p = jnp.exp(sc - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(p, axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "bgrqk,bkgd->bgrqd", p, v_j)
+                return m_new, l_new, acc_new
+
+            return jax.lax.cond(kj <= qi, do, lambda _: carry, None), None
+
+        m0 = jnp.full((b, kv, rep, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, rep, qc), jnp.float32)
+        a0 = jnp.zeros((b, kv, rep, qc, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), kf.swapaxes(0, 1), vf.swapaxes(0, 1), k_pos))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4).reshape(b, qc, h, d)
+
+    outs = jax.lax.map(lambda args: q_block(args[0], args[1]),
+                       (jnp.arange(nq), qf.swapaxes(0, 1)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+    return out[:, :s_real]
+
+
+def attention(p: dict, x: jnp.ndarray, cfg, positions: jnp.ndarray,
+              return_kv: bool = False, rules=None, **kw):
+    """Training / prefill attention.  x: (B, S, D)."""
+    from repro.models.sharding import constrain
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions, **kw)
+    if cfg.attn_heads_constraint and rules is not None:
+        # pin head sharding so the q-chunk loop's dynamic slices don't make
+        # SPMD fall back to involuntary full resharding (§Perf knob)
+        q = constrain(q, ("batch", None, "heads", None), rules)
+        k = constrain(k, ("batch", None, "kv_heads", None), rules)
+        v = constrain(v, ("batch", None, "kv_heads", None), rules)
+    o = _chunked_causal(q, k, v, cfg.attn_chunk).astype(x.dtype)
+    y = linear(p["wo"], o.reshape(b, s, -1), **dict(kw, tp_pattern="row"))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def decode_attention(p: dict, x: jnp.ndarray, cfg, cache: tuple,
+                     cache_len: jnp.ndarray, **kw):
+    """Single-token decode.  x: (B, 1, D); cache k/v: (B, Smax, KV, hd).
+
+    The new token attends over ``cache[:cache_len]`` plus itself; the cache
+    is functionally updated at position ``cache_len``.
+    """
+    b, _, _ = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    rep = nh // nkv
+    ck, cv = cache
+    smax = ck.shape[1]
+    per_slot = jnp.ndim(cache_len) == 1   # (B,) lengths: batched serving
+    positions = (cache_len[:, None] if per_slot
+                 else jnp.broadcast_to(cache_len, (b, 1))).astype(jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions, **kw)
+
+    # functional cache update at each row's cache_len
+    if per_slot:
+        rows = jnp.arange(b)
+        ck = ck.at[rows, cache_len].set(k[:, 0].astype(ck.dtype))
+        cv = cv.at[rows, cache_len].set(v[:, 0].astype(cv.dtype))
+        len_b = cache_len[:, None, None, None]
+    else:
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, cache_len, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, cache_len, 0, 0))
+        len_b = cache_len
+
+    qf = (q.astype(jnp.float32) / math.sqrt(hd)).reshape(b, nkv, rep, hd)
+    sc = jnp.einsum("bgrd,bsgd->bgrs", qf, ck.astype(jnp.float32))
+    valid = jnp.arange(smax)[None, None, None, :] <= len_b
+    sc = jnp.where(valid, sc, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bgrs,bsgd->bgrd", w, cv.astype(jnp.float32))
+    o = o.reshape(b, 1, nh * hd).astype(x.dtype)
+    y = linear(p["wo"], o, **dict(kw, tp_pattern="row"))
+    return y, (ck, cv)
+
+
+def init_cache_spec(cfg, batch: int, max_len: int):
+    """ShapeDtypeStructs + logical axes for one attention layer's KV cache."""
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    axes = ("batch", "cache_seq", "kv_heads", "head_dim")
+    return shape, axes

@@ -1,0 +1,229 @@
+"""Mamba2 (SSD — state-space duality) mixer, chunked-parallel form.
+
+Faithful to the Mamba2 computation (scalar-identity A per head, grouped
+B/C with one group, depthwise conv on (x,B,C), Δ via softplus, D skip,
+gated RMSNorm, out_proj) while using the *chunked* SSD algorithm: within a
+chunk the token mixing is a masked (C Bᵀ ⊙ decay) matmul (MXU-friendly —
+this is the "duality"), across chunks a small recurrent state
+(B, heads, head_dim, state) carried by ``lax.scan``.
+
+Decode is the O(1) recurrent step on the carried (conv_state, ssm_state)
+cache — this is what makes the 500k-context cells tractable (DESIGN.md §4).
+
+Sharding: heads (and thus d_inner) shard over ``model``; the SSM state is
+tiny and follows its heads.  Jamba uses the same mixer for its ssm layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import linear, linear_def, rms_norm
+from repro.models.params import ParamDef
+
+__all__ = ["ssm_def", "ssm_apply", "ssm_decode", "ssm_cache_spec"]
+
+
+def _dims(cfg):
+    di = cfg.d_inner
+    nh = cfg.ssm_heads
+    hp = cfg.ssm_head_dim
+    ns = cfg.ssm_state
+    conv_dim = di + 2 * ns          # conv runs over (x, B, C)
+    return di, nh, hp, ns, conv_dim
+
+
+def ssm_def(cfg, lead=()) -> dict:
+    d = cfg.d_model
+    di, nh, hp, ns, conv_dim = _dims(cfg)
+    la = ("layers",) * len(lead)
+    if cfg.ssm_split_proj:
+        # §Perf knob: independent projections — every output dim is cleanly
+        # model-sharded, so the z/x/B/C/dt split needs no resharding
+        return {
+            "in_z": linear_def(d, di, "embed", "ssm_inner", lead=lead),
+            "in_x": linear_def(d, di, "embed", "ssm_inner", lead=lead),
+            "in_bc": linear_def(d, 2 * ns, "embed", "ssm_state", lead=lead),
+            "in_dt": linear_def(d, nh, "embed", "ssm_heads", lead=lead),
+            **_ssm_def_tail(cfg, lead, la),
+        }
+    proj_out = 2 * di + 2 * ns + nh  # z, x, B, C, dt
+    return {
+        "in_proj": linear_def(d, proj_out, "embed", "ssm_inner", lead=lead),
+        **_ssm_def_tail(cfg, lead, la),
+    }
+
+
+def _ssm_def_tail(cfg, lead, la):
+    d = cfg.d_model
+    di, nh, hp, ns, conv_dim = _dims(cfg)
+    return {
+        "conv_w": ParamDef(lead + (cfg.ssm_conv, conv_dim),
+                           la + ("conv", "ssm_inner"), scale=0.5),
+        "conv_b": ParamDef(lead + (conv_dim,), la + ("ssm_inner",), init="zeros"),
+        "a_log": ParamDef(lead + (nh,), la + ("ssm_heads",), init="zeros"),
+        "d_skip": ParamDef(lead + (nh,), la + ("ssm_heads",), init="ones"),
+        "dt_bias": ParamDef(lead + (nh,), la + ("ssm_heads",), init="zeros"),
+        "norm_scale": ParamDef(lead + (di,), la + ("ssm_inner",), init="ones"),
+        "out_proj": linear_def(di, d, "ssm_inner", "embed", lead=lead),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    di, nh, hp, ns, _ = _dims(cfg)
+    z = zxbcdt[..., :di]
+    xs = zxbcdt[..., di:2 * di]
+    bb = zxbcdt[..., 2 * di:2 * di + ns]
+    cc = zxbcdt[..., 2 * di + ns:2 * di + 2 * ns]
+    dt = zxbcdt[..., 2 * di + 2 * ns:]
+    return z, xs, bb, cc, dt
+
+
+def _conv_seq(xbc, w, bias):
+    """Causal depthwise conv over seq.  xbc: (B, S, C); w: (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return jax.nn.silu(out + bias[None, None, :])
+
+
+def _ssd_chunked(xh, dt, a, bb, cc, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    xh (B,S,nh,hp)  dt (B,S,nh) >=0  a (nh,) <0  bb/cc (B,S,ns).
+    Returns y (B,S,nh,hp) f32 and final state (B,nh,hp,ns).
+    """
+    b, s, nh, hp = xh.shape
+    ns = bb.shape[-1]
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:  # ragged tail: dt=0 rows are exact no-ops (decay 1, input 0)
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bb = jnp.pad(bb, ((0, 0), (0, pad), (0, 0)))
+        cc = jnp.pad(cc, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nchunk = s // c
+
+    da = dt * a[None, None, :]                       # (B,S,nh) (<0)
+    xdt = xh.astype(jnp.float32) * dt[..., None]     # Δ·x
+    # reshape to (nchunk, B, c, ...) for the scan
+    da_c = da.reshape(b, nchunk, c, nh).swapaxes(0, 1)
+    xdt_c = xdt.reshape(b, nchunk, c, nh, hp).swapaxes(0, 1)
+    b_c = bb.astype(jnp.float32).reshape(b, nchunk, c, ns).swapaxes(0, 1)
+    c_c = cc.astype(jnp.float32).reshape(b, nchunk, c, ns).swapaxes(0, 1)
+    tril = jnp.tril(jnp.ones((c, c), bool))
+
+    def step(h, inp):
+        """One chunk: intra-chunk dual (matmul) form + state recurrence.
+
+        Everything here is per-chunk so peak memory is O(B·c·c·nh), not
+        O(B·S·c·nh)."""
+        dak, xdtk, bk, ck = inp
+        cum = jnp.cumsum(dak, axis=1)                       # (B,c,nh)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]       # (B,t,s,nh)
+        decay = jnp.where(tril[None, :, :, None], jnp.exp(seg), 0.0)
+        scores = jnp.einsum("btk,bsk->bts", ck, bk)         # (B,t,s)
+        y_intra = jnp.einsum("bts,btsh,bshp->bthp", scores, decay, xdtk)
+        # inter-chunk: y[t] += C_t · h_prev · exp(cum[t])
+        y_inter = jnp.einsum("btk,bhpk,bth->bthp", ck, h, jnp.exp(cum))
+        # state update: h = h·exp(cum[-1]) + Σ_s exp(cum[-1]-cum[s]) B_s (Δx)_s
+        tail = jnp.exp(cum[:, -1:, :] - cum)                # (B,c,nh)
+        st_in = jnp.einsum("bsk,bsh,bshp->bhpk", bk, tail, xdtk)
+        h_new = h * jnp.exp(cum[:, -1, :])[:, :, None, None] + st_in
+        return h_new, y_intra + y_inter
+
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, hp, ns), jnp.float32)
+    hT, y = jax.lax.scan(step, h0, (da_c, xdt_c, b_c, c_c))
+    y = y.swapaxes(0, 1).reshape(b, s, nh, hp)
+    if pad:
+        y = y[:, :s - pad]
+    return y, hT
+
+
+def _project_in(p, x, cfg, kw):
+    """(z, xs, bb, cc, dt) via fused or split projections."""
+    di, nh, hp, ns, _ = _dims(cfg)
+    kw_c = dict(kw, tp_pattern="col")
+    if cfg.ssm_split_proj:
+        z = linear(p["in_z"], x, **kw_c)
+        xs = linear(p["in_x"], x, **kw_c)
+        bc = linear(p["in_bc"], x, **kw_c)
+        dt = linear(p["in_dt"], x, **kw_c)
+        return z, xs, bc[..., :ns], bc[..., ns:], dt
+    zxbcdt = linear(p["in_proj"], x, **kw_c)
+    return _split_proj(zxbcdt, cfg)
+
+
+def ssm_apply(p: dict, x: jnp.ndarray, cfg, chunk: int = 256,
+              return_state: bool = False, **kw):
+    """Full-sequence SSD mixer.  x: (B, S, D)."""
+    b, s, d = x.shape
+    di, nh, hp, ns, conv_dim = _dims(cfg)
+    z, xs, bb, cc, dt = _project_in(p, x, cfg, kw)
+
+    xbc_raw = jnp.concatenate([xs, bb, cc], axis=-1)
+    conv_tail = xbc_raw[:, -(cfg.ssm_conv - 1):, :]   # decode conv cache
+    xbc = _conv_seq(xbc_raw, p["conv_w"].astype(jnp.float32),
+                    p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    xs, bb, cc = xbc[..., :di], xbc[..., di:di + ns], xbc[..., di + ns:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xs.reshape(b, s, nh, hp)
+    y, hT = _ssd_chunked(xh, dt, a, bb, cc, chunk)
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm_scale"])
+    out = linear(p["out_proj"], y, **dict(kw, tp_pattern="row"))
+    if return_state:
+        return out, (conv_tail, hT)
+    return out
+
+
+def ssm_decode(p: dict, x: jnp.ndarray, cfg, cache: tuple, **kw):
+    """O(1) single-token step.  x: (B, 1, D); cache = (conv_state, h).
+
+    conv_state: (B, W-1, conv_dim) trailing inputs; h: (B, nh, hp, ns).
+    """
+    b, _, d = x.shape
+    di, nh, hp, ns, conv_dim = _dims(cfg)
+    conv_state, h = cache
+    z, xs, bb, cc, dt = _project_in(p, x, cfg, kw)
+
+    xbc = jnp.concatenate([xs, bb, cc], axis=-1)[:, 0]     # (B, conv_dim)
+    w = p["conv_w"].astype(jnp.float32)
+    window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), w)
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    new_conv_state = window[:, 1:, :].astype(conv_state.dtype)
+
+    xs = conv_out[:, :di]
+    bbt = conv_out[:, di:di + ns]
+    cct = conv_out[:, di + ns:]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B, nh)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a[None, :])                           # (B, nh)
+    xh = xs.reshape(b, nh, hp).astype(jnp.float32)
+    h_new = (h * decay[:, :, None, None]
+             + jnp.einsum("bk,bhp,bh->bhpk", bbt.astype(jnp.float32), xh, dt))
+    y = jnp.einsum("bk,bhpk->bhp", cct.astype(jnp.float32), h_new)
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm_scale"])
+    out = linear(p["out_proj"], y, **dict(kw, tp_pattern="row"))
+    return out, (new_conv_state, h_new)
+
+
+def ssm_cache_spec(cfg, batch: int):
+    """(shape, axes) pairs for (conv_state, ssm_state)."""
+    di, nh, hp, ns, conv_dim = _dims(cfg)
+    conv = ((batch, cfg.ssm_conv - 1, conv_dim),
+            ("batch", None, "ssm_inner"))
+    state = ((batch, nh, hp, ns), ("batch", "ssm_heads", None, None))
+    return conv, state

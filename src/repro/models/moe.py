@@ -1,0 +1,200 @@
+"""Top-k MoE FFN with expert parallelism.
+
+Layout (DESIGN.md §3): tokens shard over ``data``(+``pod``), experts shard
+over ``model`` (EP ≡ TP axis).  Each (data, model) device processes *its*
+token shard against *its* local experts; the combine is one psum over
+``model`` — the same collective volume as a TP FFN all-reduce, no
+all-to-all.  Expert weights are additionally FSDP-sharded on their
+reduction dim and all-gathered (tiled) inside the shard_map body, so the
+gather is explicit and roofline-visible.
+
+Dispatch is GShard-style fixed-capacity (autodiff-safe scatter/gather,
+static shapes): per local expert ``C = ceil(T·k / E · capacity_factor)``
+slots; overflow tokens drop (standard).  A switch-style load-balance aux
+loss keeps the router near-uniform so drops stay rare.
+
+Single-device path (mesh=None, smoke tests) runs the same local math with
+all experts and no collectives.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import linear
+from repro.models.params import ParamDef
+
+__all__ = ["moe_def", "moe_apply"]
+
+
+def moe_def(cfg, lead=()) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    la = ("layers",) * len(lead)
+    out = {
+        # router replicated (tiny, accuracy-critical; excluded from StruM)
+        "router": {"w": ParamDef(lead + (d, e), la + ("embed_no_fsdp", None))},
+        # axis 1 of every expert weight is the FSDP shard dim (all-gathered
+        # tiled inside the shard_map body)
+        "wi": ParamDef(lead + (e, d, f), la + ("experts", "expert_fsdp", "expert_mlp")),
+        "wo": ParamDef(lead + (e, f, d), la + ("experts", "expert_fsdp", "embed_no_fsdp")),
+    }
+    if cfg.gated_mlp:
+        out["wg"] = ParamDef(lead + (e, d, f), la + ("experts", "expert_fsdp", "expert_mlp"))
+    return out
+
+
+def _dequant_experts(wleaf, scfg, dtype):
+    """Decompress a StruM-packed expert stack {mask,hi,lo,scale} with arrays
+    (E, nb, mb, N) back to dense (E, K, N) — vmapped over experts."""
+    if not isinstance(wleaf, dict):
+        return wleaf
+    from repro.core import packing as _pk
+    k_dim = wleaf["mask"].shape[-3] * scfg.w
+
+    def one(mask, hi, lo, scale):
+        p = _pk.PackedStruM(method=scfg.method, w=scfg.w, n_low=scfg.n_low,
+                            q=scfg.q, L=scfg.L, k_dim=k_dim, scale=scale,
+                            mask=mask, hi=hi, lo=lo)
+        return _pk.dequantize(p, dtype)
+
+    return jax.vmap(one)(wleaf["mask"], wleaf["hi"], wleaf["lo"],
+                         wleaf["scale"])
+
+
+def _capacity(tokens: int, cfg) -> int:
+    per_expert = tokens * cfg.top_k / max(cfg.n_experts, 1)
+    return max(int(math.ceil(per_expert * cfg.capacity_factor)), cfg.top_k)
+
+
+def _moe_local(x2, router_w, wi, wg, wo, cfg, e_offset: int, capacity: int):
+    """Token-local, expert-local MoE.  x2: (T, D); wi/wo: (E_local, D, F)/(E_local, F, D)."""
+    t, d = x2.shape
+    e_local = wi.shape[0]
+    e_global, k = cfg.n_experts, cfg.top_k
+
+    logits = jnp.dot(x2.astype(jnp.float32), router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    top_w, top_i = jax.lax.top_k(probs, k)                       # (T, k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, axis=-1, keepdims=True), 1e-9)
+
+    # switch-style load-balance fractions (over ALL experts — router is
+    # replicated so these are consistent across model shards).  Returned as
+    # vectors: the aux product must be formed from GLOBAL means, so callers
+    # pmean these across token shards first.
+    dispatch_frac = jnp.mean(
+        jax.nn.one_hot(top_i[:, 0], e_global, dtype=jnp.float32), axis=0)
+    prob_frac = jnp.mean(probs, axis=0)
+
+    # flatten assignments, mask to local experts
+    a_tok = jnp.repeat(jnp.arange(t), k)                         # (T*k,)
+    a_exp = top_i.reshape(-1) - e_offset
+    a_w = top_w.reshape(-1).astype(jnp.float32)
+    is_local = (a_exp >= 0) & (a_exp < e_local)
+    a_exp = jnp.where(is_local, a_exp, 0)
+    a_w = jnp.where(is_local, a_w, 0.0)
+
+    # capacity positions (GShard): running count per local expert
+    onehot = jax.nn.one_hot(a_exp, e_local, dtype=jnp.int32) * is_local[:, None]
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    a_pos = jnp.sum(pos * onehot, axis=-1)                       # (T*k,)
+    keep = is_local & (a_pos < capacity)
+    a_w = jnp.where(keep, a_w, 0.0)
+    a_pos = jnp.where(keep, a_pos, capacity)                     # park drops
+
+    # dispatch: (E_local, C+1, D) buffer, slot C is the trash bin
+    buf = jnp.zeros((e_local, capacity + 1, d), x2.dtype)
+    buf = buf.at[a_exp, a_pos].add(jnp.where(keep[:, None], x2[a_tok], 0))
+    buf = buf[:, :capacity]
+
+    h = jnp.einsum("ecd,edf->ecf", buf, wi.astype(buf.dtype),
+                   preferred_element_type=jnp.float32).astype(buf.dtype)
+    if wg is not None:
+        g = jnp.einsum("ecd,edf->ecf", buf, wg.astype(buf.dtype),
+                       preferred_element_type=jnp.float32).astype(buf.dtype)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wo.astype(h.dtype),
+                         preferred_element_type=jnp.float32).astype(h.dtype)
+
+    # combine
+    gathered = out_buf[a_exp, jnp.minimum(a_pos, capacity - 1)]  # (T*k, D)
+    contrib = gathered.astype(jnp.float32) * a_w[:, None]
+    y = jnp.zeros((t, d), jnp.float32).at[a_tok].add(contrib)
+    return y.astype(x2.dtype), (dispatch_frac, prob_frac)
+
+
+def moe_apply(p: dict, x: jnp.ndarray, cfg, mesh=None, **_kw):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    Expert stacks may arrive StruM-packed ({mask,hi,lo,scale} dicts); the
+    distributed path then FSDP-gathers the *compressed* payloads and
+    dequantizes locally (the §Perf packed-expert iteration — on MoE archs
+    the expert gathers ARE the decode collective bill)."""
+    b, s, d = x.shape
+    wg = p.get("wg")
+    packed = isinstance(p["wi"], dict)
+    scfg = cfg.strum
+
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        cap = _capacity(b * s, cfg)
+        wi = _dequant_experts(p["wi"], scfg, x.dtype) if packed else p["wi"]
+        wg_l = _dequant_experts(wg, scfg, x.dtype) if packed and wg is not None else wg
+        wo = _dequant_experts(p["wo"], scfg, x.dtype) if packed else p["wo"]
+        y, (df, pf) = _moe_local(x.reshape(-1, d), p["router"]["w"], wi, wg_l,
+                                 wo, cfg, 0, cap)
+        return y.reshape(b, s, d), cfg.n_experts * jnp.sum(df * pf)
+
+    data_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    n_data = math.prod(mesh.shape[a] for a in data_axes)
+    n_model = mesh.shape["model"]
+    e_local = cfg.n_experts // n_model
+    shard_tokens = b % n_data == 0
+    t_local = (b // n_data) * s if shard_tokens else b * s
+    cap = _capacity(t_local, cfg)
+    gated = wg is not None
+
+    def body(x_l, router_w, *ws):
+        # expert weights arrive FSDP-sharded on their reduction dim; gather
+        # (ZeRO-3 style) before use — roofline-visible.  Packed stacks
+        # gather their COMPRESSED payloads, then dequantize locally.
+        def gather_one(w):
+            if isinstance(w, dict):
+                g = {k: (jax.lax.all_gather(v, data_axes, axis=1, tiled=True)
+                         if k != "scale" else v) for k, v in w.items()}
+                return _dequant_experts(g, scfg, x_l.dtype)
+            return jax.lax.all_gather(w, data_axes, axis=1, tiled=True)
+
+        ws = [gather_one(w) for w in ws]
+        wi_l, wo_l = ws[0], ws[-1]
+        wg_l = ws[1] if gated else None
+        midx = jax.lax.axis_index("model")
+        y, (df, pf) = _moe_local(x_l.reshape(-1, d), router_w, wi_l, wg_l,
+                                 wo_l, cfg, midx * e_local, cap)
+        y = jax.lax.psum(y, "model")           # combine expert shards
+        # global fractions BEFORE the product (aux is nonlinear in them)
+        df = jax.lax.pmean(df, data_axes + ("model",))
+        pf = jax.lax.pmean(pf, data_axes + ("model",))
+        aux = cfg.n_experts * jnp.sum(df * pf)
+        return y.reshape(x_l.shape), aux
+
+    dspec = P(data_axes, None, None) if shard_tokens else P(None, None, None)
+    wspec = P("model", data_axes, None)        # dense (E_local, K_shard, N)
+    pspec = {"mask": P("model", data_axes, None, None),  # packed payloads
+             "hi": P("model", data_axes, None, None),
+             "lo": P("model", data_axes, None, None),
+             "scale": P("model", None, None)}
+
+    def spec_of(w):
+        return pspec if isinstance(w, dict) else wspec
+
+    args = [x, p["router"]["w"], p["wi"]] + ([wg] if gated else []) + [p["wo"]]
+    in_specs = (dspec, P(None, None)) + tuple(spec_of(w) for w in args[2:])
+    out_specs = (dspec, P())
+    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    return fn(*args)

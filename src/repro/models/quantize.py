@@ -1,0 +1,175 @@
+"""Model-level StruM integration: compress a trained param tree for serving.
+
+``strum_serve_params`` walks the params pytree and replaces every eligible
+linear kernel ``{"w": (..., K, N)}`` with its compressed StruM form
+``{"mask", "hi", "lo", "scale"}`` (arrays only — static metadata comes from
+``cfg.strum``, the paper's statically-configured PE).  The model's
+``linear`` recognizes the compressed leaf and dequantizes on the fly
+(Pallas kernel or fused jnp path) — no other model code changes, which is
+the point: StruM is a storage/bandwidth transform, not an architecture
+change.
+
+Stacked weights (leading scan-group or expert dims) are compressed
+column-folded, matching :mod:`repro.core.apply` conventions.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blocking, packing
+from repro.core.policy import LayerPolicy, StruMConfig, default_policy
+from repro.core.quantizers import int8_symmetric, quantize_blocks
+
+__all__ = ["strum_serve_params", "serve_tree_bytes"]
+
+
+def _pack_leaf(wt: jnp.ndarray, scfg: StruMConfig) -> dict:
+    """(..., K, N) kernel -> compressed arrays with lead dims preserved.
+
+    Lead dims (scan groups, experts) are kept as leading axes of every
+    payload array so `lax.scan` can slice them exactly like dense params.
+    """
+    lead = wt.shape[:-2]
+    k, n = wt.shape[-2:]
+    w2 = wt.reshape((-1, k, n))
+
+    def pack_one(w):
+        codes, scale = int8_symmetric(w, axis=0)
+        blocks = blocking.to_blocks(codes, scfg.w)
+        qb = quantize_blocks(blocks, scfg.method, scfg.n_low, q=scfg.q, L=scfg.L)
+        p = packing.pack(qb, method=scfg.method, scale=scale, k_dim=k,
+                         n_low=scfg.n_low, q=scfg.q, L=scfg.L)
+        return {"mask": p.mask, "hi": p.hi, "lo": p.lo, "scale": p.scale}
+
+    packed = [pack_one(w2[i]) for i in range(w2.shape[0])]
+    return {key: jnp.stack([p[key] for p in packed]).reshape(
+        lead + packed[0][key].shape) for key in packed[0]}
+
+
+def strum_serve_params(params, cfg, policy: Optional[LayerPolicy] = None):
+    """Compress eligible kernels per ``cfg.strum``; leave the rest dense."""
+    scfg = cfg.strum
+    assert scfg is not None, "set cfg.strum to a StruMConfig first"
+    policy = policy or default_policy(scfg)
+
+    def visit(path, leaf):
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        is_expert = "/moe/" in name and name.rsplit("/", 1)[-1] in ("wi", "wg", "wo")
+        if not name.endswith("/w") and not is_expert:
+            return leaf
+        if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+            return leaf
+        if not is_expert and policy.resolve(name, leaf.shape) is None:
+            return leaf
+        return _pack_leaf(leaf, scfg)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def gather_dequant(wleaf: dict, scfg: StruMConfig, mesh, pattern: str,
+                   k_dim: int, dtype=jnp.bfloat16):
+    """FSDP-gather *compressed* payloads, then dequantize locally.
+
+    Without this, XLA hoists the (elementwise) dequant above the FSDP
+    all-gather and moves f32 weights over ICI; wrapping the gather in
+    shard_map pins it to the packed uint8/int8 payloads, so the wire cost
+    is the paper's r × int8 (§Perf knob 3; measured in EXPERIMENTS.md).
+
+    The FSDP gather is ALWAYS over the data(+pod) axes; patterns differ in
+    which payload axis they gather and which TP sharding the result keeps:
+
+    'col' (wq/wk/wv, mlp wi/wg, ssm in_proj): K FSDP-sharded (block axis 0),
+        N TP-sharded — gather axis 0, result (K, N_local), spec (None, model).
+    'row' (attn wo, mlp wo, ssm out_proj): K TP-sharded, N FSDP-sharded
+        (axis 2) — gather axis 2, result (K_local, N), spec (model, None);
+        the following dot contracts the model-sharded K and psums, exactly
+        the Megatron row-parallel schedule.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    col = pattern == "col"
+    gather_axis = 0 if col else 2
+    in_spec = P(baxes, None, "model") if col else P("model", None, baxes)
+    out_spec = P(None, "model") if col else P("model", None)
+    scale_spec = P(None, "model") if col else P(None, baxes)
+
+    def body(mask, hi, lo, scale):
+        g = lambda a: jax.lax.all_gather(a, baxes, axis=gather_axis,  # noqa: E731
+                                         tiled=True)
+        mask_g, hi_g, lo_g = g(mask), g(hi), g(lo)
+        if not col:  # row: per-output-channel scales follow the N gather
+            scale = jax.lax.all_gather(scale, baxes, axis=1, tiled=True)
+        k_local = mask_g.shape[0] * scfg.w  # K divisible by w for all archs
+        p = packing.PackedStruM(
+            method=scfg.method, w=scfg.w, n_low=scfg.n_low, q=scfg.q,
+            L=scfg.L, k_dim=k_local, scale=scale,
+            mask=mask_g, hi=hi_g, lo=lo_g)
+        return packing.dequantize(p, dtype)
+
+    fn = jax.shard_map(body, mesh=mesh,
+                       in_specs=(in_spec, in_spec, in_spec, scale_spec),
+                       out_specs=out_spec, check_vma=False)
+    return fn(wleaf["mask"], wleaf["hi"], wleaf["lo"], wleaf["scale"])
+
+
+def packed_model_defs(cfg, policy: Optional[LayerPolicy] = None):
+    """ParamDef tree for a StruM-compressed model — the dry-run stand-in for
+    packed serving (zero allocation, exact payload shapes/shardings).
+
+    Every eligible linear ``{"w": ParamDef(..., (..., in_ax, out_ax))}``
+    becomes ``{"w": {"mask", "hi", "lo", "scale"}}`` with the in-axis
+    sharding moved to the block dim (nb = K/w) and the out-axis kept — so
+    FSDP gathers and HBM streams move the COMPRESSED bytes (r× fewer).
+    MoE expert stacks stay dense (packed grouped-matmul is future work,
+    DESIGN.md §5).
+    """
+    import math as _math
+
+    from repro.models import model_defs as _model_defs
+    from repro.models.params import ParamDef as _PD
+
+    scfg = cfg.strum
+    assert scfg is not None
+    policy = policy or default_policy(scfg)
+    defs = _model_defs(cfg)
+
+    def visit(path, leaf):
+        if not isinstance(leaf, _PD):
+            return leaf
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        is_expert = "/moe/" in name and name.rsplit("/", 1)[-1] in ("wi", "wg", "wo")
+        if (not name.endswith("/w") and not is_expert) or len(leaf.shape) < 2:
+            return leaf
+        if not is_expert and policy.resolve(name, leaf.shape) is None:
+            return leaf
+        lead = leaf.shape[:-2]
+        k_dim, n = leaf.shape[-2:]
+        la = leaf.axes[:-2]
+        in_ax, out_ax = leaf.axes[-2:]
+        nb = _math.ceil(k_dim / scfg.w)
+        mb = scfg.w // 8
+        nh = scfg.w - scfg.n_low
+        lb = _math.ceil(scfg.n_low * scfg.q / 8) if scfg.method != "sparsity" else 0
+        return {
+            "mask": _PD(lead + (nb, mb, n), la + (in_ax, None, out_ax),
+                        dtype="uint8", init="zeros"),
+            "hi": _PD(lead + (nb, max(nh, 1), n), la + (in_ax, None, out_ax),
+                      dtype="int8", init="zeros"),
+            "lo": _PD(lead + (nb, max(lb, 1), n), la + (in_ax, None, out_ax),
+                      dtype="uint8", init="zeros"),
+            "scale": _PD(lead + (1, n), la + (None, out_ax),
+                         dtype="float32", init="zeros"),
+        }
+
+    return jax.tree_util.tree_map_with_path(visit, defs,
+                                            is_leaf=lambda x: isinstance(x, _PD))
+
+
+def serve_tree_bytes(params) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(params)
+               if hasattr(x, "size"))

@@ -1,0 +1,296 @@
+"""Decoder stack: homogeneous-period scan over layers, hybrid interleave,
+train/prefill/decode forwards.
+
+Layer plan → period: the per-layer (mixer kind, is_moe) pattern repeats with
+period P = lcm(attn_every, moe_every) (P=8 for Jamba's 1:7 + MoE-every-2;
+P=1 for uniform stacks).  Parameters are stacked with a leading
+``n_groups = n_layers / P`` dim per period position, and the forward is a
+single ``lax.scan`` over groups whose body unrolls the P positions — HLO
+size stays O(P), compile time stays flat in depth, and remat wraps the
+group body.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import mamba2, moe
+from repro.models.layers import (apply_norm, embed_def, embed_lookup,
+                                 linear_def, logits, mlp, mlp_def, norm_def)
+from repro.models.params import ParamDef
+from repro.models.sharding import Rules, constrain
+
+__all__ = ["period", "n_groups", "model_defs", "forward_train",
+           "prefill", "decode_step", "cache_defs", "loss_fn"]
+
+
+def period(cfg) -> int:
+    p = 1
+    if cfg.family == "hybrid" and cfg.attn_every:
+        p = math.lcm(p, cfg.attn_every)
+    if cfg.n_experts and cfg.moe_every > 1:
+        p = math.lcm(p, cfg.moe_every)
+    assert cfg.n_layers % p == 0, (cfg.n_layers, p)
+    return p
+
+
+def n_groups(cfg) -> int:
+    return cfg.n_layers // period(cfg)
+
+
+def _block_def(cfg, pos: int, lead) -> dict:
+    kind = cfg.layer_kind(pos)
+    d = {"norm1": norm_def(cfg, lead)}
+    if kind == "attn":
+        d["attn"] = attn_mod.attn_def(cfg, lead)
+    else:
+        d["ssm"] = mamba2.ssm_def(cfg, lead)
+    if cfg.d_ff > 0:
+        d["norm2"] = norm_def(cfg, lead)
+        if cfg.layer_is_moe(pos):
+            d["moe"] = moe.moe_def(cfg, lead)
+        else:
+            d["mlp"] = mlp_def(cfg, lead)
+    return d
+
+
+def model_defs(cfg) -> dict:
+    p = period(cfg)
+    g = n_groups(cfg)
+    defs: dict = {"embed": embed_def(cfg)}
+    defs["blocks"] = {f"pos{i}": _block_def(cfg, i, (g,)) for i in range(p)}
+    defs["final_norm"] = norm_def(cfg)
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = linear_def(cfg.d_model, cfg.padded_vocab,
+                                     "embed_no_fsdp", "vocab")
+    return defs
+
+
+
+def _scan_groups(body, x, blocks, cfg, collect=False):
+    """lax.scan over stacked layer groups, or a python unroll when
+    cfg.scan_layers is False (used by the dry-run cost extrapolation —
+    XLA's cost_analysis counts loop bodies once)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, x, blocks)
+    g = jax.tree_util.tree_leaves(blocks)[0].shape[0]
+    ys = []
+    for i in range(g):
+        gp = jax.tree.map(lambda a: a[i], blocks)
+        x, y = body(x, gp)
+        ys.append(y)
+    stack = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    return x, stack
+
+
+
+def _remat(body, cfg):
+    """Apply the configured activation-checkpoint policy to a group body.
+
+    'full' recomputes everything (min memory, re-plays TP all-reduces in
+    backward); 'dots' saves matmul outputs so the backward never re-runs the
+    sharded contractions or their collectives (§Perf knob 2).
+    """
+    if not cfg.remat:
+        return body
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_saveable)
+    return jax.checkpoint(body)
+
+
+# ------------------------------------------------------------- forwards --
+
+def _block_apply(bp: dict, x, cfg, positions, mesh, rules, kw):
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(bp["norm1"], x, cfg)
+    if "attn" in bp:
+        h = attn_mod.attention(bp["attn"], h, cfg, positions, rules=rules, **kw)
+    else:
+        h = mamba2.ssm_apply(bp["ssm"], h, cfg, **kw)
+    x = x + h
+    x = constrain(x, ("batch", None, None), rules)
+    if cfg.d_ff > 0:
+        h = apply_norm(bp["norm2"], x, cfg)
+        if "moe" in bp:
+            h, aux = moe.moe_apply(bp["moe"], h, cfg, mesh=mesh, **kw)
+        else:
+            h = mlp(bp["mlp"], h, cfg, **kw)
+        x = x + h
+        x = constrain(x, ("batch", None, None), rules)
+    return x, aux
+
+
+def _embed_in(params, batch, cfg):
+    if "embeds" in batch:            # modality-stub frontends (audio / vlm)
+        return batch["embeds"].astype(cfg.activation_dtype)
+    return embed_lookup(params["embed"], batch["tokens"], cfg.activation_dtype)
+
+
+def forward_train(params: dict, batch: dict, cfg, mesh=None,
+                  rules: Optional[Rules] = None, **kw):
+    """Full forward; returns (logits_f32, total_aux)."""
+    kw.setdefault("strum", cfg.strum)
+    kw.setdefault("accum_dtype", cfg.accum_dtype)
+    if cfg.strum is not None and mesh is not None:
+        kw.setdefault("tp_mesh", mesh)
+    x = _embed_in(params, batch, cfg)
+    b, s, _ = x.shape
+    x = constrain(x, ("batch", None, None), rules)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    p = period(cfg)
+
+    def group(x, gp):
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(p):
+            x, a = _block_apply(gp[f"pos{i}"], x, cfg, positions, mesh, rules, kw)
+            aux = aux + a
+        return x, aux
+
+    body = _remat(group, cfg)
+    x, auxs = _scan_groups(body, x, params["blocks"], cfg)
+    x = apply_norm(params["final_norm"], x, cfg)
+    lg = logits(params.get("lm_head"), params["embed"], x)
+    lg = constrain(lg, ("batch", None, "vocab"), rules)
+    return lg, jnp.sum(auxs)
+
+
+def loss_fn(params, batch, cfg, mesh=None, rules=None, **kw):
+    lg, aux = forward_train(params, batch, cfg, mesh, rules, **kw)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum((lse - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + cfg.router_aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+# --------------------------------------------------------------- caches --
+
+def cache_defs(cfg, batch: int, max_len: int) -> dict:
+    """ParamDef tree for the per-layer decode caches (stacked by group)."""
+    p = period(cfg)
+    g = n_groups(cfg)
+    out = {}
+    for i in range(p):
+        kind = cfg.layer_kind(i)
+        if kind == "attn":
+            shape, axes = attn_mod.init_cache_spec(cfg, batch, max_len)
+            out[f"pos{i}"] = {
+                "k": ParamDef((g,) + shape, ("layers",) + axes, dtype=cfg.dtype,
+                              init="zeros"),
+                "v": ParamDef((g,) + shape, ("layers",) + axes, dtype=cfg.dtype,
+                              init="zeros"),
+            }
+        else:
+            (cs, ca), (ss, sa) = mamba2.ssm_cache_spec(cfg, batch)
+            out[f"pos{i}"] = {
+                "conv": ParamDef((g,) + cs, ("layers",) + ca, dtype=cfg.dtype,
+                                 init="zeros"),
+                "state": ParamDef((g,) + ss, ("layers",) + sa, dtype="float32",
+                                  init="zeros"),
+            }
+    return out
+
+
+def prefill(params: dict, batch: dict, cfg, mesh=None, rules=None, **kw):
+    """Forward over a prompt; returns (last-token logits, caches).
+
+    Attention layers emit their (k, v); ssm layers their (conv tail, state).
+    """
+    kw.setdefault("strum", cfg.strum)
+    kw.setdefault("accum_dtype", cfg.accum_dtype)
+    if cfg.strum is not None and mesh is not None:
+        kw.setdefault("tp_mesh", mesh)
+    x = _embed_in(params, batch, cfg)
+    b, s, _ = x.shape
+    x = constrain(x, ("batch", None, None), rules)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    p = period(cfg)
+
+    def group(x, gp):
+        caches = {}
+        for i in range(p):
+            bp = gp[f"pos{i}"]
+            h = apply_norm(bp["norm1"], x, cfg)
+            if "attn" in bp:
+                h, (k, v) = attn_mod.attention(bp["attn"], h, cfg, positions,
+                                               return_kv=True, rules=rules, **kw)
+                caches[f"pos{i}"] = {"k": constrain(k.astype(cfg.activation_dtype),
+                                                    ("batch", "cache_seq", None, None), rules),
+                                     "v": constrain(v.astype(cfg.activation_dtype),
+                                                    ("batch", "cache_seq", None, None), rules)}
+            else:
+                h, (conv_tail, hT) = mamba2.ssm_apply(bp["ssm"], h, cfg,
+                                                      return_state=True, **kw)
+                caches[f"pos{i}"] = {"conv": conv_tail.astype(cfg.activation_dtype),
+                                     "state": hT}
+            x = x + h
+            if cfg.d_ff > 0:
+                h = apply_norm(bp["norm2"], x, cfg)
+                if "moe" in bp:
+                    h, _ = moe.moe_apply(bp["moe"], h, cfg, mesh=mesh, **kw)
+                else:
+                    h = mlp(bp["mlp"], h, cfg, **kw)
+                x = x + h
+            x = constrain(x, ("batch", None, None), rules)
+        return x, caches
+
+    body = _remat(group, cfg)
+    x, caches = _scan_groups(body, x, params["blocks"], cfg)
+    x = apply_norm(params["final_norm"], x, cfg)
+    lg = logits(params.get("lm_head"), params["embed"], x[:, -1:, :])
+    return lg, caches
+
+
+def decode_step(params: dict, token: jnp.ndarray, caches: dict,
+                cache_len: jnp.ndarray, cfg, mesh=None, rules=None, **kw):
+    """One decode step.  token: (B, 1) int32 (or embeds (B, 1, D)).
+
+    Returns (logits (B, 1, V), new caches).
+    """
+    kw.setdefault("strum", cfg.strum)
+    kw.setdefault("accum_dtype", cfg.accum_dtype)
+    if cfg.strum is not None and mesh is not None:
+        kw.setdefault("tp_mesh", mesh)
+    if token.ndim == 3:
+        x = token.astype(cfg.activation_dtype)
+    else:
+        x = embed_lookup(params["embed"], token, cfg.activation_dtype)
+    x = constrain(x, ("batch", None, None), rules)
+    p = period(cfg)
+
+    def group(carry, xs):
+        x = carry
+        gp, gc = xs
+        new_c = {}
+        for i in range(p):
+            bp, c = gp[f"pos{i}"], gc[f"pos{i}"]
+            h = apply_norm(bp["norm1"], x, cfg)
+            if "attn" in bp:
+                h, (nk, nv) = attn_mod.decode_attention(
+                    bp["attn"], h, cfg, (c["k"], c["v"]), cache_len, **kw)
+                new_c[f"pos{i}"] = {"k": nk, "v": nv}
+            else:
+                h, (ncv, nst) = mamba2.ssm_decode(
+                    bp["ssm"], h, cfg, (c["conv"], c["state"]), **kw)
+                new_c[f"pos{i}"] = {"conv": ncv, "state": nst}
+            x = x + h
+            if cfg.d_ff > 0:
+                h = apply_norm(bp["norm2"], x, cfg)
+                if "moe" in bp:
+                    h, _ = moe.moe_apply(bp["moe"], h, cfg, mesh=mesh, **kw)
+                else:
+                    h = mlp(bp["mlp"], h, cfg, **kw)
+                x = x + h
+            x = constrain(x, ("batch", None, None), rules)
+        return x, new_c
+
+    x, new_caches = _scan_groups(group, x, (params["blocks"], caches), cfg)
+    x = apply_norm(params["final_norm"], x, cfg)
+    lg = logits(params.get("lm_head"), params["embed"], x)
+    return lg, new_caches

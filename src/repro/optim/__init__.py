@@ -1,0 +1,6 @@
+from repro.optim.adamw import (AdamWConfig, OptState, abstract_opt_state,
+                               adamw_update, global_norm, init_opt_state,
+                               warmup_cosine)
+
+__all__ = ["AdamWConfig", "OptState", "abstract_opt_state", "adamw_update",
+           "global_norm", "init_opt_state", "warmup_cosine"]

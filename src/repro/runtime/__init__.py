@@ -1,0 +1,2 @@
+"""Distributed runtime: fault tolerance, gradient compression, elasticity,
+pipeline parallelism."""

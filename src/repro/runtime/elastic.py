@@ -1,0 +1,51 @@
+"""Elastic rescaling: resume a run on a different device count.
+
+Invariants that make this safe:
+  * params/optimizer checkpoints are stored as *logical* (global) arrays —
+    resharding is just a different NamedSharding on restore;
+  * the data pipeline is stateless-indexed (step -> batch), so changing the
+    number of data shards only changes who computes which rows;
+  * mesh construction is a pure function of (n_devices, model_parallelism),
+    so any fleet size with n % model == 0 resumes cleanly.
+
+``plan_remesh`` validates a proposed new fleet and returns the new mesh
+shape + the per-arch spec checkerboard to relower (lowering is cached per
+(arch, shape, mesh) by the launcher).  Global batch stays FIXED across
+rescales (per-device batch changes) so optimization dynamics are unchanged
+— the standard elastic policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = ["RemeshPlan", "plan_remesh"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    old_shape: tuple
+    new_shape: tuple
+    axis_names: tuple
+    relower: bool = True            # always true: device count changed
+    notes: str = ""
+
+
+def plan_remesh(n_devices: int, model_parallel: int, global_batch: int,
+                old_shape: Optional[tuple] = None,
+                pods: int = 1) -> RemeshPlan:
+    if n_devices % (model_parallel * pods):
+        raise ValueError(
+            f"{n_devices} devices not divisible by model={model_parallel} x pods={pods}")
+    data = n_devices // (model_parallel * pods)
+    if global_batch % (data * pods):
+        raise ValueError(
+            f"global_batch={global_batch} not divisible by data shards {data * pods}")
+    if pods > 1:
+        new = (pods, data, model_parallel)
+        names = ("pod", "data", "model")
+    else:
+        new = (data, model_parallel)
+        names = ("data", "model")
+    return RemeshPlan(old_shape or new, new, names,
+                      notes=f"per-data-shard batch {global_batch // (data * pods)}")

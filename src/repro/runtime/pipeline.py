@@ -1,0 +1,79 @@
+"""Pipeline parallelism (GPipe fill-drain) over a ``pp`` mesh axis.
+
+Provided as an optional composition layer: at ≤512 chips and the assigned
+model sizes, FSDP×TP is the better regime (DESIGN.md §3), so the 40-cell
+dry-run does not use ``pp`` — but the primitive is here, tested on a host
+mesh, for the >4k-chip regime where a 95-layer stack wants stages.
+
+Mechanics: params arrive stacked (n_stages, ...) and sharded on the stage
+axis; activations are a (n_micro, B_micro, ...) queue.  Each tick every
+stage runs its resident microbatch and the result ppermutes one hop down
+the ring; after ``n_micro + n_stages - 1`` ticks all microbatches have
+crossed all stages.  Bubble fraction = (S-1)/(M+S-1) — reported by
+:func:`bubble_fraction` and accounted in §Perf when pp would be enabled.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["pipelined_apply", "bubble_fraction"]
+
+
+def bubble_fraction(n_stages: int, n_micro: int) -> float:
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+def pipelined_apply(stage_fn, stage_params, x, *, mesh, n_micro: int,
+                    axis: str = "pp"):
+    """Run ``y = stage_{S-1}(...stage_0(x))`` pipelined over ``axis``.
+
+    stage_fn(params_i, x_micro) -> y_micro, same shape (uniform stages).
+    stage_params: pytree with leading dim n_stages (sharded over ``axis``).
+    x: (n_micro * B_micro, ...) global batch.
+    """
+    n_stages = mesh.shape[axis]
+    b = x.shape[0]
+    assert b % n_micro == 0
+    xm = x.reshape((n_micro, b // n_micro) + x.shape[1:])
+    ticks = n_micro + n_stages - 1
+
+    def body(params_l, xm_l):
+        # params_l: this stage's params (leading dim 1) ; xm_l: full queue
+        # (microbatch queue is replicated over pp — only stage 0 consumes it)
+        params_me = jax.tree.map(lambda a: a[0], params_l)
+        sid = jax.lax.axis_index(axis)
+        carry = jnp.zeros_like(xm_l[0])          # activation resident here
+
+        def tick(state, t):
+            carry, outq = state
+            # stage 0 ingests microbatch t (when in range)
+            mb = jnp.clip(t, 0, n_micro - 1)
+            inject = jnp.where(t < n_micro, 1.0, 0.0)
+            x_in = jnp.where((sid == 0) & (inject > 0), xm_l[mb], carry)
+            y = stage_fn(params_me, x_in)
+            # last stage emits microbatch (t - (S-1)) into the output queue
+            emit_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            do_emit = (sid == n_stages - 1) & (t >= n_stages - 1)
+            outq = jnp.where(
+                do_emit,
+                jax.lax.dynamic_update_index_in_dim(outq, y, emit_idx, 0),
+                outq)
+            # ring-shift activations one hop down
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            carry = jax.lax.ppermute(y, axis, perm)
+            return (carry, outq), None
+
+        (carry, outq), _ = jax.lax.scan(
+            tick, (carry, jnp.zeros_like(xm_l)), jnp.arange(ticks))
+        # outputs live on the last stage; share them (tiny vs compute)
+        outq = jax.lax.psum(
+            jnp.where(sid == n_stages - 1, outq, jnp.zeros_like(outq)), axis)
+        return outq
+
+    pspec = jax.tree.map(lambda _: P(axis), stage_params)
+    fn = jax.shard_map(body, mesh=mesh, in_specs=(pspec, P()),
+                       out_specs=P(), check_vma=False)
+    ym = fn(stage_params, xm)
+    return ym.reshape((b,) + ym.shape[2:])

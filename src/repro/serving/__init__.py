@@ -1,0 +1,3 @@
+from repro.serving.scheduler import BatchScheduler, Request
+
+__all__ = ["BatchScheduler", "Request"]

@@ -1,0 +1,145 @@
+"""Batched serving scheduler: continuous-batching-lite over the jitted
+prefill/decode steps.
+
+The paper's deployment scenario is vendor-side inference serving; this is
+the substrate above the (optionally StruM-compressed) model: a request
+queue, slot-based batching with one shared jit'd decode step, per-slot
+cache management, and EOS/length-based retirement.  Design points that
+matter at fleet scale:
+
+  * **static shapes** — the decode step is compiled once for (n_slots, 1);
+    joining/leaving requests swap cache *contents*, never shapes, so there
+    is exactly one executable per model (no recompile storms).
+  * **slot recycling via masks** — a free slot keeps decoding garbage into
+    a parked position; its logits are ignored.  With StruM's fixed
+    per-block structure the step time is data-independent, so stragglers
+    cannot arise from content (the paper's balance argument, again).
+  * **prefill/decode separation** — prefills run one request at a time on
+    the prefill executable and splice their caches into a slot;
+    production would run a second prefill batch lane, same mechanism.
+
+CPU-scale but structurally the real thing; exercised by
+tests/test_scheduler.py and examples/serve_batch.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.steps import make_decode_step, make_prefill_step
+
+__all__ = ["Request", "BatchScheduler"]
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: jnp.ndarray            # (prompt_len,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # filled by the scheduler:
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+def _splice(batched, single, slot: int):
+    """Copy single-request (B=1) cache leaves into slot of the batched tree.
+
+    Cache leaves are (g, B, ...) — batch is axis 1.
+    """
+    def f(b, s):
+        return b.at[:, slot].set(s[:, 0].astype(b.dtype))
+    return jax.tree.map(f, batched, single)
+
+
+class BatchScheduler:
+    """n_slots-way continuous decoding over one compiled step."""
+
+    def __init__(self, cfg, params, n_slots: int = 4, max_len: int = 256,
+                 mesh=None, rules=None):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self._prefill = jax.jit(make_prefill_step(cfg, mesh, rules))
+        self._decode = jax.jit(make_decode_step(cfg, mesh, rules))
+        self.queue: deque[Request] = deque()
+        self.slots: list[Optional[Request]] = [None] * n_slots
+        self._caches = None            # batched cache tree, B = n_slots
+        self._tokens = jnp.zeros((n_slots, 1), jnp.int32)
+        self._lens = [0] * n_slots     # per-slot current length
+        self._steps = 0
+
+    # ------------------------------------------------------------- intake --
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        from repro.models import cache_defs
+        from repro.models.params import init_params
+        for slot in range(self.n_slots):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            lg, cache = self._prefill(
+                self.params, {"tokens": req.prompt[None, :]})
+            if self._caches is None:
+                defs = cache_defs(self.cfg, self.n_slots, self.max_len)
+                self._caches = init_params(defs, seed=0)
+            # pad the fresh cache's seq dim up to max_len, then splice
+            plen = req.prompt.shape[0]
+
+            def pad(x):
+                if x.ndim == 5:  # (g, 1, S, KV, hd) attention cache
+                    return jnp.pad(
+                        x, [(0, 0), (0, 0), (0, self.max_len - x.shape[2]),
+                            (0, 0), (0, 0)])
+                return x
+            cache = jax.tree.map(pad, cache)
+            self._caches = _splice(self._caches, cache, slot)
+            tok = jnp.argmax(lg[0, -1, :self.cfg.vocab_size]).astype(jnp.int32)
+            req.output.append(int(tok))
+            self._tokens = self._tokens.at[slot, 0].set(tok)
+            self._lens[slot] = plen
+            self.slots[slot] = req
+
+    # -------------------------------------------------------------- drive --
+    def step(self) -> int:
+        """One decode step for every occupied slot; returns #active."""
+        self._admit()
+        active = [s for s in range(self.n_slots) if self.slots[s] is not None]
+        if not active:
+            return 0
+        # single shared compiled step; per-slot lengths ride in a (B,)
+        # cache_len vector (decode_attention masks/updates per batch row)
+        cache_len = jnp.asarray(self._lens, jnp.int32)
+        lg, self._caches = self._decode(self.params, self._tokens,
+                                        self._caches, cache_len)
+        nxt = jnp.argmax(lg[:, -1, :self.cfg.vocab_size], axis=-1)\
+            .astype(jnp.int32)
+        self._steps += 1
+        for s in active:
+            req = self.slots[s]
+            tok = int(nxt[s])
+            req.output.append(tok)
+            self._lens[s] += 1
+            if ((req.eos_id is not None and tok == req.eos_id)
+                    or len(req.output) >= req.max_new_tokens
+                    or self._lens[s] >= self.max_len - 2):
+                req.done = True
+                self.slots[s] = None   # slot freed; next _admit refills it
+        self._tokens = self._tokens.at[:, 0].set(nxt)
+        return len(active)
+
+    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
+        finished: list[Request] = []
+        while (self.queue or any(self.slots)) and max_steps:
+            before = [r for r in self.slots if r is not None]
+            self.step()
+            finished.extend(r for r in before if r.done)
+            max_steps -= 1
+        return finished

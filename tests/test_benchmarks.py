@@ -1,0 +1,96 @@
+"""Benchmark-result invariants: the paper's claimed orderings must hold in
+our regenerated artifacts (runs the fast benchmarks in-process; table1/fig12
+artifacts are used when present, else skipped — they need the trained
+tiny-LM)."""
+import json
+import os
+
+import pytest
+
+RES = os.path.join(os.path.dirname(__file__), "..", "benchmarks", "results")
+
+
+def _load(name):
+    path = os.path.join(RES, name)
+    if not os.path.exists(path):
+        pytest.skip(f"{name} not generated yet (run python -m benchmarks.run)")
+    with open(path) as f:
+        return json.load(f)
+
+
+def test_fig13_model_inside_paper_ranges():
+    from benchmarks.fig13_efficiency import level_savings
+    s7 = level_savings(7, dynamic=False)
+    s5 = level_savings(5, dynamic=False)
+    # PE level (paper: 23-26% area, 31-34% power)
+    assert 0.22 <= s7["area"]["pe"] <= 0.26
+    assert 0.22 <= s5["area"]["pe"] <= 0.27
+    assert 0.30 <= s7["power"]["pe"] <= 0.34
+    assert 0.30 <= s5["power"]["pe"] <= 0.35
+    # L=5 strictly cheaper than L=7 (paper Fig. 13)
+    assert s5["area"]["pe"] > s7["area"]["pe"]
+    assert s5["power"]["pe"] > s7["power"]["pe"]
+    # DPU dilution (paper: 2-3% area, 10-12% power)
+    assert 0.015 <= s7["area"]["dpu"] <= 0.035
+    assert 0.09 <= s7["power"]["dpu"] <= 0.13
+    # dynamic config costs area at DPU level (paper: ~3% overhead)
+    d7 = level_savings(7, dynamic=True)
+    assert -0.05 <= d7["area"]["dpu"] <= -0.01
+
+
+def test_table1_orderings():
+    rows = _load("table1.json")
+    ce = {(r["method"], r["p"]): r["eval_ce"] for r in rows}
+    int8 = ce[("int8_baseline", 0.0)]
+    # paper: <1%-equivalent loss for DLIQ/MIP2Q at p<=0.5, sparsity collapses
+    for m in ("dliq", "mip2q"):
+        for p in (0.25, 0.5):
+            assert ce[(m, p)] - int8 < 0.02, (m, p)
+    assert ce[("sparsity", 0.75)] - int8 > 0.3
+    assert ce[("sparsity", 0.5)] > max(ce[("dliq", 0.5)], ce[("mip2q", 0.5)])
+
+
+def test_fig11_orderings():
+    rows = _load("fig11.json")
+    blocks = {r["w"]: r["sqnr_db"] for r in rows if r["sweep"] == "block"}
+    assert blocks[64] > blocks[16] > blocks[4]          # larger blocks better
+    pl = {(r["p"], r["L"]): r["sqnr_db"] for r in rows if r["sweep"] == "pL"}
+    assert pl[(0.25, 7)] > pl[(0.5, 7)] > pl[(0.75, 7)]  # smaller p better
+    assert pl[(0.5, 7)] > pl[(0.5, 3)] > pl[(0.5, 1)]    # larger L better
+    # L=5 close to L=7 (paper: "comparable" — on *accuracy*, a saturating
+    # metric; SQNR resolves a few dB of clipping loss that accuracy hides)
+    assert abs(pl[(0.5, 7)] - pl[(0.5, 5)]) < 5.0
+
+
+def test_dryrun_all_cells_green():
+    rows = _load("dryrun.json")
+    by_mesh = {}
+    for r in rows:
+        by_mesh.setdefault(r["mesh"], []).append(r)
+    for mesh, rs in by_mesh.items():
+        assert len(rs) == 40, (mesh, len(rs))
+        bad = [r for r in rs if r["status"] != "OK"
+               and not r["status"].startswith("SKIP")]
+        assert not bad, bad
+        skips = [r for r in rs if r["status"].startswith("SKIP")]
+        assert len(skips) == 8, (mesh, len(skips))  # full-attn long_500k
+        assert all(r["shape"] == "long_500k" for r in skips)
+
+
+def test_perf_iterations_recorded():
+    rows = _load("perf_iters.json")
+    variants = {(r["arch"], r["shape"], r.get("variant")) for r in rows
+                if r["status"] == "OK"}
+    # the three hillclimb cells each have at least two recorded iterations
+    for arch, shape in [("mamba2_780m", "train_4k"),
+                        ("musicgen_medium", "prefill_32k"),
+                        ("jamba_1_5_large_398b", "decode_32k")]:
+        n = sum(1 for a, s, _ in variants if (a, s) == (arch, shape))
+        assert n >= 2, (arch, shape, n)
+    # the headline win: jamba packed_experts beat the baseline collective
+    base = [r for r in _load("dryrun.json")
+            if r["arch"] == "jamba_1_5_large_398b" and r["shape"] == "decode_32k"
+            and r["mesh"] == "16x16" and r["status"] == "OK"][0]
+    opt = [r for r in rows if r.get("variant") == "packed_experts"
+           and r["arch"] == "jamba_1_5_large_398b" and r["shape"] == "decode_32k"][0]
+    assert opt["roofline"]["collective_s"] < 0.3 * base["roofline"]["collective_s"]

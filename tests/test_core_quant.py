@@ -1,0 +1,173 @@
+"""Unit + property tests for the StruM core (quantizers, masks, invariants)."""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blocking
+from repro.core.policy import StruMConfig, q_for_L
+from repro.core.quantizers import (dliq, int8_symmetric, magnitude_low_mask,
+                                   mip2q, n_low_for_p, pow2_error_low_mask,
+                                   pow2_round, quantize_blocks,
+                                   structured_sparsity)
+
+BLOCKS = st.integers(1, 6)
+W = st.sampled_from([4, 8, 16])
+
+
+def _codes(rng, nb, w, n=3):
+    return jnp.asarray(rng.integers(-127, 128, size=(nb, w, n)), jnp.int32)
+
+
+# ------------------------------------------------------------ invariants --
+
+@given(nb=BLOCKS, w=W, seed=st.integers(0, 999))
+@settings(max_examples=40, deadline=None)
+def test_fixed_low_count_per_block(nb, w, seed):
+    """THE structural property (paper §IV-A): exactly p·w low per block."""
+    rng = np.random.default_rng(seed)
+    codes = _codes(rng, nb, w)
+    for p in (0.25, 0.5, 0.75):
+        n_low = n_low_for_p(p, w)
+        for method in ("sparsity", "dliq", "mip2q"):
+            qb = quantize_blocks(codes, method, n_low, q=4, L=7)
+            counts = np.asarray(qb.low_mask.sum(axis=1))
+            assert (counts == n_low).all(), (method, p, w)
+
+
+@given(seed=st.integers(0, 999))
+@settings(max_examples=30, deadline=None)
+def test_high_set_unmodified(seed):
+    """Values in the high-precision set stay bit-identical to INT8."""
+    rng = np.random.default_rng(seed)
+    codes = _codes(rng, 4, 16)
+    for method in ("sparsity", "dliq", "mip2q"):
+        qb = quantize_blocks(codes, method, 8, q=4, L=7)
+        same = np.asarray(qb.values == codes)
+        assert same[~np.asarray(qb.low_mask)].all(), method
+
+
+@given(seed=st.integers(0, 999), L=st.sampled_from([3, 5, 7]))
+@settings(max_examples=30, deadline=None)
+def test_mip2q_low_values_are_pow2(seed, L):
+    rng = np.random.default_rng(seed)
+    codes = _codes(rng, 4, 16)
+    qb = mip2q(codes, 8, L=L)
+    low_vals = np.abs(np.asarray(qb.values)[np.asarray(qb.low_mask)])
+    assert ((low_vals & (low_vals - 1)) == 0).all() and (low_vals > 0).all()
+    assert low_vals.max() <= 2 ** L
+
+
+@given(seed=st.integers(0, 999), q=st.sampled_from([2, 3, 4]))
+@settings(max_examples=30, deadline=None)
+def test_dliq_low_values_are_q_bit(seed, q):
+    """DLIQ low values are multiples of 2^(8-q) within the q-bit range."""
+    rng = np.random.default_rng(seed)
+    codes = _codes(rng, 4, 16)
+    qb = dliq(codes, 8, q=q)
+    low_vals = np.asarray(qb.values)[np.asarray(qb.low_mask)]
+    step = 1 << (8 - q)
+    assert (low_vals % step == 0).all()
+    assert np.abs(low_vals // step).max() <= (1 << (q - 1)) - 1
+
+
+def test_sparsity_zeroes_smallest():
+    codes = jnp.asarray(
+        np.array([[1, -2, 3, -4, 5, -6, 7, -8]]).T.reshape(1, 8, 1))
+    qb = structured_sparsity(codes, 4)
+    vals = np.asarray(qb.values)[0, :, 0]
+    np.testing.assert_array_equal(vals, [0, 0, 0, 0, 5, -6, 7, -8])
+
+
+# --------------------------------------- MIP2Q exhaustive-search exactness --
+
+def _brute_force_mip2q_error(codes_1d, n_low, L):
+    """Paper's formulation: min over all C(w, n_low) masks of the L2 error."""
+    w = len(codes_1d)
+    p2 = np.asarray(pow2_round(jnp.asarray(codes_1d).reshape(1, w, 1), L))[0, :, 0]
+    best = np.inf
+    for low_idx in itertools.combinations(range(w), n_low):
+        err = sum((codes_1d[i] - p2[i]) ** 2 for i in low_idx)
+        best = min(best, err)
+    return best
+
+
+@given(seed=st.integers(0, 200), L=st.sampled_from([3, 7]))
+@settings(max_examples=20, deadline=None)
+def test_mip2q_mask_matches_exhaustive_search(seed, L):
+    """Our closed-form argmin == the paper's exhaustive search (w=8, C(8,4)=70)."""
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(-127, 128, size=8).astype(np.int64)
+    qb = mip2q(jnp.asarray(codes.reshape(1, 8, 1), jnp.int32), 4, L=L)
+    ours = int(np.sum((codes - np.asarray(qb.values)[0, :, 0]) ** 2))
+    brute = int(_brute_force_mip2q_error(codes, 4, L))
+    assert ours == brute
+
+
+# --------------------------------------------------------------- pow2 etc --
+
+def test_pow2_round_nearest_linear():
+    v = jnp.asarray([0, 1, 2, 3, 5, 6, 7, 96, 97, -3, -5, 127]).reshape(1, 12, 1)
+    got = np.asarray(pow2_round(v, 7))[0, :, 0]
+    # linear-nearest; exact ties (3, 6, 96) round toward the smaller
+    # magnitude (equal L2, smaller bias)
+    np.testing.assert_array_equal(
+        got, [1, 1, 2, 2, 4, 4, 8, 64, 128, -2, -4, 128])
+
+
+def test_q_for_L():
+    assert q_for_L(7) == 4   # paper: L=7 -> 4 bits
+    assert q_for_L(5) == 4   # paper: L=5 still needs 4 bits
+    assert q_for_L(3) == 3   # paper: L=3 -> 3 bits
+
+
+def test_int8_symmetric_bounds():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(64, 8)).astype(np.float32))
+    codes, scale = int8_symmetric(x, axis=0)
+    assert int(jnp.max(jnp.abs(codes.astype(jnp.int32)))) <= 127
+    err = jnp.max(jnp.abs(x - codes.astype(jnp.float32) * scale))
+    assert float(err) <= float(jnp.max(scale)) / 2 + 1e-6
+
+
+# -------------------------------------------------- error-quality ordering --
+
+def test_method_error_ordering_matches_paper():
+    """sparsity >> dliq ~ mip2q (paper Fig. 10-12, Table I)."""
+    rng = np.random.default_rng(42)
+    x = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
+    codes, _ = int8_symmetric(x, axis=0)
+    blocks = blocking.to_blocks(codes, 16)
+    c32 = blocks.astype(jnp.float32)
+
+    def err(method, **kw):
+        qb = quantize_blocks(blocks, method, 8, **{**dict(q=4, L=7), **kw})
+        return float(jnp.linalg.norm((qb.values - c32).ravel()))
+
+    e_sp, e_dl, e_mp = err("sparsity"), err("dliq"), err("mip2q")
+    assert e_sp > 3 * e_dl and e_sp > 3 * e_mp
+    # exact-argmin MIP2Q is L2-optimal among {masks} so <= DLIQ's mask choice
+    assert e_mp <= e_dl * 1.25
+
+
+def test_larger_p_larger_error():
+    rng = np.random.default_rng(7)
+    codes = _codes(rng, 16, 16, n=8)
+    c32 = codes.astype(jnp.float32)
+    errs = []
+    for p in (0.25, 0.5, 0.75):
+        qb = mip2q(codes, n_low_for_p(p, 16), L=7)
+        errs.append(float(jnp.linalg.norm((qb.values - c32).ravel())))
+    assert errs[0] <= errs[1] <= errs[2]
+
+
+def test_strum_config_validation():
+    with pytest.raises(ValueError):
+        StruMConfig(method="nope")
+    cfg = StruMConfig(method="mip2q", L=5)
+    assert cfg.q == 4
+    assert abs(cfg.compression_ratio - 0.875) < 1e-9
+    sp = StruMConfig(method="sparsity", p=0.5)
+    assert abs(sp.compression_ratio - 0.625) < 1e-9

@@ -1,0 +1,55 @@
+"""Dynamic per-layer p (paper §VIII future work) — selection semantics."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.apply import fake_quantize_tree
+from repro.core.dynamic_p import achieved_ratio, choose_layer_p, dynamic_policy
+from repro.core.metrics import sqnr_db
+
+
+def _params():
+    rng = np.random.default_rng(0)
+    return {
+        # near-pow2 weights: very MIP2Q-friendly -> should get large p
+        "friendly": {"w": jnp.asarray(
+            (2.0 ** rng.integers(0, 5, size=(64, 32))
+             * rng.choice([-1, 1], size=(64, 32))).astype(np.float32))},
+        # heavy-tailed: harder -> smaller p or int8
+        "hard": {"w": jnp.asarray(
+            rng.standard_t(1.2, size=(64, 32)).astype(np.float32))},
+    }
+
+
+def test_friendly_tensors_get_larger_p():
+    params = _params()
+    chosen = choose_layer_p(params, sqnr_floor_db=28.0)
+    f = chosen["friendly/w"]
+    assert f is not None and f.p == 0.75   # pow2 grid quantizes losslessly-ish
+
+
+def test_floor_monotonicity():
+    """Raising the floor can only lower (or drop) each tensor's p."""
+    params = _params()
+    lo = choose_layer_p(params, sqnr_floor_db=20.0)
+    hi = choose_layer_p(params, sqnr_floor_db=40.0)
+    for name in lo:
+        p_lo = lo[name].p if lo[name] else 0.0
+        p_hi = hi[name].p if hi[name] else 0.0
+        assert p_hi <= p_lo
+
+
+def test_dynamic_policy_applies_per_tensor():
+    params = _params()
+    chosen = choose_layer_p(params, sqnr_floor_db=28.0)
+    pol = dynamic_policy(chosen)
+    qp = fake_quantize_tree(params, pol, baseline_int8=False)
+    # friendly tensor quantized at its chosen config, SQNR above floor
+    s = float(sqnr_db(params["friendly"]["w"], qp["friendly"]["w"]))
+    assert s >= 28.0
+
+
+def test_achieved_ratio_bounds():
+    params = _params()
+    chosen = choose_layer_p(params, sqnr_floor_db=28.0)
+    r = achieved_ratio(chosen, params)
+    assert 0.5 <= r <= 1.0

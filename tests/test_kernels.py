@@ -1,0 +1,82 @@
+"""Pallas kernel sweeps vs the pure-jnp oracle (interpret mode on CPU)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.apply import pack_array
+from repro.core.policy import StruMConfig
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _case(m, k, n, method="mip2q", p=0.5, dtype=np.float32, **kw):
+    cfg = StruMConfig(method=method, p=p, **kw)
+    wt = jnp.asarray(RNG.normal(size=(k, n)).astype(np.float32))
+    x = jnp.asarray(RNG.normal(size=(m, k)).astype(dtype))
+    packed = pack_array(wt, cfg)
+    return x, packed
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 16, 128), (4, 96, 200), (17, 160, 384), (8, 48, 130),
+    (33, 272, 96), (128, 128, 128),
+])
+@pytest.mark.parametrize("method", ["sparsity", "dliq", "mip2q"])
+def test_matmul_shapes(m, k, n, method):
+    x, packed = _case(m, k, n, method=method)
+    y = ops.strum_matmul(x, packed, interpret=True)
+    y_ref = ref.strum_matmul_ref(x, packed)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("p", [0.25, 0.5, 0.75])
+@pytest.mark.parametrize("method,kw", [
+    ("dliq", {"q": 4}), ("dliq", {"q": 2}),
+    ("mip2q", {"L": 7}), ("mip2q", {"L": 5}), ("mip2q", {"L": 3}),
+])
+def test_matmul_params(p, method, kw):
+    x, packed = _case(5, 112, 192, method=method, p=p, **kw)
+    y = ops.strum_matmul(x, packed, interpret=True)
+    y_ref = ref.strum_matmul_ref(x, packed)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    x, packed = _case(4, 64, 160, dtype=np.float32)
+    x = x.astype(dtype)
+    y = ops.strum_matmul(x, packed, interpret=True, out_dtype=jnp.float32)
+    y_ref = ref.strum_matmul_ref(x.astype(jnp.float32), packed)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=tol, atol=tol)
+
+
+def test_gemv_decode_path():
+    x, packed = _case(1, 256, 512)
+    y = ops.strum_gemv(x, packed, interpret=True)
+    y_ref = ref.strum_matmul_ref(x, packed)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_matmul_leading_dims():
+    cfg = StruMConfig(method="mip2q", p=0.5, L=5)
+    wt = jnp.asarray(RNG.normal(size=(48, 96)).astype(np.float32))
+    x = jnp.asarray(RNG.normal(size=(2, 3, 48)).astype(np.float32))
+    packed = pack_array(wt, cfg)
+    y = ops.strum_matmul(x, packed, interpret=True)
+    assert y.shape == (2, 3, 96)
+    y_ref = ref.strum_matmul_ref(x.reshape(-1, 48), packed).reshape(2, 3, 96)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_kernel_streams_fewer_bytes():
+    """The whole point: the packed operands are r× the int8 bytes."""
+    _, packed = _case(1, 1024, 512)
+    int8_bytes = 1024 * 512
+    assert packed.payload_bytes() / int8_bytes == pytest.approx(0.875)

@@ -1,0 +1,107 @@
+"""MoE dispatch/combine correctness + capacity semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.moe import _capacity, _moe_local, moe_apply, moe_def
+from repro.models.params import init_params
+
+
+def _setup(seed=0, t=32, d=16, e=4, f=32, k=2):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(t, d)).astype(np.float32))
+    router = jnp.asarray(rng.normal(size=(d, e)).astype(np.float32))
+    wi = jnp.asarray(rng.normal(size=(e, d, f)).astype(np.float32) / np.sqrt(d))
+    wg = jnp.asarray(rng.normal(size=(e, d, f)).astype(np.float32) / np.sqrt(d))
+    wo = jnp.asarray(rng.normal(size=(e, f, d)).astype(np.float32) / np.sqrt(f))
+    return x, router, wi, wg, wo
+
+
+class _Cfg:
+    n_experts = 4
+    top_k = 2
+    capacity_factor = 8.0   # ample: no drops
+    gated_mlp = True
+
+
+def _dense_reference(x, router, wi, wg, wo, k=2):
+    """All-experts dense compute combined by normalized top-k weights."""
+    logits = x @ router
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)
+    topw = topw / topw.sum(-1, keepdims=True)
+    h = jnp.einsum("td,edf->etf", x, wi)
+    g = jnp.einsum("td,edf->etf", x, wg)
+    out_e = jnp.einsum("etf,efd->etd", jax.nn.silu(g) * h, wo)
+    y = jnp.zeros_like(x)
+    for slot in range(k):
+        w_slot = topw[:, slot][:, None]
+        y = y + w_slot * jnp.take_along_axis(
+            out_e, topi[:, slot][None, :, None], axis=0)[0]
+    return y
+
+
+def test_moe_local_matches_dense_reference():
+    x, router, wi, wg, wo = _setup()
+    cap = _capacity(x.shape[0], _Cfg)
+    y, (df, pf) = _moe_local(x, router, wi, wg, wo, _Cfg, 0, cap)
+    want = _dense_reference(x, router, wi, wg, wo)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    assert float(_Cfg.n_experts * jnp.sum(df * pf)) > 0
+
+
+def test_moe_capacity_drops_tokens():
+    """With capacity 1, most tokens drop — outputs bounded, no NaN."""
+    x, router, wi, wg, wo = _setup()
+
+    class Tiny(_Cfg):
+        capacity_factor = 0.01
+    y, _ = _moe_local(x, router, wi, wg, wo, Tiny, 0,
+                      max(int(0.01 * 16), 1))
+    assert bool(jnp.isfinite(y).all())
+    # dropped tokens produce zero output rows
+    norms = jnp.linalg.norm(y, axis=-1)
+    assert float(jnp.min(norms)) == 0.0
+
+
+def test_moe_expert_locality_partition():
+    """Sum of per-shard local computations == full-expert computation."""
+    x, router, wi, wg, wo = _setup()
+    cap = _capacity(x.shape[0], _Cfg)
+    y_full, _ = _moe_local(x, router, wi, wg, wo, _Cfg, 0, cap)
+    y_sum = jnp.zeros_like(y_full)
+    for off in (0, 2):   # two "shards" of 2 experts each
+        y_part, _ = _moe_local(x, router, wi[off:off + 2], wg[off:off + 2],
+                               wo[off:off + 2], _Cfg, off, cap)
+        y_sum = y_sum + y_part
+    np.testing.assert_allclose(np.asarray(y_sum), np.asarray(y_full),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_moe_apply_shapes_and_aux():
+    cfg = get_smoke_config("qwen3_moe_235b_a22b")
+    p = init_params({"m": moe_def(cfg)}, seed=1)["m"]
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(2, 16, cfg.d_model))
+                    .astype(np.float32))
+    y, aux = moe_apply(p, x, cfg, mesh=None)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all()) and float(aux) > 0
+
+
+def test_gradients_flow_through_moe():
+    cfg = get_smoke_config("moonshot_v1_16b_a3b")
+    p = init_params({"m": moe_def(cfg)}, seed=1)["m"]
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(1, 8, cfg.d_model))
+                    .astype(np.float32))
+
+    def loss(p):
+        y, aux = moe_apply(p, x, cfg, mesh=None)
+        return jnp.sum(y ** 2) + 0.01 * aux
+
+    g = jax.grad(loss)(p)
+    gn = sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+    # router gets gradient through combine weights AND aux loss
+    assert float(jnp.sum(jnp.abs(g["router"]["w"]))) > 0

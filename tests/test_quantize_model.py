@@ -1,0 +1,80 @@
+"""Model-level StruM: compressed serving params == fake-quant reference."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.policy import StruMConfig
+from repro.models import forward_train, model_defs
+from repro.models.layers import linear
+from repro.models.params import init_params
+from repro.models.quantize import serve_tree_bytes, strum_serve_params
+
+
+def _cfg(method="mip2q", **kw):
+    base = get_smoke_config("qwen2_7b")
+    return dataclasses.replace(base, strum=StruMConfig(method=method, **kw))
+
+
+def test_compressed_linear_matches_dequant():
+    cfg = _cfg()
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(4, 64)).astype(np.float32))
+    from repro.models.quantize import _pack_leaf
+    from repro.core.apply import fake_quantize_array
+    packed = _pack_leaf(w, cfg.strum)
+    y = linear({"w": packed}, x, strum=cfg.strum)
+    y_want = x @ fake_quantize_array(w, cfg.strum)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_path_matches_jnp_path():
+    cfg = _cfg(L=5)
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(size=(96, 48)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(3, 96)).astype(np.float32))
+    from repro.models.quantize import _pack_leaf
+    packed = _pack_leaf(w, cfg.strum)
+    y_jnp = linear({"w": packed}, x, strum=cfg.strum, use_kernel=False)
+    y_krn = linear({"w": packed}, x, strum=cfg.strum, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(y_jnp), np.asarray(y_krn),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_serve_params_forward_close_to_dense():
+    """<small logit drift for p=0.5 MIP2Q — the 'no retraining' claim."""
+    cfg = _cfg(L=7, p=0.5)
+    params = init_params(model_defs(cfg), seed=0, dtype_override="float32")
+    served = strum_serve_params(params, cfg)
+    batch = {"tokens": jnp.ones((1, 16), jnp.int32)}
+    lg_d, _ = forward_train(params, batch, dataclasses.replace(cfg, strum=None))
+    lg_q, _ = forward_train(served, batch, cfg)
+    # compare softmax distributions, not raw logits
+    pd = jax.nn.softmax(lg_d[0, -1])
+    pq = jax.nn.softmax(lg_q[0, -1])
+    tv = 0.5 * float(jnp.sum(jnp.abs(pd - pq)))
+    assert tv < 0.15, tv
+
+
+def test_serve_bytes_shrink():
+    cfg = _cfg()
+    params = init_params(model_defs(cfg), seed=0, dtype_override="float32")
+    served = strum_serve_params(params, cfg)
+    assert serve_tree_bytes(served) < 0.5 * serve_tree_bytes(params)
+
+
+def test_excluded_layers_stay_dense():
+    cfg = _cfg()
+    params = init_params(model_defs(cfg), seed=0, dtype_override="float32")
+    served = strum_serve_params(params, cfg)
+    # embeddings + norms + biases untouched
+    assert isinstance(served["embed"]["table"], jnp.ndarray)
+    blk = served["blocks"]["pos0"]
+    assert isinstance(blk["norm1"]["scale"], jnp.ndarray)
+    assert isinstance(blk["attn"]["wq"]["b"], jnp.ndarray)   # qkv bias dense
+    assert isinstance(blk["attn"]["wq"]["w"], dict)          # kernel packed
+    assert "mask" in blk["attn"]["wq"]["w"]

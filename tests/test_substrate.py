@@ -1,0 +1,150 @@
+"""Optimizer, data pipeline, checkpointing, gradient-compression tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.data.pipeline import DataConfig, global_batch, host_shard
+from repro.optim.adamw import (AdamWConfig, adamw_update, global_norm,
+                               init_opt_state, warmup_cosine)
+from repro.runtime.compression import (compress_grad, compress_tree_with_ef,
+                                       init_ef_state, payload_ratio)
+
+
+# ---------------------------------------------------------------- optim --
+
+def test_adamw_minimizes_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                      weight_decay=0.0, clip_norm=100.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = init_opt_state(params)
+    for _ in range(100):
+        g = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        params, state, _ = adamw_update(cfg, params, g, state)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+
+
+def test_grad_clipping():
+    cfg = AdamWConfig(clip_norm=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros(4)}
+    g = {"w": jnp.full(4, 100.0)}
+    _, _, stats = adamw_update(cfg, params, g, init_opt_state(params))
+    assert float(stats["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_warmup_cosine_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    assert float(warmup_cosine(cfg, jnp.int32(0))) == 0.0
+    assert float(warmup_cosine(cfg, jnp.int32(10))) == pytest.approx(1.0, abs=0.01)
+    assert float(warmup_cosine(cfg, jnp.int32(100))) == pytest.approx(0.1, abs=0.01)
+
+
+# ----------------------------------------------------------------- data --
+
+def test_data_deterministic():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4)
+    b1, b2 = global_batch(cfg, 7), global_batch(cfg, 7)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = global_batch(cfg, 8)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+
+
+def test_host_shards_partition_global():
+    cfg = DataConfig(vocab_size=50, seq_len=8, global_batch=8)
+    full = global_batch(cfg, 3)
+    parts = [host_shard(cfg, 3, h, 4) for h in range(4)]
+    stitched = np.concatenate([np.asarray(p["tokens"]) for p in parts])
+    np.testing.assert_array_equal(stitched, np.asarray(full["tokens"]))
+
+
+def test_labels_are_next_tokens():
+    cfg = DataConfig(vocab_size=50, seq_len=8, global_batch=2)
+    b = global_batch(cfg, 0)
+    # tokens[t+1] == labels[t] by construction
+    np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                  np.asarray(b["labels"][:, :-1]))
+
+
+# ----------------------------------------------------------- checkpoints --
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones(4, jnp.bfloat16)},
+            "step": jnp.int32(7)}
+    ckpt.save(str(tmp_path), 5, tree, extras={"note": "x"})
+    back, step, extras = ckpt.restore(str(tmp_path), tree)
+    assert step == 5 and extras["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_uncommitted_invisible(tmp_path):
+    tree = {"a": jnp.ones(2)}
+    d = ckpt.save(str(tmp_path), 1, tree)
+    os.remove(os.path.join(d, "COMMITTED"))
+    assert ckpt.latest_step(str(tmp_path)) is None
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path), tree)
+
+
+def test_checkpoint_gc_keep(tmp_path):
+    tree = {"a": jnp.ones(2)}
+    for s in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), s, tree)
+    ckpt.gc_keep(str(tmp_path), keep=2)
+    assert ckpt.latest_step(str(tmp_path)) == 4
+    assert sorted(os.listdir(str(tmp_path)))[-2:] == ["step_000000003",
+                                                      "step_000000004"]
+    assert len(os.listdir(str(tmp_path))) == 2
+
+
+def test_checkpoint_shape_mismatch(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"a": jnp.ones((2, 2))})
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), {"a": jnp.ones((3, 3))})
+
+
+# ---------------------------------------------------- grad compression --
+
+def test_compress_grad_bounded_error():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(64, 32)).astype(np.float32))
+    dec = compress_grad(g)
+    rel = float(jnp.linalg.norm(dec - g) / jnp.linalg.norm(g))
+    assert rel < 0.05   # p=0.5 pow2 on the best-fitting half: tiny error
+
+
+def test_error_feedback_accumulates_residual():
+    rng = np.random.default_rng(1)
+    grads = {"w": jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32)),
+             "b": jnp.asarray(rng.normal(size=(16,)).astype(np.float32))}
+    state = init_ef_state(grads)
+    dec, state = compress_tree_with_ef(grads, state)
+    # 1-D passes through exactly
+    np.testing.assert_array_equal(np.asarray(dec["b"]), np.asarray(grads["b"]))
+    # residual = g - dec for matrices
+    np.testing.assert_allclose(np.asarray(state.residual["w"]),
+                               np.asarray(grads["w"] - dec["w"]),
+                               rtol=1e-6, atol=1e-6)
+    # telescoping: sum of decoded over steps tracks sum of true grads
+    tot_dec = np.zeros((32, 16), np.float32)
+    tot_true = np.zeros((32, 16), np.float32)
+    st = init_ef_state(grads)
+    for i in range(20):
+        g = {"w": jnp.asarray(np.random.default_rng(i).normal(size=(32, 16))
+                              .astype(np.float32)), "b": grads["b"]}
+        d, st = compress_tree_with_ef(g, st)
+        tot_dec += np.asarray(d["w"])
+        tot_true += np.asarray(g["w"])
+    drift = np.linalg.norm(tot_dec - tot_true) / np.linalg.norm(tot_true)
+    assert drift < 0.02   # bias telescopes away
+
+
+def test_payload_ratio():
+    assert payload_ratio(0.5, 4, 16) == pytest.approx((0.5 * -12 + 17) / 16)

@@ -1,0 +1,96 @@
+"""End-to-end behaviour tests: train → quality orderings → PTQ → serve."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.apply import fake_quantize_tree
+from repro.core.policy import StruMConfig, default_policy
+from repro.data.pipeline import DataConfig, global_batch
+from repro.launch.steps import make_train_step
+from repro.models import model_defs
+from repro.models.params import init_params
+from repro.models.transformer import loss_fn
+from repro.optim.adamw import AdamWConfig, init_opt_state
+
+CFG = ModelConfig(name="sys_tiny", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+                  remat=False, attn_chunk=32)
+DATA = DataConfig(vocab_size=256, seq_len=64, global_batch=8, seed=3)
+
+
+@pytest.fixture(scope="module")
+def trained():
+    params = init_params(model_defs(CFG), seed=0, dtype_override="float32")
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(
+        CFG, AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=120)))
+    losses = []
+    for s in range(120):
+        params, opt, m = step(params, opt, global_batch(DATA, s))
+        losses.append(float(m["ce"]))
+    return params, losses
+
+
+def _eval_ce(params):
+    f = jax.jit(lambda p, b: loss_fn(p, b, CFG)[1]["ce"])
+    return float(np.mean([float(f(params, global_batch(DATA, 9000 + i)))
+                          for i in range(3)]))
+
+
+def test_training_reduces_loss(trained):
+    _, losses = trained
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.5
+
+
+def test_ptq_quality_ordering(trained):
+    """Table I structure: int8 ~ fp32; DLIQ/MIP2Q(p=.5) within ~1%;
+    sparsity(p=.5) clearly worse — all WITHOUT retraining."""
+    params, _ = trained
+    base = _eval_ce(params)
+    int8 = _eval_ce(fake_quantize_tree(params, default_policy(None)))
+    assert abs(int8 - base) < 0.05
+
+    ce = {}
+    for method, kw in [("sparsity", {}), ("dliq", dict(q=4)),
+                       ("mip2q", dict(L=7))]:
+        scfg = StruMConfig(method=method, p=0.5, **kw)
+        ce[method] = _eval_ce(fake_quantize_tree(params, default_policy(scfg)))
+    # mixed precision stays near baseline; sparsity does not
+    assert ce["dliq"] - int8 < 0.10
+    assert ce["mip2q"] - int8 < 0.10
+    assert ce["sparsity"] > max(ce["dliq"], ce["mip2q"])
+
+
+def test_compressed_serving_generates_same_tokens(trained):
+    params, _ = trained
+    from repro.launch.serve import serve
+    from repro.models.quantize import strum_serve_params
+    scfg = StruMConfig(method="mip2q", p=0.5, L=7)
+    mcfg = dataclasses.replace(CFG, strum=scfg)
+    served = strum_serve_params(params, mcfg)
+    prompt = global_batch(DATA, 50)["tokens"][:2, :24]
+    toks_d, _, _ = serve(dataclasses.replace(CFG, strum=None), params,
+                         prompt, 8, {})
+    toks_q, _, _ = serve(mcfg, served, prompt, 8, {})
+    agree = float(jnp.mean((toks_d == toks_q).astype(jnp.float32)))
+    assert agree > 0.7, agree
+
+
+def test_grad_compression_training_converges():
+    """MIP2Q-compressed gradients + error feedback still learn."""
+    from repro.runtime import compression as gcomp
+    params = init_params(model_defs(CFG), seed=1, dtype_override="float32")
+    opt = init_opt_state(params)
+    ef = gcomp.init_ef_state(params)
+    step = jax.jit(make_train_step(
+        CFG, AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=80),
+        grad_compression=True))
+    losses = []
+    for s in range(80):
+        params, opt, ef, m = step(params, opt, ef, global_batch(DATA, s))
+        losses.append(float(m["ce"]))
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.4
