@@ -1,0 +1,110 @@
+"""Autotune Pareto frontier: searched schedules vs fixed configs (beyond
+Fig. 12 — the paper's §VIII per-layer future work, industrialized).
+
+Sweeps byte budgets through ``repro.autotune.search_schedule`` on the
+trained tiny-LM and plots (in JSON) the accuracy-vs-compression frontier the
+searched schedules trace, next to the fixed uniform-config points of the
+fig12 grid.  Quality is reported two ways: the search's own proxy (bytes-
+weighted mean weight SQNR) and the application-level held-out CE, so the
+proxy's fidelity is itself measurable.
+
+Invariant (asserted here and in tests): at the default config's budget the
+searched schedule matches or beats uniform ``StruMConfig()`` — ≥ weighted
+SQNR at ≤ bytes — because the uniform assignment is a feasible point of the
+search space.  ``dominates_default`` records the check.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.common import RESULTS_DIR, eval_ce, trained_tiny_lm
+from repro.autotune import (Budget, DEFAULT_GRID, config_key, profile_tree,
+                            search_schedule)
+from repro.core.apply import fake_quantize_tree
+from repro.core.policy import StruMConfig, default_policy
+
+#: byte budgets swept (packed/int8 ratio); 0.875 is the default config's
+TARGETS = (0.45, 0.55, 0.65, 0.75, 0.875, 0.95)
+
+
+def _weighted_sqnr(profile, policy) -> float:
+    """Bytes-weighted mean SQNR of a uniform policy over profiled tensors."""
+    tot = acc = 0
+    for name, row in profile.items():
+        cfg = policy.default
+        s = row["sqnr_db"][config_key(cfg)]
+        acc += s * row["size"]
+        tot += row["size"]
+    return acc / max(tot, 1)
+
+
+def run():
+    t0 = time.time()
+    cfg, params, _ = trained_tiny_lm()
+    grid = DEFAULT_GRID
+    profile = profile_tree(params, grid)   # cached: one pass feeds everything
+
+    rows = []
+    # fixed uniform points: the search grid itself, measured on the proxy
+    # (plus the paper-default config), so fixed and searched points are
+    # guaranteed to share one candidate space
+    fixed = [StruMConfig()] + list(grid)
+    seen = set()
+    for scfg in fixed:
+        key = config_key(scfg)
+        if key in seen:
+            continue
+        seen.add(key)
+        pol = default_policy(scfg)
+        rows.append({
+            "kind": "fixed", "config": key, "r": scfg.compression_ratio,
+            "weighted_sqnr_db": _weighted_sqnr(profile, pol),
+            "eval_ce": eval_ce(cfg, fake_quantize_tree(params, pol)),
+        })
+
+    # searched schedules across the budget sweep
+    for target in TARGETS:
+        sched = search_schedule(params, Budget(target_ratio=target),
+                                grid=grid, profile=profile)
+        qp = fake_quantize_tree(params, schedule=sched)
+        rows.append({
+            "kind": "searched", "config": f"budget_r{target:g}",
+            "target_r": target,
+            "r": sched.meta["achieved_ratio"],
+            "weighted_sqnr_db": sched.meta["weighted_sqnr_db"],
+            "eval_ce": eval_ce(cfg, qp),
+            "config_distribution": sched.summary()["config_distribution"],
+        })
+
+    # domination check vs the uniform default at its own budget
+    default_cfg = StruMConfig()
+    base = next(r for r in rows if r["kind"] == "fixed"
+                and r["config"] == config_key(default_cfg))
+    at_budget = next(r for r in rows if r["kind"] == "searched"
+                     and r.get("target_r") == default_cfg.compression_ratio)
+    dominates = (at_budget["r"] <= base["r"] + 1e-9
+                 and at_budget["weighted_sqnr_db"]
+                 >= base["weighted_sqnr_db"] - 1e-6)
+    assert dominates, (
+        "searched schedule fails to dominate the uniform default: "
+        f"searched (r={at_budget['r']:.4f}, "
+        f"{at_budget['weighted_sqnr_db']:.2f} dB) vs uniform "
+        f"(r={base['r']:.4f}, {base['weighted_sqnr_db']:.2f} dB)")
+
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "autotune_pareto.json"), "w") as f:
+        json.dump({"rows": rows, "dominates_default": dominates}, f, indent=1)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"autotune_pareto/{r['kind']}_{r['config'].replace('/', '_')},"
+              f"{(time.time()-t0)*1e6/len(rows):.0f},"
+              f"r={r['r']:.4f};wsqnr_db={r['weighted_sqnr_db']:.2f};"
+              f"eval_ce={r['eval_ce']:.4f}")
+    print(f"autotune_pareto: searched-dominates-default={dominates}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

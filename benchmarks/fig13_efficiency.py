@@ -1,24 +1,11 @@
 """Fig. 13 analog: PE / PE-array / DPU area & power model.
 
-The paper's numbers are post-PnR silicon results (Chisel → 3 nm) that no
-software container can measure.  This module reproduces the *arithmetic* of
-Fig. 13 from per-component cost ratios, clearly labeled as an analytic
-model (DESIGN.md §2.3):
-
-  * an INT8×INT8 multiplier = 1.0 (normalized area & energy);
-  * a barrel shifter costs a small fraction of a multiplier (shift networks
-    are O(b·log b) muxes vs O(b²) partial-product cells); the reduced-range
-    L=5 shifter is cheaper than full-range L=7;
-  * the PE also carries RFs (208 B, paper §VI), find-first sparsity logic
-    and control that StruM does not touch;
-  * the DPU adds 1.5 MB SRAM + load/drain units.
-
-The two overhead ratios are calibrated so the BASELINE structure matches
-the paper's dilution pattern (PE-level savings ≫ DPU-level savings); with
-them fixed, the model's L=7 vs L=5 and static vs dynamic deltas are
-predictions that land inside every range the paper reports:
-PE 23-26% area / 31-34% power, DPU 2-3% area (static), ~+3% area
-(dynamic), 10-12% power — asserted in tests/test_benchmarks.py.
+The arithmetic now lives in :mod:`repro.autotune.costmodel` (promoted so
+the schedule search can price candidate configs); this benchmark renders
+the figure's four cells and records the paper's reported ranges next to
+the model's predictions.  The public names (``level_savings`` and the
+component-cost constants) are re-exported for compatibility — existing
+tests import them from here.
 """
 from __future__ import annotations
 
@@ -26,50 +13,9 @@ import json
 import os
 import time
 
-# normalized component costs relative to one INT8 multiplier
-SHIFT = {7: dict(area=0.16, power=0.13),   # full-range barrel shifter
-         5: dict(area=0.07, power=0.05)}   # reduced range [-5,5]
-GATED_LEAK = 0.02                          # clock-gated multiplier residual
-DYN_ROUTE_AREA = 0.43                      # per-MAC operand mux/route network
-#   (the dynamically-configurable PE of Fig. 9 needs operand steering between
-#    each multiplier and its shadow shifter + the config register fabric)
-# non-MAC PE overhead (RFs, find-first, control), per unit of baseline MACs
-PE_OVERHEAD = dict(area=0.80, power=0.40)
-# DPU uncore (SRAM, load/drain, NoC), per unit of baseline PE cost
-DPU_OVERHEAD = dict(area=8.50, power=1.95)
-
-N_MULS = 8          # MACs per PE (paper §VI)
-P_REPLACED = 0.5    # p = 0.5: half the multipliers become shifters
-
-
-def _costs(L: int, metric: str, dynamic: bool) -> tuple:
-    """(baseline_pe, strum_pe) normalized costs."""
-    n_shift = int(N_MULS * P_REPLACED)
-    base_mac = N_MULS * 1.0
-    if dynamic and metric == "area":
-        # shifters instantiated ON TOP of all 8 multipliers (Fig. 9),
-        # plus the operand-steering network
-        strum_mac = (N_MULS * 1.0 + n_shift * SHIFT[L]["area"]
-                     + N_MULS * DYN_ROUTE_AREA)
-    else:
-        strum_mac = (N_MULS - n_shift) * 1.0 + n_shift * SHIFT[L][metric]
-        if dynamic:  # power: gated multipliers still leak a little
-            strum_mac += n_shift * GATED_LEAK
-    ovh = PE_OVERHEAD[metric] * base_mac
-    return base_mac + ovh, strum_mac + ovh, base_mac, strum_mac
-
-
-def level_savings(L: int, dynamic: bool = False) -> dict:
-    out = {}
-    for metric in ("area", "power"):
-        base_pe, strum_pe, base_mac, strum_mac = _costs(L, metric, dynamic)
-        uncore = DPU_OVERHEAD[metric] * base_pe
-        out[metric] = {
-            "pe": 1 - strum_pe / base_pe,
-            "mac_cluster": 1 - strum_mac / base_mac,
-            "dpu": 1 - (strum_pe + uncore) / (base_pe + uncore),
-        }
-    return out
+from repro.autotune.costmodel import (  # noqa: F401  (re-exported API)
+    DPU_OVERHEAD, DYN_ROUTE_AREA, GATED_LEAK, N_MULS, PE_OVERHEAD,
+    P_REPLACED, SHIFT, level_savings)
 
 
 def run():

@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows (one per benchmark case).
   fig11    Fig. 11   — MIP2Q block/p/L sweep (SQNR)
   fig12    Fig. 12   — quality vs compression level r
   fig13    Fig. 13   — PE/array/DPU area+power analytic model
+  autotune (§VIII)   — searched per-layer schedules vs fixed configs
   kernel   (§V)      — packed-kernel byte footprint + projected decode time
   roofline (§scale)  — printed separately via ``python -m benchmarks.roofline``
                        (reads benchmarks/results/dryrun.json from the dry-run)
@@ -19,7 +20,7 @@ import sys
 
 
 def main() -> None:
-    from benchmarks import (dynamic_p_sweep, fig10_dliq_sweep,
+    from benchmarks import (autotune_pareto, dynamic_p_sweep, fig10_dliq_sweep,
                             fig11_mip2q_sweep, fig12_accuracy_vs_compression,
                             fig13_efficiency, kernel_bench, table1_accuracy)
     table1_accuracy.run()
@@ -29,6 +30,7 @@ def main() -> None:
     fig13_efficiency.run()
     kernel_bench.run()
     dynamic_p_sweep.run()   # beyond-paper: the paper's §VIII future work
+    autotune_pareto.run()   # beyond-paper: schedule search Pareto frontier
 
 
 if __name__ == '__main__':

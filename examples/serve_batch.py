@@ -26,11 +26,20 @@ def main():
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--strum", default="mip2q",
                     choices=["none", "sparsity", "dliq", "mip2q"])
+    ap.add_argument("--schedule", default=None,
+                    help="autotuned StruMSchedule JSON (overrides --strum; "
+                         "the scheduler compresses the weights from it)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
     params = init_params(model_defs(cfg), seed=0, dtype_override="float32")
-    if args.strum != "none":
+    schedule = None
+    if args.schedule is not None:
+        schedule = args.schedule
+        dense = serve_tree_bytes(params)
+        print(f"serving per-layer schedule {args.schedule} "
+              f"(dense {dense/1e6:.2f} MB)")
+    elif args.strum != "none":
         scfg = StruMConfig(method=args.strum, p=0.5, L=5)
         cfg = dataclasses.replace(cfg, strum=scfg)
         dense = serve_tree_bytes(params)
@@ -38,7 +47,11 @@ def main():
         print(f"serving StruM-{args.strum} weights: "
               f"{dense/1e6:.2f} -> {serve_tree_bytes(params)/1e6:.2f} MB")
 
-    sched = BatchScheduler(cfg, params, n_slots=args.slots, max_len=64)
+    sched = BatchScheduler(cfg, params, n_slots=args.slots, max_len=64,
+                           schedule=schedule)
+    if schedule is not None:
+        print(f"  scheduler compressed to "
+              f"{serve_tree_bytes(sched.params)/1e6:.2f} MB")
     key = jax.random.PRNGKey(0)
     for i in range(args.requests):
         key, k = jax.random.split(key)

@@ -1,18 +1,31 @@
 """Serve a model with StruM-compressed weights (the paper's deployment
 scenario: vendor receives a trained model, quantizes post-training, serves).
 
-Compares dense vs sparsity/DLIQ/MIP2Q serving: weight bytes, projected v5e
-decode time for the weight stream, and agreement of generated tokens.
+Two parts:
+
+1. Fixed-config comparison (the paper's statically-configured PE):
+   dense vs sparsity/DLIQ/MIP2Q serving — weight bytes, projected v5e
+   decode time for the weight stream, agreement of generated tokens.
+2. Autotuned schedule (the dynamically-configurable PE + repro.autotune):
+   search a per-layer schedule under a byte budget, write it to JSON,
+   load it back, drive ``pack_tree`` with it end-to-end, then serve the
+   schedule-compressed model — profile → search → schedule → pack → serve.
 
 Run:  PYTHONPATH=src python examples/serve_strum.py --arch olmo_1b
 """
 import argparse
 import dataclasses
+import os
+import tempfile
 
 import jax
 import jax.numpy as jnp
 
+from repro.autotune import Budget, StruMSchedule, search_schedule
 from repro.configs import get_smoke_config
+from repro.core.apply import (_named_leaves, pack_tree,
+                              tree_compression_report, unpack_array)
+from repro.core.metrics import sqnr_db
 from repro.core.policy import StruMConfig
 from repro.launch.serve import pad_caches, serve
 from repro.models import model_defs
@@ -22,12 +35,58 @@ from repro.models.quantize import serve_tree_bytes, strum_serve_params
 HBM_BW = 819e9
 
 
+def autotuned_flow(cfg, params, prompt, gen, toks_ref, dense,
+                   target_ratio: float, schedule_path: str):
+    """profile → search → save/load JSON → pack_tree → serve."""
+    sched = search_schedule(params, Budget(target_ratio=target_ratio))
+    sched.save(schedule_path)
+    loaded = StruMSchedule.load(schedule_path)
+    assert loaded.assignments == sched.assignments
+
+    # the schedule drives the offline packer end-to-end
+    packed = pack_tree(params, schedule=loaded)
+    report = tree_compression_report(params, schedule=loaded)
+    leaves = dict(_named_leaves(params))
+    n_packed, worst = 0, float("inf")
+    for name, entry in packed.items():
+        if isinstance(entry, tuple):
+            pk, shape = entry
+            worst = min(worst, float(sqnr_db(
+                leaves[name], unpack_array(pk, shape))))
+            n_packed += 1
+    print(f"autotune  r<={target_ratio}: schedule {schedule_path} "
+          f"({len(loaded.assignments)} tensors, achieved "
+          f"r={loaded.meta['achieved_ratio']:.3f}, weighted SQNR "
+          f"{loaded.meta['weighted_sqnr_db']:.1f} dB)")
+    worst_txt = f", worst tensor SQNR {worst:.1f} dB" if n_packed else \
+        " (budget met with every tensor at plain INT8)"
+    print(f"          pack_tree: {n_packed} packed leaves, realized "
+          f"{report['total_packed_bytes']/1e6:.2f} MB "
+          f"(x{report['total_packed_ratio']:.3f} of int8; theoretical "
+          f"x{report['total_ratio']:.3f}){worst_txt}")
+
+    # and the serving loader consumes the same schedule
+    served = strum_serve_params(params, cfg, schedule=loaded)
+    toks, _, _ = serve(cfg, served, prompt, gen, {})
+    nbytes = serve_tree_bytes(served)
+    agree = float(jnp.mean((toks == toks_ref).astype(jnp.float32)))
+    print(f"          serve: {nbytes/1e6:8.2f} MB (x{nbytes/dense:.3f}; "
+          f"proj v5e weight-stream {nbytes/HBM_BW*1e6:6.1f} us/tok) "
+          f"token agreement {agree:.2%}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="olmo_1b")
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--target-ratio", type=float, default=0.875,
+                    help="autotune byte budget (packed/int8)")
+    ap.add_argument("--schedule-out", default=None,
+                    help="where to WRITE the searched schedule JSON (to "
+                         "serve an existing schedule, pass it to "
+                         "examples/serve_batch.py --schedule)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -36,8 +95,8 @@ def main():
                                 (args.batch, args.prompt_len), 0,
                                 cfg.vocab_size, dtype=jnp.int32)
 
-    toks_ref, _, _ = serve(dataclasses.replace(cfg, strum=None), params,
-                           prompt, args.gen, {})
+    dense_cfg = dataclasses.replace(cfg, strum=None)
+    toks_ref, _, _ = serve(dense_cfg, params, prompt, args.gen, {})
     dense = serve_tree_bytes(params)
     print(f"dense fp32: {dense/1e6:8.2f} MB   tokens[0]={toks_ref[0, :8].tolist()}")
 
@@ -53,6 +112,11 @@ def main():
               f"(x{nbytes/dense:.3f}; proj v5e weight-stream "
               f"{nbytes/HBM_BW*1e6:6.1f} us/tok) "
               f"token agreement {agree:.2%}")
+
+    schedule_path = args.schedule_out or os.path.join(
+        tempfile.gettempdir(), f"strum_schedule_{args.arch}.json")
+    autotuned_flow(dense_cfg, params, prompt, args.gen, toks_ref, dense,
+                   args.target_ratio, schedule_path)
 
 
 if __name__ == "__main__":

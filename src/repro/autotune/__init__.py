@@ -1,0 +1,32 @@
+"""repro.autotune — hardware-cost-aware per-layer StruM schedule search.
+
+The software compiler half of the paper's dynamically-configurable PE
+(Fig. 9): profile → search → schedule → pack → serve.
+
+    from repro.autotune import Budget, StruMSchedule, search_schedule
+
+    sched = search_schedule(params, Budget(target_ratio=0.875))
+    sched.save("sched.json")                      # deployable artifact
+    packed = pack_tree(params, schedule=StruMSchedule.load("sched.json"))
+
+Modules: ``costmodel`` (Fig.-13 area/power + Eq.-1/2 HBM-bytes pricing),
+``sensitivity`` (vmap-vectorized, content-hash-cached SQNR profiling),
+``search`` (Pareto frontiers + greedy Lagrangian allocator), ``schedule``
+(the serializable ``StruMSchedule`` that lowers to ``LayerPolicy``).
+"""
+from repro.autotune.costmodel import CostEstimate, config_cost, level_savings
+from repro.autotune.schedule import (StruMSchedule, config_from_dict,
+                                     config_key, config_to_dict)
+from repro.autotune.search import (Budget, Candidate, pareto_frontier,
+                                   search_schedule)
+from repro.autotune.sensitivity import (DEFAULT_GRID, cache_info, clear_cache,
+                                        int8_sqnr_db, profile_array,
+                                        profile_tree)
+
+__all__ = [
+    "CostEstimate", "config_cost", "level_savings",
+    "StruMSchedule", "config_from_dict", "config_key", "config_to_dict",
+    "Budget", "Candidate", "pareto_frontier", "search_schedule",
+    "DEFAULT_GRID", "cache_info", "clear_cache", "int8_sqnr_db",
+    "profile_array", "profile_tree",
+]

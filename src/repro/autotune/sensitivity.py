@@ -1,0 +1,174 @@
+"""One-shot, data-free per-tensor sensitivity profiling (accuracy proxy).
+
+For every eligible tensor the profiler measures the SQNR of each candidate
+``StruMConfig`` in a grid — the same quantity the paper's encoder minimizes
+(‖x − x_q‖₂, §IV-C) and the proxy the schedule search trades against the
+hardware cost model.  Like the paper's encoding itself this needs no data
+and no retraining: it is a pure function of the weights.
+
+Vectorization: candidates that share ``(method, w, q, L)`` differ only in
+``p``, i.e. in how many elements per block land in the low set.  The block
+ranking and the low-precision replacement values are computed **once** per
+group, and a ``jax.vmap`` over the ``n_low`` axis evaluates every ``p`` in
+one fused pass — the grid costs barely more than a single config.
+
+Caching: results are memoized by (tensor content hash, grid signature), so
+repeated searches over the same checkpoint (budget sweeps, the Pareto
+benchmark) re-profile nothing.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.autotune.schedule import config_key
+from repro.core import blocking
+from repro.core.apply import _from_2d, _named_leaves, _to_2d
+from repro.core.policy import LayerPolicy, StruMConfig, default_policy
+from repro.core.quantizers import (int8_symmetric, pow2_round, rank_in_block)
+
+__all__ = ["DEFAULT_GRID", "profile_array", "int8_sqnr_db", "profile_tree",
+           "clear_cache", "cache_info"]
+
+#: candidate grid used when callers don't supply one: the paper's three
+#: methods over its p grid, with both MIP2Q shifter ranges (Fig. 11/12).
+DEFAULT_GRID = tuple(
+    [StruMConfig(method="sparsity", p=p) for p in (0.25, 0.5, 0.75)]
+    + [StruMConfig(method="dliq", p=p, q=4) for p in (0.25, 0.5, 0.75)]
+    + [StruMConfig(method="mip2q", p=p, L=L)
+       for p in (0.25, 0.5, 0.75) for L in (5, 7)]
+)
+
+_CACHE: dict = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+    _CACHE_STATS.update(hits=0, misses=0)
+
+
+def cache_info() -> dict:
+    return dict(_CACHE_STATS, entries=len(_CACHE))
+
+
+def _tensor_digest(x) -> str:
+    a = np.asarray(x)
+    h = hashlib.sha1(a.tobytes())
+    h.update(str((a.shape, str(a.dtype))).encode())
+    return h.hexdigest()
+
+
+def _low_replacement(blocks: jnp.ndarray, cfg: StruMConfig):
+    """(rank key, replacement values) for one (method, q, L) group.
+
+    The key orders elements by demotion preference (matches the encoders in
+    :mod:`repro.core.quantizers` bit-for-bit); the replacement value is what
+    a demoted element becomes on the int8 grid.
+    """
+    c = blocks.astype(jnp.int32)
+    if cfg.method == "sparsity":
+        return jnp.abs(c), jnp.zeros_like(c)
+    if cfg.method == "dliq":
+        step = 1 << (8 - cfg.q)
+        qmax = (1 << (cfg.q - 1)) - 1
+        mant = jnp.clip(jnp.round(c.astype(jnp.float32) / step),
+                        -qmax, qmax).astype(jnp.int32)
+        return jnp.abs(c), mant * step
+    # mip2q: exact L2-optimal low set — smallest pow2-rounding error first,
+    # ties broken by |magnitude| (same combined key as pow2_error_low_mask)
+    p2 = pow2_round(blocks, cfg.L)
+    err = jnp.abs(c - p2)
+    return err * 256 + jnp.abs(c), p2
+
+
+def profile_array(x: jnp.ndarray, grid: Sequence[StruMConfig] = DEFAULT_GRID,
+                  use_cache: bool = True) -> dict:
+    """{config_key: SQNR dB} of ``x`` under every grid candidate.
+
+    Candidates sharing (method, w, q, L) are evaluated in one vmapped pass
+    over their ``n_low`` values.  Matches
+    ``sqnr_db(x, fake_quantize_array(x, cfg))`` bit-for-bit (same encode
+    path, same dtype round-trip).
+    """
+    grid = tuple(grid)
+    key = (_tensor_digest(x), tuple(config_key(c) for c in grid)) \
+        if use_cache else None
+    if key is not None and key in _CACHE:
+        _CACHE_STATS["hits"] += 1
+        return dict(_CACHE[key])
+    _CACHE_STATS["misses"] += 1
+
+    x2, shape = _to_2d(x)
+    codes, scale = int8_symmetric(x2, axis=0)
+    k = x2.shape[0]
+    xf = x.astype(jnp.float32)
+    sig = jnp.maximum(jnp.sum(jnp.square(xf)), 1e-20)
+
+    groups: dict = {}
+    for cfg in grid:
+        groups.setdefault((cfg.method, cfg.w, cfg.q, cfg.L), []).append(cfg)
+
+    out: dict = {}
+    for (_method, w, _q, _L), cfgs in groups.items():
+        blocks = blocking.to_blocks(codes, w)
+        c = blocks.astype(jnp.int32)
+        rank_key, repl = _low_replacement(blocks, cfgs[0])
+        rank = rank_in_block(rank_key)
+
+        def sqnr_for(n_low, c=c, rank=rank, repl=repl):
+            vals = jnp.where(rank < n_low, repl, c)
+            v2 = blocking.from_blocks(vals, k)
+            deq = _from_2d((v2.astype(jnp.float32) * scale).astype(x.dtype),
+                           shape).astype(jnp.float32)
+            noise = jnp.maximum(jnp.sum(jnp.square(xf - deq)), 1e-20)
+            return 10.0 * jnp.log10(sig / noise)
+
+        n_lows = jnp.asarray([cfg.n_low for cfg in cfgs], jnp.int32)
+        sqnrs = jax.vmap(sqnr_for)(n_lows)
+        for cfg, s in zip(cfgs, np.asarray(sqnrs)):
+            out[config_key(cfg)] = float(s)
+
+    if key is not None:
+        _CACHE[key] = dict(out)
+    return out
+
+
+def int8_sqnr_db(x: jnp.ndarray) -> float:
+    """SQNR of the plain-INT8 round-trip — the ``None`` candidate's score."""
+    x2, shape = _to_2d(x)
+    codes, scale = int8_symmetric(x2, axis=0)
+    deq = _from_2d((codes.astype(jnp.float32) * scale).astype(x.dtype), shape)
+    xf = x.astype(jnp.float32)
+    sig = jnp.maximum(jnp.sum(jnp.square(xf)), 1e-20)
+    noise = jnp.maximum(jnp.sum(jnp.square(xf - deq.astype(jnp.float32))), 1e-20)
+    return float(10.0 * jnp.log10(sig / noise))
+
+
+def profile_tree(params, grid: Sequence[StruMConfig] = DEFAULT_GRID,
+                 base_policy: Optional[LayerPolicy] = None,
+                 use_cache: bool = True) -> dict:
+    """Profile every eligible tensor of a pytree.
+
+    Returns {name: {"size": int, "int8_sqnr_db": float,
+                    "sqnr_db": {config_key: float}}} for tensors the
+    ``base_policy`` deems eligible (its resolve() is the eligibility test —
+    excluded/1-D tensors are skipped, exactly as the packers skip them).
+    """
+    base_policy = base_policy or default_policy()
+    out = {}
+    for name, leaf in _named_leaves(params):
+        if not hasattr(leaf, "ndim"):
+            continue
+        if base_policy.resolve(name, leaf.shape) is None:
+            continue
+        out[name] = {
+            "size": int(leaf.size),
+            "int8_sqnr_db": int8_sqnr_db(leaf),
+            "sqnr_db": profile_array(leaf, grid, use_cache=use_cache),
+        }
+    return out

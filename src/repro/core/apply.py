@@ -35,6 +35,7 @@ __all__ = [
     "unpack_array",
     "fake_quantize_tree",
     "pack_tree",
+    "packed_payload_bytes",
     "tree_compression_report",
 ]
 
@@ -75,9 +76,8 @@ def pack_array(x: jnp.ndarray, cfg: StruMConfig) -> packing.PackedStruM:
     codes, scale = int8_symmetric(x2, axis=0)
     blocks = blocking.to_blocks(codes, cfg.w)
     qb = quantize_blocks(blocks, cfg.method, cfg.n_low, q=cfg.q, L=cfg.L)
-    p = packing.pack(qb, method=cfg.method, scale=scale, k_dim=x2.shape[0],
-                     n_low=cfg.n_low, q=cfg.q, L=cfg.L)
-    return p._replace(scale=p.scale)  # (metadata: orig shape kept by caller)
+    return packing.pack(qb, method=cfg.method, scale=scale, k_dim=x2.shape[0],
+                        n_low=cfg.n_low, q=cfg.q, L=cfg.L)
 
 
 def unpack_array(p: packing.PackedStruM, shape: tuple, dtype=jnp.float32) -> jnp.ndarray:
@@ -94,13 +94,26 @@ def _named_leaves(tree: Any):
         yield name, leaf
 
 
+def _policy_from(policy: Optional[LayerPolicy], schedule: Any) -> LayerPolicy:
+    """Resolve the effective policy: an explicit schedule wins, then the
+    explicit policy, then the repo default.  ``schedule`` is anything with a
+    ``to_policy()`` (duck-typed to avoid a core → autotune import)."""
+    if schedule is not None:
+        return schedule.to_policy()
+    return policy or default_policy()
+
+
 def fake_quantize_tree(params: Any, policy: Optional[LayerPolicy] = None,
-                       baseline_int8: bool = True) -> Any:
+                       baseline_int8: bool = True, *,
+                       schedule: Any = None) -> Any:
     """StruM-fake-quantize every eligible leaf; others get the plain INT8
     round-trip when ``baseline_int8`` (so comparisons isolate StruM's delta
     on top of the INT8 baseline, as in the paper) or pass through untouched.
+
+    ``schedule`` (a :class:`repro.autotune.schedule.StruMSchedule`) pins
+    per-tensor configs; it takes precedence over ``policy``.
     """
-    policy = policy or default_policy()
+    policy = _policy_from(policy, schedule)
 
     def visit(path, leaf):
         name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
@@ -119,11 +132,17 @@ def fake_quantize_tree(params: Any, policy: Optional[LayerPolicy] = None,
     return jax.tree_util.tree_map_with_path(visit, params)
 
 
-def pack_tree(params: Any, policy: Optional[LayerPolicy] = None) -> dict:
+def pack_tree(params: Any, policy: Optional[LayerPolicy] = None, *,
+              schedule: Any = None) -> dict:
     """Compress a pytree: {name: (PackedStruM, orig_shape)} for eligible
     leaves, {name: raw array} otherwise.  Flat dict keyed by path names —
-    the serving loader's manifest format."""
-    policy = policy or default_policy()
+    the serving loader's manifest format.
+
+    ``schedule`` (a :class:`repro.autotune.schedule.StruMSchedule`, e.g.
+    loaded from disk) drives per-tensor configs and takes precedence over
+    ``policy`` — the deployment path: search → save → load → pack.
+    """
+    policy = _policy_from(policy, schedule)
     out = {}
     for name, leaf in _named_leaves(params):
         cfg = policy.resolve(name, getattr(leaf, "shape", ()))
@@ -134,25 +153,53 @@ def pack_tree(params: Any, policy: Optional[LayerPolicy] = None) -> dict:
     return out
 
 
-def tree_compression_report(params: Any, policy: Optional[LayerPolicy] = None) -> dict:
-    """Bytes before/after + realized ratio per tensor and total (Eq. 1/2)."""
-    policy = policy or default_policy()
-    rows, tot_in, tot_out = [], 0, 0
+def packed_payload_bytes(shape: tuple, cfg: StruMConfig) -> int:
+    """Realized packed bytes (mask + hi + lo) for a tensor of ``shape``.
+
+    Mirrors the exact :class:`~repro.core.packing.PackedStruM` field shapes
+    (incl. block padding and q-bit-field byte padding) without materializing
+    the arrays; validated against ``pack_array(...).payload_bytes()`` in
+    tests/test_autotune.py.
+    """
+    k = shape[-2]
+    n = 1
+    for d in shape[:-2] + shape[-1:]:
+        n *= d
+    nb = blocking.num_blocks(k, cfg.w)
+    mb, nh, lb = packing.field_dims(cfg.w, cfg.n_low, cfg.q, cfg.method)
+    return nb * (mb + nh + lb) * n
+
+
+def tree_compression_report(params: Any, policy: Optional[LayerPolicy] = None,
+                            *, schedule: Any = None) -> dict:
+    """Bytes before/after per tensor and total: the theoretical Eq.-1/2
+    ratio ("strum_bytes") alongside the realized packed bytes
+    ("packed_bytes", from the PackedStruM field sizes — includes block /
+    bit-field padding, so it can exceed the theoretical value for
+    non-multiple-of-w reduction dims)."""
+    policy = _policy_from(policy, schedule)
+    rows, tot_in, tot_out, tot_packed = [], 0, 0, 0
     for name, leaf in _named_leaves(params):
         if not hasattr(leaf, "size"):
             continue
         int8_bytes = int(leaf.size)  # vs the INT8 baseline, as in the paper
         cfg = policy.resolve(name, leaf.shape)
         if cfg is None:
-            comp = int8_bytes
+            comp = packed = int8_bytes
             ratio = 1.0
         else:
             comp = int(round(int8_bytes * cfg.compression_ratio))
             ratio = cfg.compression_ratio
+            packed = packed_payload_bytes(tuple(leaf.shape), cfg)
         rows.append({"name": name, "int8_bytes": int8_bytes,
-                     "strum_bytes": comp, "ratio": ratio})
+                     "strum_bytes": comp, "ratio": ratio,
+                     "packed_bytes": packed,
+                     "packed_ratio": packed / max(int8_bytes, 1)})
         tot_in += int8_bytes
         tot_out += comp
+        tot_packed += packed
     return {"tensors": rows, "total_int8_bytes": tot_in,
             "total_strum_bytes": tot_out,
-            "total_ratio": tot_out / max(tot_in, 1)}
+            "total_ratio": tot_out / max(tot_in, 1),
+            "total_packed_bytes": tot_packed,
+            "total_packed_ratio": tot_packed / max(tot_in, 1)}

@@ -1,32 +1,29 @@
-"""Dynamic per-layer precision ratio — the paper's stated future work.
+"""Dynamic per-layer precision ratio — compatibility wrapper.
 
     "At present, p ... remains constant.  In future work, we aim to explore
     methods for dynamically adjusting p on a per-layer basis." (§VIII)
 
-Implementation: a one-shot *sensitivity sweep* at encode time (still no
-retraining, no data): for every eligible tensor, measure the SQNR of the
-candidate configs p ∈ {0.25, 0.5, 0.75} and pick the **largest p whose SQNR
-clears a floor** — aggressive compression where the weight distribution
-tolerates it, conservative elsewhere.  Returns a LayerPolicy whose
-per-tensor overrides drive the existing fake-quant / pack machinery, plus a
-report of the achieved average compression.
+The original implementation (a fixed-grid p sweep with an SQNR floor) has
+been subsumed by :mod:`repro.autotune`, which searches the full
+method × w × p × q/L space against a joint accuracy-proxy + hardware cost
+model and emits serializable :class:`~repro.autotune.schedule.StruMSchedule`
+artifacts.  This module keeps the historical entry points as thin shims over
+the new search — same signatures, same selection semantics (largest p whose
+SQNR clears the floor; tensors that miss at every p stay plain INT8), now
+via ``search_schedule(..., Budget(min_sqnr_db=floor))``.
 
-This is also the software half of the paper's dynamically-configurable PE
-(Fig. 9): the chosen per-layer p is what the compiler would program into
-the barrel-shifter-enable register before each layer.
+New code should use :mod:`repro.autotune` directly.
 """
 from __future__ import annotations
 
-import re
 from typing import Optional
 
-import jax
-
-from repro.core.apply import _named_leaves, fake_quantize_array
-from repro.core.metrics import sqnr_db
+from repro.autotune.schedule import StruMSchedule
+from repro.autotune.search import Budget, search_schedule
+from repro.core.apply import _named_leaves
 from repro.core.policy import DEFAULT_EXCLUDE, LayerPolicy, StruMConfig
 
-__all__ = ["choose_layer_p", "dynamic_policy"]
+__all__ = ["choose_layer_p", "dynamic_policy", "achieved_ratio", "CANDIDATE_P"]
 
 CANDIDATE_P = (0.75, 0.5, 0.25)
 
@@ -41,39 +38,22 @@ def choose_layer_p(params, *, method: str = "mip2q", sqnr_floor_db: float = 28.0
     """
     base_policy = base_policy or LayerPolicy(default=StruMConfig(
         method=method, w=w, q=q, L=L))
-    chosen = {}
-    for name, leaf in _named_leaves(params):
-        if not hasattr(leaf, "ndim"):
-            continue
-        if base_policy.resolve(name, leaf.shape) is None:
-            continue
-        pick = None
-        for p in CANDIDATE_P:
-            cfg = StruMConfig(method=method, w=w, p=p, q=q, L=L)
-            s = float(sqnr_db(leaf, fake_quantize_array(leaf, cfg)))
-            if s >= sqnr_floor_db:
-                pick = cfg
-                break
-        chosen[name] = pick
-    return chosen
+    grid = [StruMConfig(method=method, w=w, p=p, q=q, L=L)
+            for p in CANDIDATE_P]
+    sched = search_schedule(params, Budget(min_sqnr_db=sqnr_floor_db),
+                            grid=grid, base_policy=base_policy)
+    return dict(sched.assignments)
 
 
 def dynamic_policy(chosen: dict, *, method: str = "mip2q", q: int = 4,
                    L: int = 7) -> LayerPolicy:
     """LayerPolicy whose overrides pin each tensor to its chosen config."""
-    overrides = tuple((f"^{re.escape(name)}$", cfg)
-                      for name, cfg in chosen.items())
-    return LayerPolicy(default=None, exclude=DEFAULT_EXCLUDE,
-                       overrides=overrides)
+    return StruMSchedule(assignments=dict(chosen),
+                         exclude=DEFAULT_EXCLUDE).to_policy()
 
 
 def achieved_ratio(chosen: dict, params) -> float:
     """Bytes-weighted average compression vs INT8 across chosen configs."""
-    tot = comp = 0
-    sizes = {name: leaf.size for name, leaf in _named_leaves(params)
+    sizes = {name: int(leaf.size) for name, leaf in _named_leaves(params)
              if hasattr(leaf, "size")}
-    for name, cfg in chosen.items():
-        n = sizes[name]
-        tot += n
-        comp += n * (cfg.compression_ratio if cfg is not None else 1.0)
-    return comp / max(tot, 1)
+    return StruMSchedule(assignments=dict(chosen)).achieved_ratio(sizes)

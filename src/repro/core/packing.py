@@ -42,11 +42,26 @@ __all__ = [
     "PackedStruM",
     "compression_ratio",
     "compression_ratio_sparsity",
+    "field_dims",
     "pack",
     "decode_blocks",
     "decode_matrix",
     "dequantize",
 ]
+
+
+def field_dims(w: int, n_low: int, q: int, method: str) -> tuple:
+    """Per-block rows of the packed payload arrays: (mask, hi, lo).
+
+    The single source of truth for the Fig.-5 field sizes — mirrored by
+    :func:`pack` (actual arrays), ``apply.packed_payload_bytes`` (byte
+    accounting), and ``models.quantize.packed_model_defs`` (dry-run defs).
+    """
+    mask_rows = -(-w // 8)                     # header bits, byte-padded
+    hi_rows = w - n_low                        # int8 high payload
+    lo_rows = 0 if method == "sparsity" else \
+        -(-(n_low * q) // 8)                   # q-bit fields, byte-padded
+    return mask_rows, hi_rows, lo_rows
 
 
 def compression_ratio(p: float, q: int) -> float:

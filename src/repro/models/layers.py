@@ -95,7 +95,11 @@ def linear(p: dict, x: jnp.ndarray, *, strum: Optional[StruMConfig] = None,
     acc = jnp.dtype(accum_dtype)
     wleaf = p.get("w", p)
     if isinstance(wleaf, dict) and "mask" in wleaf:  # compressed (module docstring)
-        assert strum is not None, "compressed weights need cfg.strum metadata"
+        # per-leaf static metadata (autotune schedule) outranks the uniform
+        # cfg.strum — the compiler's per-layer PE programming (Fig. 9)
+        strum = wleaf.get("cfg", strum)
+        assert strum is not None, \
+            "compressed weights need cfg.strum or schedule-embedded metadata"
         k_dim = x.shape[-1]
         if tp_mesh is not None and tp_pattern is not None:
             # distributed serving: FSDP-gather the PACKED payloads inside a

@@ -53,6 +53,7 @@ def _dequant_experts(wleaf, scfg, dtype):
     if not isinstance(wleaf, dict):
         return wleaf
     from repro.core import packing as _pk
+    scfg = wleaf.get("cfg", scfg)  # schedule-embedded metadata wins
     k_dim = wleaf["mask"].shape[-3] * scfg.w
 
     def one(mask, hi, lo, scale):
@@ -137,14 +138,15 @@ def moe_apply(p: dict, x: jnp.ndarray, cfg, mesh=None, **_kw):
     the expert gathers ARE the decode collective bill)."""
     b, s, d = x.shape
     wg = p.get("wg")
-    packed = isinstance(p["wi"], dict)
     scfg = cfg.strum
 
     if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
         cap = _capacity(b * s, cfg)
-        wi = _dequant_experts(p["wi"], scfg, x.dtype) if packed else p["wi"]
-        wg_l = _dequant_experts(wg, scfg, x.dtype) if packed and wg is not None else wg
-        wo = _dequant_experts(p["wo"], scfg, x.dtype) if packed else p["wo"]
+        # per-stack: a heterogeneous schedule may pack any subset of
+        # wi/wg/wo; _dequant_experts no-ops on dense stacks
+        wi = _dequant_experts(p["wi"], scfg, x.dtype)
+        wg_l = _dequant_experts(wg, scfg, x.dtype) if wg is not None else wg
+        wo = _dequant_experts(p["wo"], scfg, x.dtype)
         y, (df, pf) = _moe_local(x.reshape(-1, d), p["router"]["w"], wi, wg_l,
                                  wo, cfg, 0, cap)
         return y.reshape(b, s, d), cfg.n_experts * jnp.sum(df * pf)
@@ -162,14 +164,14 @@ def moe_apply(p: dict, x: jnp.ndarray, cfg, mesh=None, **_kw):
         # expert weights arrive FSDP-sharded on their reduction dim; gather
         # (ZeRO-3 style) before use — roofline-visible.  Packed stacks
         # gather their COMPRESSED payloads, then dequantize locally.
-        def gather_one(w):
+        def gather_one(w, sc):
             if isinstance(w, dict):
                 g = {k: (jax.lax.all_gather(v, data_axes, axis=1, tiled=True)
                          if k != "scale" else v) for k, v in w.items()}
-                return _dequant_experts(g, scfg, x_l.dtype)
+                return _dequant_experts(g, sc, x_l.dtype)
             return jax.lax.all_gather(w, data_axes, axis=1, tiled=True)
 
-        ws = [gather_one(w) for w in ws]
+        ws = [gather_one(w, sc) for w, sc in zip(ws, ws_cfgs)]
         wi_l, wo_l = ws[0], ws[-1]
         wg_l = ws[1] if gated else None
         midx = jax.lax.axis_index("model")
@@ -192,9 +194,21 @@ def moe_apply(p: dict, x: jnp.ndarray, cfg, mesh=None, **_kw):
     def spec_of(w):
         return pspec if isinstance(w, dict) else wspec
 
-    args = [x, p["router"]["w"], p["wi"]] + ([wg] if gated else []) + [p["wo"]]
+    # the static "cfg" entry (autotune schedule metadata) cannot cross the
+    # shard_map spec boundary: capture per-stack configs in the closure and
+    # ship arrays-only dicts
+    def strip_cfg(w):
+        if isinstance(w, dict) and "cfg" in w:
+            return {k: v for k, v in w.items() if k != "cfg"}
+        return w
+
+    stacks = [p["wi"]] + ([wg] if gated else []) + [p["wo"]]
+    ws_cfgs = [w.get("cfg", scfg) if isinstance(w, dict) else None
+               for w in stacks]
+    args = [x, p["router"]["w"]] + [strip_cfg(w) for w in stacks]
     in_specs = (dspec, P(None, None)) + tuple(spec_of(w) for w in args[2:])
     out_specs = (dspec, P())
-    fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                       out_specs=out_specs, check_vma=False)
+    from repro.models.sharding import shard_map
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs,
+                   out_specs=out_specs, check_vma=False)
     return fn(*args)

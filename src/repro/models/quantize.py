@@ -25,6 +25,16 @@ from repro.core.quantizers import int8_symmetric, quantize_blocks
 
 __all__ = ["strum_serve_params", "serve_tree_bytes"]
 
+# StruMConfig rides inside compressed param subtrees as the per-leaf static
+# metadata carrier (the schedule's per-layer PE programming, Fig. 9).
+# Registering it static makes it part of the jit treedef — hashable config,
+# zero traced leaves — so heterogeneous per-layer configs flow through the
+# unmodified forward.
+try:
+    jax.tree_util.register_static(StruMConfig)
+except ValueError:
+    pass  # already registered (module reload)
+
 
 def _pack_leaf(wt: jnp.ndarray, scfg: StruMConfig) -> dict:
     """(..., K, N) kernel -> compressed arrays with lead dims preserved.
@@ -49,10 +59,22 @@ def _pack_leaf(wt: jnp.ndarray, scfg: StruMConfig) -> dict:
         lead + packed[0][key].shape) for key in packed[0]}
 
 
-def strum_serve_params(params, cfg, policy: Optional[LayerPolicy] = None):
-    """Compress eligible kernels per ``cfg.strum``; leave the rest dense."""
+def strum_serve_params(params, cfg, policy: Optional[LayerPolicy] = None,
+                       schedule=None):
+    """Compress eligible kernels for serving; leave the rest dense.
+
+    Without a ``schedule``, every eligible kernel gets the uniform
+    ``cfg.strum`` (the paper's statically-configured PE).  With one (a
+    :class:`repro.autotune.schedule.StruMSchedule`, e.g. loaded from disk),
+    each tensor gets *its own* config — the dynamically-configurable-PE
+    deployment — and the chosen config is embedded in the compressed leaf
+    as static metadata, so the model's ``linear`` needs no global config.
+    """
     scfg = cfg.strum
-    assert scfg is not None, "set cfg.strum to a StruMConfig first"
+    if schedule is not None:
+        policy = schedule.to_policy()
+    assert scfg is not None or schedule is not None, \
+        "set cfg.strum or pass a schedule"
     policy = policy or default_policy(scfg)
 
     def visit(path, leaf):
@@ -62,9 +84,14 @@ def strum_serve_params(params, cfg, policy: Optional[LayerPolicy] = None):
             return leaf
         if not hasattr(leaf, "ndim") or leaf.ndim < 2:
             return leaf
-        if not is_expert and policy.resolve(name, leaf.shape) is None:
+        leaf_cfg = policy.resolve(name, leaf.shape)
+        if is_expert and schedule is None:
+            leaf_cfg = scfg  # legacy: experts always pack with the uniform cfg
+        if leaf_cfg is None:
             return leaf
-        return _pack_leaf(leaf, scfg)
+        packed = _pack_leaf(leaf, leaf_cfg)
+        packed["cfg"] = leaf_cfg  # static pytree node (registered above)
+        return packed
 
     return jax.tree_util.tree_map_with_path(visit, params)
 
@@ -110,9 +137,10 @@ def gather_dequant(wleaf: dict, scfg: StruMConfig, mesh, pattern: str,
             mask=mask_g, hi=hi_g, lo=lo_g)
         return packing.dequantize(p, dtype)
 
-    fn = jax.shard_map(body, mesh=mesh,
-                       in_specs=(in_spec, in_spec, in_spec, scale_spec),
-                       out_specs=out_spec, check_vma=False)
+    from repro.models.sharding import shard_map
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(in_spec, in_spec, in_spec, scale_spec),
+                   out_specs=out_spec, check_vma=False)
     return fn(wleaf["mask"], wleaf["hi"], wleaf["lo"], wleaf["scale"])
 
 
@@ -151,9 +179,8 @@ def packed_model_defs(cfg, policy: Optional[LayerPolicy] = None):
         la = leaf.axes[:-2]
         in_ax, out_ax = leaf.axes[-2:]
         nb = _math.ceil(k_dim / scfg.w)
-        mb = scfg.w // 8
-        nh = scfg.w - scfg.n_low
-        lb = _math.ceil(scfg.n_low * scfg.q / 8) if scfg.method != "sparsity" else 0
+        mb, nh, lb = packing.field_dims(scfg.w, scfg.n_low, scfg.q,
+                                        scfg.method)
         return {
             "mask": _PD(lead + (nb, mb, n), la + (in_ax, None, out_ax),
                         dtype="uint8", init="zeros"),

@@ -72,8 +72,9 @@ def pipelined_apply(stage_fn, stage_params, x, *, mesh, n_micro: int,
             jnp.where(sid == n_stages - 1, outq, jnp.zeros_like(outq)), axis)
         return outq
 
+    from repro.models.sharding import shard_map
     pspec = jax.tree.map(lambda _: P(axis), stage_params)
-    fn = jax.shard_map(body, mesh=mesh, in_specs=(pspec, P()),
-                       out_specs=P(), check_vma=False)
+    fn = shard_map(body, mesh=mesh, in_specs=(pspec, P()),
+                   out_specs=P(), check_vma=False)
     ym = fn(stage_params, xm)
     return ym.reshape((b,) + ym.shape[2:])

@@ -57,10 +57,24 @@ def _splice(batched, single, slot: int):
 
 
 class BatchScheduler:
-    """n_slots-way continuous decoding over one compiled step."""
+    """n_slots-way continuous decoding over one compiled step.
+
+    ``schedule`` (a :class:`repro.autotune.schedule.StruMSchedule` instance
+    or a path to its JSON) compresses the weights at construction time: the
+    serving loader consumes the searched per-layer config table directly —
+    the deployment end of the profile → search → schedule → pack → serve
+    flow.
+    """
 
     def __init__(self, cfg, params, n_slots: int = 4, max_len: int = 256,
-                 mesh=None, rules=None):
+                 mesh=None, rules=None, schedule=None):
+        if schedule is not None:
+            from repro.autotune.schedule import StruMSchedule
+            from repro.models.quantize import strum_serve_params
+            if isinstance(schedule, (str, bytes)) or hasattr(schedule, "__fspath__"):
+                schedule = StruMSchedule.load(schedule)
+            params = strum_serve_params(params, cfg, schedule=schedule)
+        self.schedule = schedule
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots

@@ -1,0 +1,30 @@
+"""Minimal hypothesis stand-in: property tests SKIP (not error) when
+hypothesis isn't installed, while the plain tests in the same module keep
+running.  Only the surface the test modules use is stubbed."""
+import pytest
+
+
+class _Strategy:
+    """Placeholder for strategy objects built at module import time."""
+
+
+class st:  # noqa: N801 — mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(*args, **kwargs):
+        return _Strategy()
+
+    @staticmethod
+    def sampled_from(*args, **kwargs):
+        return _Strategy()
+
+    @staticmethod
+    def floats(*args, **kwargs):
+        return _Strategy()
+
+
+def given(*args, **kwargs):
+    return pytest.mark.skip(reason="hypothesis not installed")
+
+
+def settings(*args, **kwargs):
+    return lambda f: f

@@ -1,0 +1,302 @@
+"""repro.autotune: schedule round-trip, budget respect, policy precedence,
+dynamic_p wrapper parity, cost model, and schedule-driven pack/serve."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.autotune import (Budget, DEFAULT_GRID, StruMSchedule, config_cost,
+                            config_key, pareto_frontier, profile_array,
+                            profile_tree, search_schedule)
+from repro.autotune.search import Candidate
+from repro.autotune.sensitivity import cache_info, clear_cache, int8_sqnr_db
+from repro.core.apply import (fake_quantize_array, pack_array,
+                              packed_payload_bytes, pack_tree,
+                              tree_compression_report, unpack_array)
+from repro.core.metrics import sqnr_db
+from repro.core.policy import DEFAULT_EXCLUDE, LayerPolicy, StruMConfig
+
+
+def _params():
+    rng = np.random.default_rng(0)
+    return {
+        "friendly": {"w": jnp.asarray(
+            (2.0 ** rng.integers(0, 5, size=(64, 32))
+             * rng.choice([-1, 1], size=(64, 32))).astype(np.float32))},
+        "hard": {"w": jnp.asarray(
+            rng.standard_t(1.2, size=(64, 32)).astype(np.float32))},
+        "blk0": {"w": jnp.asarray(rng.normal(size=(96, 48)).astype(np.float32))},
+        "ln": {"scale": jnp.ones((32,), jnp.float32)},  # excluded (1-D + name)
+    }
+
+
+# ------------------------------------------------------------ sensitivity --
+
+def test_profile_matches_fake_quantize():
+    x = _params()["blk0"]["w"]
+    prof = profile_array(x, DEFAULT_GRID)
+    for cfg in DEFAULT_GRID:
+        want = float(sqnr_db(x, fake_quantize_array(x, cfg)))
+        assert abs(prof[config_key(cfg)] - want) < 1e-4, config_key(cfg)
+
+
+def test_profile_cache_hits_on_identical_content():
+    clear_cache()
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(32, 16)),
+                    jnp.float32)
+    a = profile_array(x, DEFAULT_GRID)
+    b = profile_array(jnp.array(x), DEFAULT_GRID)  # same bytes, new object
+    assert a == b
+    info = cache_info()
+    assert info["hits"] >= 1 and info["misses"] == 1
+
+
+# ---------------------------------------------------------------- schedule --
+
+def test_schedule_json_roundtrip_equals_in_memory():
+    sched = search_schedule(_params(), Budget(target_ratio=0.875))
+    back = StruMSchedule.from_json(sched.to_json())
+    assert back.assignments == sched.assignments
+    assert back.exclude == sched.exclude
+    assert json.loads(back.to_json()) == json.loads(sched.to_json())
+
+
+def test_schedule_save_load(tmp_path):
+    sched = search_schedule(_params(), Budget(min_sqnr_db=28.0))
+    path = sched.save(str(tmp_path / "sched.json"))
+    loaded = StruMSchedule.load(path)
+    assert loaded.assignments == sched.assignments
+    assert loaded.meta["budget"] == {"min_sqnr_db": 28.0}
+
+
+def test_schedule_rejects_newer_version():
+    doc = json.loads(search_schedule(_params(),
+                                     Budget(target_ratio=0.9)).to_json())
+    doc["version"] = 99
+    with pytest.raises(ValueError):
+        StruMSchedule.from_json(json.dumps(doc))
+
+
+# ------------------------------------------------------------------ search --
+
+def test_search_respects_byte_budget():
+    params = _params()
+    for target in (0.5, 0.7, 0.875):
+        sched = search_schedule(params, Budget(target_ratio=target))
+        assert sched.meta["achieved_ratio"] <= target + 1e-9, target
+        assert sched.meta["feasible"]
+
+
+def test_search_respects_sqnr_floor():
+    params = _params()
+    floor = 28.0
+    sched = search_schedule(params, Budget(min_sqnr_db=floor))
+    for name, cfg in sched.assignments.items():
+        if cfg is None:
+            continue
+        leaf = params[name.split("/")[0]]["w"]
+        assert float(sqnr_db(leaf, fake_quantize_array(leaf, cfg))) >= floor
+
+
+def test_search_beats_uniform_default_at_equal_budget():
+    params = _params()
+    scfg = StruMConfig()
+    profile = profile_tree(params, DEFAULT_GRID)
+    sched = search_schedule(params, Budget(target_ratio=scfg.compression_ratio),
+                            profile=profile)
+    tot = sum(r["size"] for r in profile.values())
+    uniform = sum(r["sqnr_db"][config_key(scfg)] * r["size"]
+                  for r in profile.values()) / tot
+    assert sched.meta["achieved_ratio"] <= scfg.compression_ratio + 1e-9
+    assert sched.meta["weighted_sqnr_db"] >= uniform - 1e-6
+
+
+def test_search_energy_budget_monotone():
+    params = _params()
+    hi = search_schedule(params, Budget(max_energy=1e12))
+    # a tight energy budget forces more compression than a loose one
+    lo_limit = 0.6 * hi.meta["total_energy"]
+    lo = search_schedule(params, Budget(max_energy=lo_limit))
+    assert lo.meta["total_energy"] <= lo_limit * (1 + 1e-9)
+    assert lo.meta["achieved_ratio"] <= hi.meta["achieved_ratio"] + 1e-9
+
+
+def test_pareto_frontier_strictly_improving():
+    def cand(sqnr, cost):
+        return Candidate(cfg=None, sqnr_db=sqnr, loss=10.0 ** (-sqnr / 10.0),
+                         cost=cost, bytes=int(cost), energy=cost)
+
+    cands = [cand(30.0, 100.0),
+             cand(25.0, 90.0),    # kept: cheaper, worse — a frontier point
+             cand(31.0, 95.0),    # dominates the 100-cost/30dB point
+             cand(10.0, 50.0)]
+    f = pareto_frontier(cands)
+    costs = [c.cost for c in f]
+    losses = [c.loss for c in f]
+    assert costs == sorted(costs)
+    assert losses == sorted(losses, reverse=True)
+    assert all(a > b for a, b in zip(losses, losses[1:]))
+    assert 100.0 not in costs  # dominated by the 95-cost/31dB point
+
+
+# ------------------------------------------------------------------ policy --
+
+def test_layer_policy_override_beats_exclude():
+    """Overrides outrank exclusions — the schedule's word is final."""
+    cfg = StruMConfig(method="dliq", p=0.25)
+    pol = LayerPolicy(default=None, exclude=DEFAULT_EXCLUDE,
+                      overrides=((r"^embed/w$", cfg),))
+    assert pol.resolve("embed/w", (64, 32)) == cfg       # despite r"embed"
+    assert pol.resolve("embed/other", (64, 32)) is None  # exclusion holds
+
+
+def test_schedule_lowers_to_pinned_policy():
+    sched = StruMSchedule(assignments={
+        "a/w": StruMConfig(method="mip2q", p=0.75, L=5), "b/w": None})
+    pol = sched.to_policy()
+    assert pol.resolve("a/w", (64, 32)).p == 0.75
+    assert pol.resolve("b/w", (64, 32)) is None
+    assert pol.resolve("unlisted/w", (64, 32)) is None  # default None
+
+
+# ------------------------------------------------- dynamic_p compatibility --
+
+def test_dynamic_policy_wrapper_parity_with_legacy():
+    """The thin wrapper must reproduce the pre-refactor selection exactly."""
+    from repro.core.dynamic_p import CANDIDATE_P, choose_layer_p
+    from repro.core.policy import default_policy
+
+    params = _params()
+    floor = 28.0
+    # legacy algorithm, inlined from the pre-refactor core/dynamic_p.py
+    legacy = {}
+    base = LayerPolicy(default=StruMConfig(method="mip2q", w=16, q=4, L=7))
+    from repro.core.apply import _named_leaves
+    for name, leaf in _named_leaves(params):
+        if not hasattr(leaf, "ndim"):
+            continue
+        if base.resolve(name, leaf.shape) is None:
+            continue
+        pick = None
+        for p in CANDIDATE_P:
+            cfg = StruMConfig(method="mip2q", w=16, p=p, q=4, L=7)
+            if float(sqnr_db(leaf, fake_quantize_array(leaf, cfg))) >= floor:
+                pick = cfg
+                break
+        legacy[name] = pick
+    assert choose_layer_p(params, sqnr_floor_db=floor) == legacy
+
+
+# ------------------------------------------------------- pack/serve wiring --
+
+def test_pack_tree_consumes_schedule():
+    params = _params()
+    sched = StruMSchedule(assignments={
+        "friendly/w": StruMConfig(method="mip2q", p=0.75, L=7),
+        "hard/w": None,
+        "blk0/w": StruMConfig(method="dliq", p=0.5, q=4)})
+    packed = pack_tree(params, schedule=sched)
+    pk, shape = packed["friendly/w"]
+    assert pk.method == "mip2q" and pk.n_low == 12 and shape == (64, 32)
+    assert not isinstance(packed["hard/w"], tuple)        # pinned to INT8/dense
+    pk2, _ = packed["blk0/w"]
+    assert pk2.method == "dliq" and pk2.n_low == 8
+    # round-trip matches the fake-quant reference for the packed tensor
+    want = fake_quantize_array(params["friendly/w".split("/")[0]]["w"],
+                               sched.assignments["friendly/w"])
+    np.testing.assert_allclose(np.asarray(unpack_array(pk, shape)),
+                               np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_compression_report_realized_bytes():
+    params = _params()
+    cfg = StruMConfig(method="mip2q", p=0.5, L=5)
+    sched = StruMSchedule(assignments={"friendly/w": cfg, "blk0/w": cfg})
+    rep = tree_compression_report(params, schedule=sched)
+    by_name = {r["name"]: r for r in rep["tensors"]}
+    for name in ("friendly/w", "blk0/w"):
+        leaf = params[name.split("/")[0]]["w"]
+        want = pack_array(leaf, cfg).payload_bytes()
+        assert by_name[name]["packed_bytes"] == want
+        assert packed_payload_bytes(tuple(leaf.shape), cfg) == want
+    assert rep["total_packed_bytes"] >= rep["total_strum_bytes"] - len(by_name)
+
+
+def test_schedule_served_linear_uses_embedded_cfg():
+    """Heterogeneous per-layer configs serve without a global cfg.strum."""
+    from repro.models.layers import linear
+    from repro.models.quantize import strum_serve_params
+
+    params = {"a": {"w": jnp.asarray(
+        np.random.default_rng(5).normal(size=(64, 32)).astype(np.float32))},
+        "b": {"w": jnp.asarray(
+            np.random.default_rng(6).normal(size=(48, 16)).astype(np.float32))}}
+    sched = StruMSchedule(assignments={
+        "a/w": StruMConfig(method="mip2q", p=0.25, L=7),
+        "b/w": StruMConfig(method="dliq", p=0.75, q=4)})
+    cfg = dataclasses.make_dataclass("C", [("strum", object, None)])()
+    served = strum_serve_params(params, cfg, schedule=sched)
+    assert served["a"]["w"]["cfg"].method == "mip2q"
+    assert served["b"]["w"]["cfg"].method == "dliq"
+    for name in ("a", "b"):
+        x = jnp.asarray(np.random.default_rng(7).normal(
+            size=(4, params[name]["w"].shape[0])).astype(np.float32))
+        y = jax.jit(lambda p, x: linear(p, x))(served[name], x)
+        want = x @ fake_quantize_array(params[name]["w"],
+                                       sched.assignments[f"{name}/w"])
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_moe_heterogeneous_schedule_partial_packing():
+    """A schedule may pack any subset of wi/wg/wo; the local MoE path must
+    dequantize per stack (regression: it used to gate on wi only)."""
+    from repro.models.moe import moe_apply
+    from repro.models.quantize import _pack_leaf
+
+    rng = np.random.default_rng(11)
+    e, d, f = 4, 16, 32
+    p = {"router": {"w": jnp.asarray(rng.normal(size=(d, e)).astype(np.float32))},
+         "wi": jnp.asarray(rng.normal(size=(e, d, f)).astype(np.float32)),
+         "wg": jnp.asarray(rng.normal(size=(e, d, f)).astype(np.float32)),
+         "wo": jnp.asarray(rng.normal(size=(e, f, d)).astype(np.float32))}
+
+    class Cfg:
+        n_experts, top_k, capacity_factor, gated_mlp, strum = e, 2, 8.0, True, None
+
+    x = jnp.asarray(rng.normal(size=(2, 8, d)).astype(np.float32))
+    y_dense, _ = moe_apply(p, x, Cfg)
+    scfg = StruMConfig(method="mip2q", p=0.25, L=7)
+    packed_wo = _pack_leaf(p["wo"], scfg)
+    packed_wo["cfg"] = scfg
+    y_part, _ = moe_apply({**p, "wo": packed_wo}, x, Cfg)  # wi/wg stay dense
+    assert y_part.shape == y_dense.shape
+    assert float(sqnr_db(y_dense, y_part)) > 20.0  # only wo quantized, mildly
+
+
+def test_budget_rejects_two_cost_axes():
+    with pytest.raises(ValueError):
+        Budget(target_ratio=0.9, max_energy=1.0)
+    Budget(target_ratio=0.9, min_sqnr_db=20.0)  # composes fine
+
+
+# --------------------------------------------------------------- costmodel --
+
+def test_config_cost_bytes_track_eq12():
+    n = 10_000
+    for cfg in DEFAULT_GRID:
+        assert config_cost(cfg, n).bytes == round(n * cfg.compression_ratio)
+    assert config_cost(None, n).bytes == n
+
+
+def test_config_cost_ordering():
+    n = 10_000
+    int8 = config_cost(None, n)
+    mip = config_cost(StruMConfig(method="mip2q", p=0.5, L=5), n)
+    sp = config_cost(StruMConfig(method="sparsity", p=0.5), n)
+    assert sp.energy < mip.energy < int8.energy   # fewer bytes + cheaper MACs
+    assert mip.area < int8.area                   # shifters < multipliers
+    assert int8_sqnr_db(_params()["blk0"]["w"]) > 30.0
