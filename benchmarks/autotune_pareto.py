@@ -22,7 +22,7 @@ import time
 from benchmarks.common import RESULTS_DIR, eval_ce, trained_tiny_lm
 from repro.autotune import (Budget, DEFAULT_GRID, config_key, profile_tree,
                             search_schedule)
-from repro.core.apply import fake_quantize_tree
+from repro.engine import fake_quantize
 from repro.core.policy import StruMConfig, default_policy
 
 #: byte budgets swept (packed/int8 ratio); 0.875 is the default config's
@@ -61,14 +61,14 @@ def run():
         rows.append({
             "kind": "fixed", "config": key, "r": scfg.compression_ratio,
             "weighted_sqnr_db": _weighted_sqnr(profile, pol),
-            "eval_ce": eval_ce(cfg, fake_quantize_tree(params, pol)),
+            "eval_ce": eval_ce(cfg, fake_quantize(params, policy=pol)),
         })
 
     # searched schedules across the budget sweep
     for target in TARGETS:
         sched = search_schedule(params, Budget(target_ratio=target),
                                 grid=grid, profile=profile)
-        qp = fake_quantize_tree(params, schedule=sched)
+        qp = fake_quantize(params, schedule=sched)
         rows.append({
             "kind": "searched", "config": f"budget_r{target:g}",
             "target_r": target,

@@ -12,7 +12,7 @@ import os
 import time
 
 from benchmarks.common import RESULTS_DIR, eval_ce, trained_tiny_lm
-from repro.core.apply import fake_quantize_tree
+from repro.engine import fake_quantize
 from repro.core.dynamic_p import achieved_ratio, choose_layer_p, dynamic_policy
 from repro.core.policy import StruMConfig, default_policy
 
@@ -23,13 +23,13 @@ def run():
     rows = []
     for p in (0.25, 0.5, 0.75):
         scfg = StruMConfig(method="mip2q", p=p, L=7)
-        qp = fake_quantize_tree(params, default_policy(scfg))
+        qp = fake_quantize(params, cfg=scfg)
         rows.append({"policy": f"uniform_p{p}", "avg_r": scfg.compression_ratio,
                      "eval_ce": eval_ce(cfg, qp)})
     for floor in (24.0, 28.0, 32.0):
         chosen = choose_layer_p(params, sqnr_floor_db=floor)
         pol = dynamic_policy(chosen)
-        qp = fake_quantize_tree(params, pol)
+        qp = fake_quantize(params, policy=pol)
         dist = {}
         for c in chosen.values():
             key = f"p{c.p}" if c else "int8"

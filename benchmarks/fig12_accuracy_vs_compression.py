@@ -12,7 +12,7 @@ import time
 import numpy as np
 
 from benchmarks.common import RESULTS_DIR, eval_ce, trained_tiny_lm
-from repro.core.apply import fake_quantize_tree
+from repro.engine import fake_quantize
 from repro.core.policy import StruMConfig, default_policy
 
 
@@ -28,7 +28,7 @@ def run():
     for method, cases in grid.items():
         for kw in cases:
             scfg = StruMConfig(method=method, **kw)
-            qp = fake_quantize_tree(params, default_policy(scfg))
+            qp = fake_quantize(params, cfg=scfg)
             rows.append({"method": method, **kw,
                          "r": scfg.compression_ratio,
                          "eval_ce": eval_ce(cfg, qp)})

@@ -18,7 +18,7 @@ import os
 import time
 
 from benchmarks.common import RESULTS_DIR, eval_ce, trained_tiny_lm
-from repro.core.apply import fake_quantize_tree
+from repro.engine import fake_quantize
 from repro.core.policy import StruMConfig, default_policy
 
 
@@ -28,8 +28,8 @@ def run(out_csv=True):
     base_ce = eval_ce(cfg, params)
 
     # INT8-only baseline (the paper's "Baseline" column)
-    int8_params = fake_quantize_tree(
-        params, default_policy(None), baseline_int8=True)
+    int8_params = fake_quantize(
+        params, policy=default_policy(None), baseline_int8=True)
     int8_ce = eval_ce(cfg, int8_params)
 
     rows = [{"method": "fp32", "p": 0.0, "eval_ce": base_ce},
@@ -38,7 +38,7 @@ def run(out_csv=True):
         for p in (0.25, 0.5, 0.75):
             kw = {"L": 7} if method == "mip2q" else {"q": 4}
             scfg = StruMConfig(method=method, p=p, **kw)
-            qp = fake_quantize_tree(params, default_policy(scfg))
+            qp = fake_quantize(params, cfg=scfg)
             ce = eval_ce(cfg, qp)
             rows.append({"method": method, "p": p, "eval_ce": ce,
                          "delta_vs_int8": ce - int8_ce})

@@ -39,15 +39,19 @@ print(f"\nkernel max err vs oracle: {float(jnp.max(jnp.abs(y - y_ref))):.2e}; "
       f"weight bytes {packed.payload_bytes()} "
       f"(= {packed.achieved_ratio():.4f} x int8, Eq.1 r={cfg.compression_ratio})")
 
-# -- 4: whole-model compression, no retraining ------------------------------
+# -- 4: whole-model compression via an ExecutionPlan, no retraining ---------
+from repro import engine
 from repro.configs import get_smoke_config
 from repro.models import forward_train, model_defs
 from repro.models.params import init_params
-from repro.models.quantize import serve_tree_bytes, strum_serve_params
+from repro.models.quantize import serve_tree_bytes
 
 mcfg = dataclasses.replace(get_smoke_config("qwen2_7b"), strum=cfg)
 params = init_params(model_defs(mcfg), seed=0, dtype_override="float32")
-served = strum_serve_params(params, mcfg)
+plan = engine.build_plan(params, cfg=cfg)
+print(f"\nplan: {plan.summary()['n_entries']} packed leaves, variants "
+      f"{plan.summary()['variant_distribution']}")
+served = plan.params
 batch = {"tokens": jnp.ones((1, 16), jnp.int32)}
 lg_dense, _ = forward_train(params, batch, dataclasses.replace(mcfg, strum=None))
 lg_strum, _ = forward_train(served, batch, mcfg)

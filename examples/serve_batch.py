@@ -10,11 +10,12 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import engine
 from repro.configs import get_smoke_config
 from repro.core.policy import StruMConfig
 from repro.models import model_defs
 from repro.models.params import init_params
-from repro.models.quantize import serve_tree_bytes, strum_serve_params
+from repro.models.quantize import serve_tree_bytes
 from repro.serving import BatchScheduler, Request
 
 
@@ -43,9 +44,11 @@ def main():
         scfg = StruMConfig(method=args.strum, p=0.5, L=5)
         cfg = dataclasses.replace(cfg, strum=scfg)
         dense = serve_tree_bytes(params)
-        params = strum_serve_params(params, cfg)
+        plan = engine.build_plan(params, cfg=scfg)
+        params = plan.params
         print(f"serving StruM-{args.strum} weights: "
-              f"{dense/1e6:.2f} -> {serve_tree_bytes(params)/1e6:.2f} MB")
+              f"{dense/1e6:.2f} -> {serve_tree_bytes(params)/1e6:.2f} MB "
+              f"(variants {plan.summary()['variant_distribution']})")
 
     sched = BatchScheduler(cfg, params, n_slots=args.slots, max_len=64,
                            schedule=schedule)

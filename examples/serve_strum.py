@@ -8,8 +8,8 @@ Two parts:
    decode time for the weight stream, agreement of generated tokens.
 2. Autotuned schedule (the dynamically-configurable PE + repro.autotune):
    search a per-layer schedule under a byte budget, write it to JSON,
-   load it back, drive ``pack_tree`` with it end-to-end, then serve the
-   schedule-compressed model — profile → search → schedule → pack → serve.
+   load it back, build an ``ExecutionPlan`` from it end-to-end, then serve
+   the plan — profile → search → schedule → plan → serve.
 
 Run:  PYTHONPATH=src python examples/serve_strum.py --arch olmo_1b
 """
@@ -21,57 +21,56 @@ import tempfile
 import jax
 import jax.numpy as jnp
 
+from repro import engine
 from repro.autotune import Budget, StruMSchedule, search_schedule
 from repro.configs import get_smoke_config
-from repro.core.apply import (_named_leaves, pack_tree,
-                              tree_compression_report, unpack_array)
+from repro.core.apply import _named_leaves, tree_compression_report
 from repro.core.metrics import sqnr_db
 from repro.core.policy import StruMConfig
 from repro.launch.serve import pad_caches, serve
 from repro.models import model_defs
 from repro.models.params import init_params
-from repro.models.quantize import serve_tree_bytes, strum_serve_params
+from repro.models.quantize import serve_tree_bytes
 
 HBM_BW = 819e9
 
 
 def autotuned_flow(cfg, params, prompt, gen, toks_ref, dense,
                    target_ratio: float, schedule_path: str):
-    """profile → search → save/load JSON → pack_tree → serve."""
+    """profile → search → save/load JSON → build_plan → serve."""
     sched = search_schedule(params, Budget(target_ratio=target_ratio))
     sched.save(schedule_path)
     loaded = StruMSchedule.load(schedule_path)
     assert loaded.assignments == sched.assignments
 
-    # the schedule drives the offline packer end-to-end
-    packed = pack_tree(params, schedule=loaded)
+    # the schedule drives plan construction end-to-end: packed payloads +
+    # a registry-selected kernel variant per tensor
+    offline = engine.build_plan(params, schedule=loaded, scope="tree")
     report = tree_compression_report(params, schedule=loaded)
     leaves = dict(_named_leaves(params))
-    n_packed, worst = 0, float("inf")
-    for name, entry in packed.items():
-        if isinstance(entry, tuple):
-            pk, shape = entry
-            worst = min(worst, float(sqnr_db(
-                leaves[name], unpack_array(pk, shape))))
-            n_packed += 1
+    worst = float("inf")
+    for name, entry in offline.entries.items():
+        worst = min(worst, float(sqnr_db(leaves[name], entry.dequantized())))
+    n_packed = len(offline.entries)
     print(f"autotune  r<={target_ratio}: schedule {schedule_path} "
           f"({len(loaded.assignments)} tensors, achieved "
           f"r={loaded.meta['achieved_ratio']:.3f}, weighted SQNR "
           f"{loaded.meta['weighted_sqnr_db']:.1f} dB)")
     worst_txt = f", worst tensor SQNR {worst:.1f} dB" if n_packed else \
         " (budget met with every tensor at plain INT8)"
-    print(f"          pack_tree: {n_packed} packed leaves, realized "
+    print(f"          plan: {n_packed} packed leaves, realized "
           f"{report['total_packed_bytes']/1e6:.2f} MB "
           f"(x{report['total_packed_ratio']:.3f} of int8; theoretical "
           f"x{report['total_ratio']:.3f}){worst_txt}")
 
-    # and the serving loader consumes the same schedule
-    served = strum_serve_params(params, cfg, schedule=loaded)
-    toks, _, _ = serve(cfg, served, prompt, gen, {})
-    nbytes = serve_tree_bytes(served)
+    # and the serving loader consumes the same schedule as a model plan
+    plan = engine.build_plan(params, schedule=loaded)
+    toks, _, _ = serve(cfg, plan.params, prompt, gen, {})
+    nbytes = plan.serve_bytes()
     agree = float(jnp.mean((toks == toks_ref).astype(jnp.float32)))
     print(f"          serve: {nbytes/1e6:8.2f} MB (x{nbytes/dense:.3f}; "
           f"proj v5e weight-stream {nbytes/HBM_BW*1e6:6.1f} us/tok) "
+          f"variants {plan.summary()['variant_distribution']} "
           f"token agreement {agree:.2%}")
 
 
@@ -104,9 +103,9 @@ def main():
                        ("mip2q", dict(L=5))]:
         scfg = StruMConfig(method=method, p=0.5, **kw)
         mcfg = dataclasses.replace(cfg, strum=scfg)
-        served = strum_serve_params(params, mcfg)
-        toks, _, _ = serve(mcfg, served, prompt, args.gen, {})
-        nbytes = serve_tree_bytes(served)
+        plan = engine.build_plan(params, cfg=scfg)
+        toks, _, _ = serve(mcfg, plan.params, prompt, args.gen, {})
+        nbytes = serve_tree_bytes(plan.params)
         agree = float(jnp.mean((toks == toks_ref).astype(jnp.float32)))
         print(f"{method:9s} p=0.5: {nbytes/1e6:8.2f} MB "
               f"(x{nbytes/dense:.3f}; proj v5e weight-stream "

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.apply import fake_quantize_tree
+from repro.engine import fake_quantize
 from repro.core.policy import StruMConfig, default_policy
 from repro.data.pipeline import DataConfig, global_batch
 from repro.launch.steps import make_train_step
@@ -96,7 +96,7 @@ def main():
     for method, kw in [("sparsity", {}), ("dliq", dict(q=4)),
                        ("mip2q", dict(L=5))]:
         scfg = StruMConfig(method=method, p=0.5, **kw)
-        qp = fake_quantize_tree(params, default_policy(scfg))
+        qp = fake_quantize(params, cfg=scfg)
         print(f"eval CE: {method:9s} p=0.5 -> {ce(qp, scfg):.4f} "
               f"(r={scfg.compression_ratio:.4f} x int8)")
 

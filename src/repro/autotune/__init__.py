@@ -1,13 +1,15 @@
 """repro.autotune — hardware-cost-aware per-layer StruM schedule search.
 
 The software compiler half of the paper's dynamically-configurable PE
-(Fig. 9): profile → search → schedule → pack → serve.
+(Fig. 9): profile → search → schedule → plan → serve.
 
+    from repro import engine
     from repro.autotune import Budget, StruMSchedule, search_schedule
 
     sched = search_schedule(params, Budget(target_ratio=0.875))
     sched.save("sched.json")                      # deployable artifact
-    packed = pack_tree(params, schedule=StruMSchedule.load("sched.json"))
+    plan = engine.build_plan(params,
+                             schedule=StruMSchedule.load("sched.json"))
 
 Modules: ``costmodel`` (Fig.-13 area/power + Eq.-1/2 HBM-bytes pricing),
 ``sensitivity`` (vmap-vectorized, content-hash-cached SQNR profiling),

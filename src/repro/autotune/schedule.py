@@ -11,7 +11,7 @@ entire existing encode/pack/serve stack consumes it unchanged:
     schedule.save("sched.json")                             # ship it
     ...
     schedule = StruMSchedule.load("sched.json")             # serving host
-    packed = apply.pack_tree(params, schedule=schedule)
+    plan = engine.build_plan(params, schedule=schedule)     # pack + select
 
 The JSON form is versioned and self-contained (configs stored as plain
 dicts, exclusions + provenance metadata alongside) so a schedule written by

@@ -12,6 +12,13 @@ spent during the encoding process"):
                          compressed form consumed by the Pallas kernels and
                          by the serving weight loader.
 
+Both tree transforms are now thin **deprecated shims** over
+:func:`repro.engine.build_plan` (``scope="tree"``); new code should build an
+:class:`~repro.engine.ExecutionPlan` directly — it additionally records the
+registry-selected kernel variant per leaf.  The per-array helpers
+(``fake_quantize_array``, ``pack_array``, ``unpack_array``) remain the
+canonical single-tensor transforms the engine itself builds on.
+
 Rank handling: StruM blocks run along the reduction dim, which by framework
 convention is axis ``-2`` of every kernel (``(..., in_features,
 out_features)``; expert stacks are ``(E, in, out)``).  Leading dims are
@@ -20,6 +27,7 @@ own int8 scale, matching the paper's per-output-channel scheme.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
@@ -36,6 +44,7 @@ __all__ = [
     "fake_quantize_tree",
     "pack_tree",
     "packed_payload_bytes",
+    "path_name",
     "tree_compression_report",
 ]
 
@@ -85,13 +94,17 @@ def unpack_array(p: packing.PackedStruM, shape: tuple, dtype=jnp.float32) -> jnp
     return _from_2d(packing.dequantize(p, dtype), shape)
 
 
+def path_name(path) -> str:
+    """Canonical "/"-joined name of a tree_util key path — the single
+    definition of the naming convention plan entries, pack manifests, and
+    schedules are all keyed by."""
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
 def _named_leaves(tree: Any):
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     for path, leaf in flat:
-        name = "/".join(
-            str(getattr(k, "key", getattr(k, "idx", k))) for k in path
-        )
-        yield name, leaf
+        yield path_name(path), leaf
 
 
 def _policy_from(policy: Optional[LayerPolicy], schedule: Any) -> LayerPolicy:
@@ -106,35 +119,31 @@ def _policy_from(policy: Optional[LayerPolicy], schedule: Any) -> LayerPolicy:
 def fake_quantize_tree(params: Any, policy: Optional[LayerPolicy] = None,
                        baseline_int8: bool = True, *,
                        schedule: Any = None) -> Any:
-    """StruM-fake-quantize every eligible leaf; others get the plain INT8
+    """Deprecated shim over :func:`repro.engine.build_plan` — build a
+    selection-only plan and fake-quantize through it.
+
+    StruM-fake-quantizes every eligible leaf; others get the plain INT8
     round-trip when ``baseline_int8`` (so comparisons isolate StruM's delta
     on top of the INT8 baseline, as in the paper) or pass through untouched.
 
     ``schedule`` (a :class:`repro.autotune.schedule.StruMSchedule`) pins
     per-tensor configs; it takes precedence over ``policy``.
     """
-    policy = _policy_from(policy, schedule)
-
-    def visit(path, leaf):
-        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-        if not isinstance(leaf, jnp.ndarray) or leaf.dtype not in (
-            jnp.float32, jnp.bfloat16, jnp.float16,
-        ):
-            return leaf
-        cfg = policy.resolve(name, leaf.shape)
-        if cfg is None:
-            return int8_baseline_array(leaf) if (
-                baseline_int8 and leaf.ndim >= 2 and min(leaf.shape[-2:]) >= 2
-                and "embed" not in name.lower()
-            ) else leaf
-        return fake_quantize_array(leaf, cfg)
-
-    return jax.tree_util.tree_map_with_path(visit, params)
+    warnings.warn(
+        "fake_quantize_tree is deprecated; use repro.engine.fake_quantize",
+        DeprecationWarning, stacklevel=2)
+    from repro.engine import fake_quantize
+    return fake_quantize(params, schedule=schedule,
+                         policy=policy if schedule is None else None,
+                         baseline_int8=baseline_int8)
 
 
 def pack_tree(params: Any, policy: Optional[LayerPolicy] = None, *,
               schedule: Any = None) -> dict:
-    """Compress a pytree: {name: (PackedStruM, orig_shape)} for eligible
+    """Deprecated shim over :func:`repro.engine.build_plan` — the plan's
+    ``scope="tree"`` manifest is exactly this format.
+
+    Compresses a pytree: {name: (PackedStruM, orig_shape)} for eligible
     leaves, {name: raw array} otherwise.  Flat dict keyed by path names —
     the serving loader's manifest format.
 
@@ -142,15 +151,14 @@ def pack_tree(params: Any, policy: Optional[LayerPolicy] = None, *,
     loaded from disk) drives per-tensor configs and takes precedence over
     ``policy`` — the deployment path: search → save → load → pack.
     """
-    policy = _policy_from(policy, schedule)
-    out = {}
-    for name, leaf in _named_leaves(params):
-        cfg = policy.resolve(name, getattr(leaf, "shape", ()))
-        if cfg is None or not hasattr(leaf, "ndim"):
-            out[name] = leaf
-        else:
-            out[name] = (pack_array(leaf, cfg), tuple(leaf.shape))
-    return out
+    warnings.warn(
+        "pack_tree is deprecated; use repro.engine.build_plan(..., "
+        "scope='tree').params",
+        DeprecationWarning, stacklevel=2)
+    from repro.engine import build_plan
+    return build_plan(params, schedule=schedule,
+                      policy=policy if schedule is None else None,
+                      scope="tree").params
 
 
 def packed_payload_bytes(shape: tuple, cfg: StruMConfig) -> int:

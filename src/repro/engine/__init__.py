@@ -1,0 +1,41 @@
+"""``repro.engine`` — unified execution-plan API for quantized serving.
+
+The redesign around one subsystem (ROADMAP: "schedule-aware Pallas kernel
+selection"):
+
+* a **kernel registry** (:mod:`registry`) of specialized lowerings with
+  capability predicates — ``@register_kernel("pallas:onehot", ...)`` —
+  selection is data-driven, not if/else chains at call sites;
+* an :class:`ExecutionPlan` (:mod:`plan`) built once from
+  ``(params, StruMSchedule)`` recording, per leaf, the packed payload plus
+  the *selected* variant;
+* a single :func:`dispatch` funnel (:mod:`dispatch`) every quantized matmul
+  in ``models/``, ``serving/`` and ``launch/`` goes through, with per-call
+  backend override (``backend="interpret"`` forces interpret-mode Pallas).
+
+Typical flow (profile → search → schedule → **plan** → serve):
+
+    from repro import engine
+    plan = engine.build_plan(params, schedule=sched)   # or cfg=StruMConfig()
+    y = engine.apply(plan, "blocks/pos0/attn/wq/w", x)
+    scheduler = BatchScheduler(cfg, params, plan=plan)
+
+The legacy entrypoints (``core.apply.pack_tree`` / ``fake_quantize_tree``,
+``models.quantize.strum_serve_params``) remain as thin deprecated shims over
+plan construction.
+"""
+from repro.engine.dispatch import apply, dequant_leaf, dispatch, leaf_spec
+from repro.engine.plan import (ExecutionPlan, PlanEntry, build_plan,
+                               fake_quantize)
+from repro.engine.registry import (BACKENDS, ExecSpec, KernelVariant,
+                                   LeafInfo, get_variant, list_variants,
+                                   register_kernel, resolve_backend,
+                                   select_variant, unregister_kernel)
+
+__all__ = [
+    "apply", "dispatch", "dequant_leaf", "leaf_spec",
+    "ExecutionPlan", "PlanEntry", "build_plan", "fake_quantize",
+    "BACKENDS", "ExecSpec", "KernelVariant", "LeafInfo",
+    "register_kernel", "unregister_kernel", "get_variant", "list_variants",
+    "select_variant", "resolve_backend",
+]

@@ -1,0 +1,144 @@
+"""Runtime dispatch: packed leaf (+ recorded variant) -> kernel call.
+
+The single funnel every quantized matmul in ``models/``, ``serving/`` and
+``launch/`` goes through.  A leaf built by :func:`repro.engine.build_plan`
+carries an :class:`ExecSpec` (static pytree node) naming its selected
+variant; legacy hand-built leaves (``{"mask", "hi", "lo", "scale"}`` plus an
+explicit ``strum`` config) get a variant selected on the fly from the same
+registry — there is exactly one selection rule either way.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.policy import StruMConfig
+from repro.engine.registry import (ExecSpec, LeafInfo, get_variant,
+                                   resolve_backend, select_variant)
+
+__all__ = ["dispatch", "apply", "dequant_leaf", "leaf_spec"]
+
+PAYLOAD_KEYS = ("mask", "hi", "lo", "scale")
+
+
+def leaf_spec(wleaf: dict, strum: Optional[StruMConfig] = None
+              ) -> tuple[StruMConfig, Optional[ExecSpec]]:
+    """Resolve the (config, spec) of a packed leaf.
+
+    Plan-built leaves carry ``spec``; legacy leaves carry ``cfg`` (schedule
+    metadata) or rely on the caller's uniform ``strum`` config.
+    """
+    spec = wleaf.get("spec")
+    if spec is not None:
+        return spec.cfg, spec
+    cfg = wleaf.get("cfg", strum)
+    if cfg is None:
+        raise ValueError("compressed leaf needs an embedded spec/cfg or an "
+                         "explicit strum config")
+    return cfg, None
+
+
+def _as_packed(wleaf: dict, cfg: StruMConfig, k_dim: int) -> packing.PackedStruM:
+    return packing.PackedStruM(
+        method=cfg.method, w=cfg.w, n_low=cfg.n_low, q=cfg.q, L=cfg.L,
+        k_dim=k_dim, scale=wleaf["scale"], mask=wleaf["mask"],
+        hi=wleaf["hi"], lo=wleaf["lo"])
+
+
+def _pick(cfg: StruMConfig, info: LeafInfo, spec: Optional[ExecSpec],
+          backend: Optional[str]):
+    """(variant, interpret-flag) for this call.
+
+    A per-call ``backend`` overrides the plan's recorded selection; without
+    one, the spec's variant is authoritative (that is the point of a plan).
+    """
+    if backend is None and spec is not None:
+        _, interpret = resolve_backend(spec.backend)
+        return get_variant(spec.variant), interpret
+    _, interpret = resolve_backend(backend)
+    return select_variant(cfg, info, backend=backend), interpret
+
+
+def dispatch(wleaf: dict, x: jnp.ndarray, *,
+             strum: Optional[StruMConfig] = None,
+             backend: Optional[str] = None,
+             accum_dtype=jnp.float32, out_dtype=None,
+             tp_mesh=None, tp_pattern: Optional[str] = None) -> jnp.ndarray:
+    """y = x @ dequant(leaf) through the leaf's selected kernel variant.
+
+    ``x``: (..., K); returns (..., N) in ``out_dtype`` (default x.dtype).
+    With ``tp_mesh``/``tp_pattern`` the leaf is FSDP-gathered *compressed*
+    and dequantized locally (models.quantize.gather_dequant) — the
+    distributed serving path, where the collective itself is the win.
+    """
+    cfg, spec = leaf_spec(wleaf, strum)
+    k_dim = x.shape[-1]
+    out_dtype = out_dtype or x.dtype
+
+    if tp_mesh is not None and tp_pattern is not None:
+        from repro.models.quantize import gather_dequant
+        wd = gather_dequant(wleaf, cfg, tp_mesh, tp_pattern, k_dim,
+                            dtype=x.dtype)
+        return jnp.dot(x, wd, preferred_element_type=accum_dtype
+                       ).astype(out_dtype)
+
+    lead_dims = wleaf["mask"].ndim - 3          # stacked (expert/scan) leaves
+    if lead_dims > 0:
+        raise ValueError(
+            "dispatch() is a 2-D matmul; stacked leaves go through "
+            "dequant_leaf() + the caller's grouped contraction (models.moe)")
+
+    info = LeafInfo(k_dim=k_dim, n_out=wleaf["scale"].shape[-1],
+                    lead=(), name="")
+    variant, interpret = _pick(cfg, info, spec, backend)
+    packed = _as_packed(wleaf, cfg, k_dim)
+    lead = x.shape[:-1]
+    y = variant.fn(x.reshape(-1, k_dim), packed, out_dtype=out_dtype,
+                   interpret=interpret, accum_dtype=accum_dtype)
+    return y.reshape(lead + (y.shape[-1],))
+
+
+def apply(plan, name: str, x: jnp.ndarray, *, backend: Optional[str] = None,
+          **kw) -> jnp.ndarray:
+    """Name-keyed plan execution: y = x @ dequant(plan[name])."""
+    entry = plan.entries[name]
+    if entry.leaf is None:
+        raise ValueError(f"plan entry {name!r} is selection-only "
+                         f"(built with pack=False)")
+    if entry.layout == "serve" and len(entry.shape) > 2:
+        raise ValueError(f"{name!r} is a stacked leaf; apply() serves 2-D "
+                         f"matmuls — use plan[{name!r}].dequantized()")
+    return dispatch(entry.leaf, x, backend=backend, **kw)
+
+
+def dequant_leaf(wleaf, dtype=jnp.bfloat16,
+                 cfg: Optional[StruMConfig] = None) -> jnp.ndarray:
+    """Decompress a (possibly stacked) packed leaf to dense weights.
+
+    Non-dict leaves pass through — callers can feed any mix of packed and
+    dense stacks (a heterogeneous schedule may pack any subset).  Stacked
+    payloads (lead dims, e.g. MoE expert stacks ``(E, nb, rows, N)``) are
+    vmapped over their lead axes.
+    """
+    if not isinstance(wleaf, dict):
+        return wleaf
+    cfg, _ = leaf_spec(wleaf, cfg)
+    lead_dims = wleaf["mask"].ndim - 3
+    k_dim = wleaf["mask"].shape[-3] * cfg.w
+
+    def one(mask, hi, lo, scale):
+        p = packing.PackedStruM(
+            method=cfg.method, w=cfg.w, n_low=cfg.n_low, q=cfg.q, L=cfg.L,
+            k_dim=k_dim, scale=scale, mask=mask, hi=hi, lo=lo)
+        return packing.dequantize(p, dtype)
+
+    if lead_dims == 0:
+        return one(wleaf["mask"], wleaf["hi"], wleaf["lo"], wleaf["scale"])
+    fields = [wleaf["mask"], wleaf["hi"], wleaf["lo"], wleaf["scale"]]
+    flat = [f.reshape((-1,) + f.shape[lead_dims:]) for f in fields]
+    dq = jax.vmap(one)(*flat)
+    lead = wleaf["mask"].shape[:lead_dims]
+    return dq.reshape(lead + dq.shape[1:])

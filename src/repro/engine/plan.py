@@ -1,0 +1,293 @@
+"""Execution plans: build once from ``(params, StruMSchedule)``, serve many.
+
+An :class:`ExecutionPlan` is the software analog of the paper's compiled PE
+programming (Fig. 9): for every quantized leaf it records the packed
+representation *and* the kernel variant selected from the registry, so
+serving never re-derives per-leaf configs or routes through a
+lowest-common-denominator code path.
+
+    plan = engine.build_plan(params, schedule=sched)       # offline, once
+    y = engine.apply(plan, "blocks/pos0/attn/wq/w", x)     # name-keyed
+    served = plan.params                                   # model-shaped tree
+
+``plan.params`` is a parameter tree the unmodified model forward consumes:
+eligible weights become ``{"mask", "hi", "lo", "scale", "cfg", "spec"}``
+dicts whose ``spec`` (an :class:`ExecSpec`, static pytree node) carries the
+chosen config + variant.  ``models.layers.linear`` hands such leaves to
+:func:`repro.engine.dispatch.dispatch`, which runs the recorded variant.
+
+Two scopes cover the two historical tree transforms:
+
+``scope="model"``  model param trees — packs ``.../w`` linears and MoE
+                   expert stacks in the serving layout (lead dims
+                   preserved); subsumes ``models.quantize.strum_serve_params``.
+``scope="tree"``   generic pytrees — packs any eligible 2-D-contractible
+                   leaf column-folded; ``plan.params`` is the flat
+                   ``{name: (PackedStruM, shape) | leaf}`` manifest that
+                   ``core.apply.pack_tree`` used to return.
+
+``pack=False`` builds a *selection-only* plan (configs + variants, no
+payload arrays) — used by ``fake_quantize`` and by CI checks that assert
+which variant a config lowers to without paying for bit-packing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+# core.apply owns the path-name convention plan entries are keyed by —
+# reused, not redefined, so names stay in sync with everything core.apply
+# and the schedules derive
+from repro.core.apply import _named_leaves, path_name as _path_name
+from repro.core.policy import LayerPolicy, StruMConfig, default_policy
+from repro.engine import variants as _variants  # noqa: F401  (registration)
+from repro.engine.registry import ExecSpec, LeafInfo, select_variant
+
+__all__ = ["PlanEntry", "ExecutionPlan", "build_plan", "fake_quantize"]
+
+
+def _resolve_policy(schedule, policy: Optional[LayerPolicy],
+                    cfg: Optional[StruMConfig]) -> LayerPolicy:
+    """Schedule wins, then explicit policy, then a uniform-cfg default."""
+    if schedule is not None:
+        return schedule.to_policy()
+    if policy is not None:
+        return policy
+    return default_policy(cfg)
+
+
+@dataclasses.dataclass
+class PlanEntry:
+    """One quantized leaf: config + selected variant + packed payload."""
+
+    name: str
+    cfg: StruMConfig
+    variant: str
+    shape: tuple                      # original dense shape
+    backend: Optional[str] = None     # plan-level backend at selection time
+    layout: str = "serve"             # "serve" (lead dims kept) | "folded"
+    leaf: Optional[dict] = None       # packed arrays + spec; None if pack=False
+
+    @property
+    def spec(self) -> ExecSpec:
+        return ExecSpec(cfg=self.cfg, variant=self.variant,
+                        backend=self.backend)
+
+    def as_packed(self) -> packing.PackedStruM:
+        """The 2-D :class:`PackedStruM` view (folded, or lead-free serve)."""
+        if self.leaf is None:
+            raise ValueError(f"plan entry {self.name!r} was built with "
+                             f"pack=False (selection-only)")
+        if self.layout == "serve" and len(self.shape) > 2:
+            raise ValueError(f"{self.name!r} is a stacked leaf in serving "
+                             f"layout; use dequantized()")
+        cfg = self.cfg
+        # K is shape[-2] in both layouts: folding moves lead dims into
+        # columns, never into the reduction axis
+        k_dim = self.shape[-2]
+        return packing.PackedStruM(
+            method=cfg.method, w=cfg.w, n_low=cfg.n_low, q=cfg.q, L=cfg.L,
+            k_dim=k_dim, scale=self.leaf["scale"], mask=self.leaf["mask"],
+            hi=self.leaf["hi"], lo=self.leaf["lo"])
+
+    def dequantized(self, dtype=jnp.float32) -> jnp.ndarray:
+        """Decompress back to the original dense shape."""
+        if self.leaf is None:
+            raise ValueError(f"plan entry {self.name!r} was built with "
+                             f"pack=False (selection-only)")
+        if self.layout == "folded":
+            from repro.core.apply import unpack_array
+            return unpack_array(self.as_packed(), self.shape, dtype)
+        lead = self.shape[:-2]
+        if not lead:
+            return packing.dequantize(self.as_packed(), dtype)
+        from repro.engine.dispatch import dequant_leaf
+        return dequant_leaf(self.leaf, dtype, cfg=self.cfg)
+
+    def payload_bytes(self) -> Optional[int]:
+        if self.leaf is None:
+            return None
+        return int(sum(self.leaf[k].size for k in ("mask", "hi", "lo")))
+
+
+@dataclasses.dataclass
+class ExecutionPlan:
+    """Per-leaf packed payloads + selected kernel variants, built once.
+
+    ``entries`` is keyed by parameter path name; ``params`` is either the
+    model-shaped served tree (scope="model") or the flat pack manifest
+    (scope="tree").
+    """
+
+    entries: dict
+    params: Any
+    backend: Optional[str] = None
+    scope: str = "model"
+    schedule: Any = None
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def __getitem__(self, name: str) -> PlanEntry:
+        return self.entries[name]
+
+    def apply(self, name: str, x: jnp.ndarray, *, backend=None, **kw):
+        from repro.engine.dispatch import apply as _apply
+        return _apply(self, name, x, backend=backend, **kw)
+
+    def variants(self) -> dict:
+        return {name: e.variant for name, e in self.entries.items()}
+
+    def serve_bytes(self) -> int:
+        from repro.models.quantize import serve_tree_bytes
+        return serve_tree_bytes(self.params)
+
+    def summary(self) -> dict:
+        dist: dict = {}
+        for e in self.entries.values():
+            dist[e.variant] = dist.get(e.variant, 0) + 1
+        out = {"n_entries": len(self.entries), "backend": self.backend or
+               "auto", "scope": self.scope, "variant_distribution": dist}
+        payload = [e.payload_bytes() for e in self.entries.values()]
+        if payload and None not in payload:
+            out["packed_payload_bytes"] = int(sum(payload))
+        return out
+
+    # ------------------------------------------------------------ fake-quant
+    def fake_quantize(self, params: Any, baseline_int8: bool = True) -> Any:
+        """Shape-preserving fake-quant of ``params`` per this plan's configs.
+
+        Leaves with a plan entry get the StruM round-trip; other float
+        matrices get the plain INT8 round-trip when ``baseline_int8`` (so
+        comparisons isolate StruM's delta on top of the INT8 baseline) or
+        pass through untouched.
+        """
+        from repro.core.apply import fake_quantize_array, int8_baseline_array
+
+        def visit(path, leaf):
+            name = _path_name(path)
+            if not isinstance(leaf, jnp.ndarray) or leaf.dtype not in (
+                jnp.float32, jnp.bfloat16, jnp.float16,
+            ):
+                return leaf
+            entry = self.entries.get(name)
+            if entry is None:
+                return int8_baseline_array(leaf) if (
+                    baseline_int8 and leaf.ndim >= 2
+                    and min(leaf.shape[-2:]) >= 2
+                    and "embed" not in name.lower()
+                ) else leaf
+            return fake_quantize_array(leaf, entry.cfg)
+
+        return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def _is_expert_stack(name: str) -> bool:
+    return "/moe/" in name and name.rsplit("/", 1)[-1] in ("wi", "wg", "wo")
+
+
+def build_plan(params: Any, *, schedule: Any = None,
+               policy: Optional[LayerPolicy] = None,
+               cfg: Optional[StruMConfig] = None,
+               backend: Optional[str] = None, scope: str = "model",
+               float_only: bool = False, pack: bool = True) -> ExecutionPlan:
+    """Build an :class:`ExecutionPlan` from ``(params, schedule)``.
+
+    Precedence: ``schedule`` (per-tensor table) > ``policy`` > uniform
+    ``cfg`` > repo default.  ``backend`` pins the selection family for every
+    entry (``"interpret"`` also forces interpret-mode execution); ``None``
+    selects pallas on TPU and the XLA dequant path elsewhere.
+    """
+    if scope not in ("model", "tree"):
+        raise ValueError(f"scope={scope!r}")
+    pol = _resolve_policy(schedule, policy, cfg)
+
+    entries: dict[str, PlanEntry] = {}
+
+    def _entry(name: str, leaf, leaf_cfg: StruMConfig, layout: str,
+               packed_leaf: Optional[dict], exec_lead: tuple = ()
+               ) -> PlanEntry:
+        # exec_lead: lead dims as the *kernel* sees them.  Scan-group leads
+        # are () — lax.scan slices them away before dispatch — while MoE
+        # expert stacks keep theirs (a grouped contraction the pallas
+        # family cannot express yet, so selection falls back to dequant).
+        shape = tuple(leaf.shape)
+        info = LeafInfo(k_dim=shape[-2], n_out=shape[-1], lead=exec_lead,
+                        name=name)
+        variant = select_variant(leaf_cfg, info, backend=backend)
+        e = PlanEntry(name=name, cfg=leaf_cfg, variant=variant.name,
+                      shape=shape, backend=backend, layout=layout,
+                      leaf=packed_leaf)
+        if packed_leaf is not None:
+            packed_leaf["cfg"] = leaf_cfg      # back-compat static metadata
+            packed_leaf["spec"] = e.spec       # selection, static pytree node
+        entries[name] = e
+        return e
+
+    if scope == "model":
+        from repro.models.quantize import _pack_leaf
+
+        def visit(path, leaf):
+            name = _path_name(path)
+            is_expert = _is_expert_stack(name)
+            if not name.endswith("/w") and not is_expert:
+                return leaf
+            if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+                return leaf
+            if float_only and leaf.dtype not in (jnp.float32, jnp.bfloat16,
+                                                 jnp.float16):
+                return leaf
+            leaf_cfg = pol.resolve(name, leaf.shape)
+            if is_expert and schedule is None and cfg is not None:
+                leaf_cfg = cfg  # legacy: experts pack with the uniform cfg
+            if leaf_cfg is None:
+                return leaf
+            packed = _pack_leaf(leaf, leaf_cfg) if pack else None
+            _entry(name, leaf, leaf_cfg, "serve", packed,
+                   exec_lead=tuple(leaf.shape[:-2]) if is_expert else ())
+            return packed if pack else leaf
+
+        out = jax.tree_util.tree_map_with_path(visit, params)
+        return ExecutionPlan(entries=entries, params=out, backend=backend,
+                             scope="model", schedule=schedule)
+
+    # scope == "tree": flat manifest, column-folded packing
+    from repro.core.apply import pack_array
+
+    out = {}
+    for name, leaf in _named_leaves(params):
+        leaf_cfg = pol.resolve(name, getattr(leaf, "shape", ()))
+        eligible = (leaf_cfg is not None and hasattr(leaf, "ndim")
+                    and not (float_only and getattr(leaf, "dtype", None)
+                             not in (jnp.float32, jnp.bfloat16, jnp.float16)))
+        if not eligible:
+            out[name] = leaf
+            continue
+        if pack:
+            p = pack_array(leaf, leaf_cfg)
+            packed_leaf = {"mask": p.mask, "hi": p.hi, "lo": p.lo,
+                           "scale": p.scale}
+            _entry(name, leaf, leaf_cfg, "folded", packed_leaf)
+            out[name] = (p, tuple(leaf.shape))
+        else:
+            _entry(name, leaf, leaf_cfg, "folded", None)
+            out[name] = leaf
+    return ExecutionPlan(entries=entries, params=out, backend=backend,
+                         scope="tree", schedule=schedule)
+
+
+def fake_quantize(params: Any, *, schedule: Any = None,
+                  policy: Optional[LayerPolicy] = None,
+                  cfg: Optional[StruMConfig] = None,
+                  baseline_int8: bool = True) -> Any:
+    """One-shot fake-quant through a selection-only plan (no bit-packing).
+
+    The engine-native replacement for ``core.apply.fake_quantize_tree``:
+    same eligibility and INT8-baseline behavior, driven by the same
+    schedule/policy resolution as :func:`build_plan`.
+    """
+    plan = build_plan(params, schedule=schedule, policy=policy, cfg=cfg,
+                      scope="tree", float_only=True, pack=False)
+    return plan.fake_quantize(params, baseline_int8=baseline_int8)

@@ -1,0 +1,178 @@
+"""Schedule-aware kernel registry: named variants + capability predicates.
+
+The paper's DPU executes each layer on a statically configured PE variant
+(Fig. 9, Fig. 13); the software analog is a registry of specialized
+lowerings keyed by what each :class:`StruMConfig` actually needs.  Variant
+selection is *data-driven* — a variant declares a ``supports(cfg, info)``
+predicate and a priority, and :func:`select_variant` picks the
+highest-priority supported one — so new backends (grouped MoE matmul,
+sharded kernels) slot in as registry entries instead of new if/else chains
+in call sites.
+
+Families map to execution substrates:
+
+  ``pallas``     compressed-stream Pallas kernels (Mosaic on TPU, interpret
+                 elsewhere) — the paper's accelerated PE.
+  ``xla``        dequantize-to-dense + XLA dot; portable under pjit/TP, the
+                 fallback for anything the Pallas path cannot express.
+  ``reference``  the pure-jnp oracle (tests, debugging).
+
+The ``backend`` string used across the engine API resolves to a family plus
+an execution mode: ``"auto"`` (pallas on TPU, xla elsewhere), ``"pallas"``,
+``"interpret"`` (pallas with interpret=True, overriding
+``kernels.ops.default_interpret`` per call), ``"xla"``, ``"reference"``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Callable, NamedTuple, Optional
+
+import jax
+
+from repro.core.policy import StruMConfig
+
+__all__ = [
+    "LeafInfo", "KernelVariant", "ExecSpec", "BACKENDS",
+    "register_kernel", "unregister_kernel", "get_variant", "list_variants",
+    "select_variant", "resolve_backend",
+]
+
+BACKENDS = ("auto", "pallas", "interpret", "xla", "reference")
+
+
+class LeafInfo(NamedTuple):
+    """Static shape facts a capability predicate may condition on."""
+
+    k_dim: int                 # reduction dim (unpadded)
+    n_out: int                 # output channels
+    lead: tuple = ()           # leading stack dims (experts / scan groups)
+    name: str = ""             # parameter path name, for diagnostics
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelVariant:
+    """One registered lowering of the quantized matmul.
+
+    ``fn(x2, packed, *, out_dtype, interpret, accum_dtype) -> y2`` operates
+    on flattened ``(M, K)`` activations and a :class:`PackedStruM`; wrappers
+    ignore kwargs their substrate has no use for (xla ignores ``interpret``,
+    pallas ignores ``accum_dtype`` — it always accumulates f32 in the MXU).
+    """
+
+    name: str
+    fn: Callable
+    supports: Callable[[StruMConfig, LeafInfo], bool]
+    family: str = "pallas"
+    priority: int = 0
+    description: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecSpec:
+    """Static per-leaf execution metadata embedded in packed param leaves.
+
+    Registered as a static pytree node (like the ``StruMConfig`` it wraps),
+    so it rides the jit treedef: heterogeneous per-layer variants flow
+    through the unmodified forward with zero traced leaves.
+    """
+
+    cfg: StruMConfig
+    variant: str
+    backend: Optional[str] = None   # plan-level backend the variant was
+                                    # selected under (None = auto)
+
+
+try:
+    jax.tree_util.register_static(ExecSpec)
+except ValueError:
+    pass  # already registered (module reload)
+
+
+_REGISTRY: dict[str, KernelVariant] = {}
+
+
+def register_kernel(name: str, *, supports: Callable, family: str = "pallas",
+                    priority: int = 0, description: str = ""):
+    """Decorator: register ``fn`` as kernel variant ``name``.
+
+    Re-registering a name replaces the previous entry (latest wins), so a
+    downstream package can shadow a built-in with a tuned lowering.
+    """
+    if family not in ("pallas", "xla", "reference"):
+        raise ValueError(f"unknown family {family!r}")
+
+    def deco(fn):
+        _REGISTRY[name] = KernelVariant(
+            name=name, fn=fn, supports=supports, family=family,
+            priority=priority, description=description)
+        return fn
+    return deco
+
+
+def unregister_kernel(name: str) -> None:
+    _REGISTRY.pop(name, None)
+
+
+def get_variant(name: str) -> KernelVariant:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"no kernel variant {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def list_variants() -> dict[str, KernelVariant]:
+    return dict(_REGISTRY)
+
+
+def resolve_backend(backend: Optional[str]) -> tuple[str, Optional[bool]]:
+    """``backend`` string -> (family, interpret flag).
+
+    ``interpret=None`` defers to :func:`repro.kernels.ops.default_interpret`
+    at call time; ``True`` forces interpret mode for this call.
+    """
+    backend = backend or "auto"
+    if backend == "auto":
+        # pallas only where it compiles natively; interpret mode is an
+        # explicit opt-in (orders of magnitude slower than an XLA dot)
+        fam = "pallas" if jax.default_backend() == "tpu" else "xla"
+        return fam, None
+    if backend == "pallas":
+        return "pallas", None
+    if backend == "interpret":
+        return "pallas", True
+    if backend in ("xla", "reference"):
+        return backend, None
+    raise ValueError(f"unknown backend {backend!r}; want one of {BACKENDS}")
+
+
+def select_variant(cfg: StruMConfig, info: LeafInfo,
+                   backend: Optional[str] = None) -> KernelVariant:
+    """Pick the highest-priority variant whose predicate accepts (cfg, info).
+
+    Within the resolved family first; if the family has no supporting
+    variant (e.g. a stacked expert leaf under ``backend="pallas"``), fall
+    back to the ``xla`` family rather than failing — the dequant path can
+    express everything.
+    """
+    fam, _ = resolve_backend(backend)
+    for family in dict.fromkeys((fam, "xla")):
+        cands = [v for v in _REGISTRY.values()
+                 if v.family == family and v.supports(cfg, info)]
+        if cands:
+            if family != fam and backend not in (None, "auto") and \
+                    not info.lead:
+                # an explicitly requested family had no supporting variant
+                # for a plain 2-D leaf — substitution should be visible
+                # (stacked leaves fall back by design until a grouped
+                # pallas matmul registers)
+                warnings.warn(
+                    f"backend={backend!r} has no variant supporting "
+                    f"{cfg.method} w={cfg.w} n_low={cfg.n_low} "
+                    f"({info.name or 'leaf'}); falling back to {family!r}",
+                    stacklevel=2)
+            return max(cands, key=lambda v: (v.priority, v.name))
+    raise LookupError(
+        f"no registered kernel variant supports cfg={cfg} info={info} "
+        f"backend={backend!r} (registered: {sorted(_REGISTRY)})")

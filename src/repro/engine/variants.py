@@ -1,0 +1,77 @@
+"""Built-in kernel variants (imported for side effect by ``repro.engine``).
+
+Each wraps an existing lowering behind the uniform variant signature
+``fn(x2, packed, *, out_dtype, interpret, accum_dtype) -> y2``:
+
+  pallas:maskfree   p = 1.0 — lo payload only, no mask/hi stream
+  pallas:dense      n_low = 0 — hi payload only; works for any ``w``
+  pallas:onehot     general one-hot scatter decode (needs ``w % 8 == 0``)
+  xla:dequant       dequantize + XLA dot — the portable fallback; the only
+                    family that expresses stacked (expert / scan) leaves
+                    until a grouped Pallas matmul registers itself
+  ref:jnp           pure-jnp oracle (``kernels.ref``)
+
+Specializations carry higher priority than the general Pallas path, so
+selection prefers the cheapest decoder that can express the config.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.engine.registry import register_kernel
+from repro.kernels import ops, ref
+
+
+def _two_d(cfg, info):
+    return not info.lead
+
+
+@register_kernel(
+    "pallas:onehot", family="pallas", priority=10,
+    supports=lambda cfg, info: _two_d(cfg, info) and cfg.w % 8 == 0,
+    description="general in-VMEM decode: mask unpack + one-hot scatter")
+def _onehot(x2, packed, *, out_dtype=None, interpret=None, accum_dtype=None):
+    return ops.strum_matmul(x2, packed, out_dtype=out_dtype,
+                            interpret=interpret, variant="onehot")
+
+
+@register_kernel(
+    "pallas:maskfree", family="pallas", priority=20,
+    supports=lambda cfg, info: (_two_d(cfg, info) and cfg.n_low == cfg.w
+                                and cfg.method in ("dliq", "mip2q")),
+    description="p=1.0: decode lo fields in order, no mask/hi stream")
+def _maskfree(x2, packed, *, out_dtype=None, interpret=None, accum_dtype=None):
+    return ops.strum_matmul(x2, packed, out_dtype=out_dtype,
+                            interpret=interpret, variant="maskfree")
+
+
+@register_kernel(
+    "pallas:dense", family="pallas", priority=20,
+    supports=lambda cfg, info: _two_d(cfg, info) and cfg.n_low == 0,
+    description="n_low=0: hi payload is the block in order; reshape + scale")
+def _dense(x2, packed, *, out_dtype=None, interpret=None, accum_dtype=None):
+    return ops.strum_matmul(x2, packed, out_dtype=out_dtype,
+                            interpret=interpret, variant="dense")
+
+
+@register_kernel(
+    "xla:dequant", family="xla", priority=0,
+    supports=lambda cfg, info: True,
+    description="dequantize to dense, fused XLA dot (portable fallback)")
+def _dequant(x2, packed, *, out_dtype=None, interpret=None,
+             accum_dtype=jnp.float32):
+    out_dtype = out_dtype or x2.dtype
+    wd = packing.dequantize(packed, x2.dtype)
+    return jnp.dot(x2, wd,
+                   preferred_element_type=accum_dtype or jnp.float32
+                   ).astype(out_dtype)
+
+
+@register_kernel(
+    "ref:jnp", family="reference", priority=0,
+    supports=_two_d,
+    description="pure-jnp oracle (kernels.ref.strum_matmul_ref)")
+def _reference(x2, packed, *, out_dtype=None, interpret=None,
+               accum_dtype=None):
+    return ref.strum_matmul_ref(x2, packed, out_dtype=out_dtype or x2.dtype)

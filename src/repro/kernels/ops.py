@@ -6,22 +6,40 @@ minimum sizes, and output dtype — callers just hand in activations and a
 
 ``interpret`` defaults to True off-TPU (the container validates kernels in
 interpret mode); on a real TPU backend the same code path lowers through
-Mosaic.
+Mosaic.  Set ``STRUM_INTERPRET=1`` (or ``0``) to force it either way, or
+override per call — the engine API (:mod:`repro.engine`) exposes this as
+``backend="interpret"``.
+
+``variant`` selects the Pallas lowering: ``"onehot"`` (general), ``"maskfree"``
+(p = 1.0, no mask/hi stream) or ``"dense"`` (n_low = 0, no mask/lo stream).
+Callers normally do not pick these by hand — :mod:`repro.engine.registry`
+selects the variant from each leaf's :class:`StruMConfig`.
 """
 from __future__ import annotations
 
-import functools
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.packing import PackedStruM
-from repro.kernels.strum_matmul import strum_matmul_pallas
+from repro.kernels.strum_matmul import (strum_matmul_pallas,
+                                        strum_matmul_pallas_dense,
+                                        strum_matmul_pallas_maskfree)
 
-__all__ = ["strum_matmul", "strum_gemv", "default_interpret"]
+__all__ = ["strum_matmul", "strum_gemv", "default_interpret",
+           "PALLAS_VARIANTS"]
+
+PALLAS_VARIANTS = ("onehot", "maskfree", "dense")
 
 
 def default_interpret() -> bool:
+    """Run Pallas in interpret mode?  ``STRUM_INTERPRET`` env var wins
+    (``1``/``true`` forces interpret even on TPU, ``0``/``false`` forces
+    compiled lowering), else interpret everywhere except a real TPU."""
+    env = os.environ.get("STRUM_INTERPRET", "").strip()
+    if env:  # empty/unset falls through to the backend check
+        return env.lower() not in ("0", "false")
     return jax.default_backend() != "tpu"
 
 
@@ -35,23 +53,24 @@ def _pad_axis(a: jnp.ndarray, axis: int, to: int) -> jnp.ndarray:
 
 
 def _pick_block(dim: int, pref: int, align: int) -> int:
-    """Largest tile <= pref that is a multiple of ``align``."""
-    if dim <= align:
-        return align
-    return min(pref, (dim // align) * align if dim % align else min(pref, dim))
+    """Largest multiple of ``align`` that is <= ``pref``, clamped to the
+    padded axis (``dim`` rounded up to ``align``) and floored at ``align``.
 
-
-def strum_matmul(x: jnp.ndarray, packed: PackedStruM, *,
-                 out_dtype=None, block_m: int = 128, block_n: int = 256,
-                 block_k: int = 256, interpret: bool | None = None) -> jnp.ndarray:
-    """y = x @ dequant(packed), streaming compressed weights.
-
-    x: (..., K) — leading dims are flattened into M.
-    Returns (..., N) in ``out_dtype`` (default: x.dtype).
+    The result always divides the axis after it is padded to a block
+    multiple — a tiny dim (e.g. a 3x5 weight) yields exactly one
+    ``align``-sized block rather than an unaligned or oversized tile.
     """
-    if interpret is None:
-        interpret = default_interpret()
-    out_dtype = out_dtype or x.dtype
+    padded = -(-dim // align) * align
+    return max(align, min((pref // align) * align, padded))
+
+
+def _prepare(x: jnp.ndarray, packed: PackedStruM, block_m: int, block_n: int,
+             block_k: int):
+    """Flatten leading dims, pad every operand to block multiples.
+
+    Returns ``(x2, mask, hi, lo, scale, dims)`` where ``dims`` carries the
+    block sizes and the unpadded (m, n) for the final slice.
+    """
     lead = x.shape[:-1]
     k_in = x.shape[-1]
     if k_in != packed.k_dim:
@@ -63,12 +82,12 @@ def strum_matmul(x: jnp.ndarray, packed: PackedStruM, *,
     k_pad = packed.mask.shape[0] * w               # padded K (block multiple)
     x2 = _pad_axis(x2, 1, k_pad) if k_pad != k_in else x2
 
-    bm = max(8, min(block_m, m))
-    bn = min(block_n, max(128, n))
-    bk = min(block_k, k_pad)
-    bk = (bk // w) * w or w
+    bm = _pick_block(m, block_m, 8)
+    bn = _pick_block(n, block_n, 128)
+    bk = _pick_block(k_pad, block_k, w)
 
     x2 = _pad_axis(_pad_axis(x2, 0, bm), 1, bk)
+
     def _min1(a):  # payload axes must be >= 1 for BlockSpec; zeros are inert
         if a.shape[1] == 0:
             return jnp.zeros((a.shape[0], 1, a.shape[2]), a.dtype)
@@ -79,21 +98,62 @@ def strum_matmul(x: jnp.ndarray, packed: PackedStruM, *,
     lo = _pad_axis(_pad_axis(_min1(packed.lo), 0, bk // w), 2, bn)
     # zero scale in padded columns kills any junk the decoder would produce
     scale = _pad_axis(packed.scale, 1, bn)
+    return x2, mask, hi, lo, scale, (lead, m, n, bm, bn, bk)
 
-    y = strum_matmul_pallas(
-        x2, mask, hi, lo, scale,
-        w=w, n_low=packed.n_low, q=packed.q, method=packed.method,
-        block_m=bm, block_n=bn, block_k=bk, interpret=interpret,
-    )
+
+def strum_matmul(x: jnp.ndarray, packed: PackedStruM, *,
+                 out_dtype=None, block_m: int = 128, block_n: int = 256,
+                 block_k: int = 256, interpret: bool | None = None,
+                 variant: str = "onehot") -> jnp.ndarray:
+    """y = x @ dequant(packed), streaming compressed weights.
+
+    x: (..., K) — leading dims are flattened into M.
+    Returns (..., N) in ``out_dtype`` (default: x.dtype).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    out_dtype = out_dtype or x.dtype
+    x2, mask, hi, lo, scale, (lead, m, n, bm, bn, bk) = _prepare(
+        x, packed, block_m, block_n, block_k)
+    w = packed.w
+
+    if variant == "onehot":
+        if w % 8:
+            raise ValueError(f"onehot variant needs byte-aligned mask rows "
+                             f"(w={w}); use the dequant fallback")
+        y = strum_matmul_pallas(
+            x2, mask, hi, lo, scale,
+            w=w, n_low=packed.n_low, q=packed.q, method=packed.method,
+            block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    elif variant == "maskfree":
+        if packed.n_low != w or packed.method not in ("dliq", "mip2q"):
+            raise ValueError(f"maskfree variant needs n_low == w and a lo "
+                             f"payload, got n_low={packed.n_low} w={w} "
+                             f"method={packed.method}")
+        y = strum_matmul_pallas_maskfree(
+            x2, lo, scale, w=w, q=packed.q, method=packed.method,
+            block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    elif variant == "dense":
+        if packed.n_low != 0:
+            raise ValueError(f"dense variant needs n_low == 0, "
+                             f"got {packed.n_low}")
+        y = strum_matmul_pallas_dense(
+            x2, hi, scale, w=w,
+            block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    else:
+        raise ValueError(f"unknown variant {variant!r}; "
+                         f"want one of {PALLAS_VARIANTS}")
     return y[:m, :n].reshape(lead + (n,)).astype(out_dtype)
 
 
 def strum_gemv(x: jnp.ndarray, packed: PackedStruM, *, out_dtype=None,
-               interpret: bool | None = None) -> jnp.ndarray:
+               interpret: bool | None = None,
+               variant: str = "onehot") -> jnp.ndarray:
     """Decode-path matvec: tiny M (a few tokens), full weight stream.
 
     This is where StruM's bandwidth ratio converts 1:1 into decode latency —
     the op is HBM-bound, so bytes saved = time saved (DESIGN.md §2).
     """
     return strum_matmul(x, packed, out_dtype=out_dtype, block_m=8,
-                        block_n=512, block_k=512, interpret=interpret)
+                        block_n=512, block_k=512, interpret=interpret,
+                        variant=variant)

@@ -23,6 +23,24 @@ Decode strategy inside the kernel (vectorized, gather-free):
   5. f32 (values · per-channel scale) tile → MXU dot, f32 accumulation.
 
 Validated in ``interpret=True`` mode on CPU against ``ref.strum_matmul_ref``.
+
+Besides the general ``strum_matmul_pallas`` (the one-hot scatter decode that
+handles every method × n_low), two *specialized* lowerings exist for the
+schedule extremes the autotuner actually emits — they stream fewer operands
+and skip the rank/one-hot machinery entirely:
+
+``strum_matmul_pallas_maskfree``  p = 1.0 (n_low == w): every value is low
+                                  precision, so the mask is all-zeros and the
+                                  lo payload is already in position order —
+                                  decode is unpack-fields → method decode →
+                                  reshape.  No mask or hi stream at all.
+``strum_matmul_pallas_dense``     n_low == 0: every value is INT8 and the hi
+                                  payload is the block in position order —
+                                  decode is a reshape + scale.  No mask or lo
+                                  stream, and no ``w % 8`` constraint.
+
+Selection between these lives in :mod:`repro.engine.registry` — the kernels
+themselves stay selection-free.
 """
 from __future__ import annotations
 
@@ -33,7 +51,11 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
-__all__ = ["strum_matmul_pallas"]
+__all__ = [
+    "strum_matmul_pallas",
+    "strum_matmul_pallas_maskfree",
+    "strum_matmul_pallas_dense",
+]
 
 
 def _unpack_mask(mask_u8: jnp.ndarray, w: int) -> jnp.ndarray:
@@ -161,3 +183,100 @@ def strum_matmul_pallas(x, mask, hi, lo, scale, *, w: int, n_low: int, q: int,
         ) if not interpret else None,
     )(x, mask, hi, lo, scale)
     return out
+
+
+def _mosaic_params(interpret: bool):
+    if interpret:
+        return None
+    return dict(mosaic=dict(
+        dimension_semantics=("parallel", "parallel", "arbitrary")))
+
+
+def _kernel_maskfree(x_ref, lo_ref, scale_ref, o_ref, *, w, q, method):
+    """p = 1.0 decode: lo payload is the whole block, already in order."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    codes = _unpack_fields(lo_ref[...], w, q)                # (bnb, w, bn)
+    vals = _decode_low(codes, method, q)
+    bnb, _, bn = vals.shape
+    wv = vals.reshape(bnb * w, bn) * scale_ref[...]
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x, wv, preferred_element_type=jnp.float32)
+
+
+def strum_matmul_pallas_maskfree(x, lo, scale, *, w: int, q: int, method: str,
+                                 block_m: int = 128, block_n: int = 128,
+                                 block_k: int = 128, interpret: bool = True):
+    """y = x @ dequant(W) when n_low == w: mask and hi are never streamed."""
+    m, k_dim = x.shape
+    nb, lb, n = lo.shape
+    assert k_dim == nb * w, (k_dim, nb, w)
+    assert method in ("dliq", "mip2q"), method
+    assert block_k % w == 0
+    assert m % block_m == 0 and n % block_n == 0 and k_dim % block_k == 0
+    bnb = block_k // w
+    grid = (m // block_m, n // block_n, k_dim // block_k)
+    kern = functools.partial(_kernel_maskfree, w=w, q=q, method=method)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bnb, lb, block_n), lambda i, j, kk: (kk, 0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+        compiler_params=_mosaic_params(interpret),
+    )(x, lo, scale)
+
+
+def _kernel_dense(x_ref, hi_ref, scale_ref, o_ref, *, w):
+    """n_low = 0 decode: hi payload is the block in order; reshape + scale."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    hv = hi_ref[...].astype(jnp.float32)                     # (bnb, w, bn)
+    bnb, _, bn = hv.shape
+    wv = hv.reshape(bnb * w, bn) * scale_ref[...]
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x, wv, preferred_element_type=jnp.float32)
+
+
+def strum_matmul_pallas_dense(x, hi, scale, *, w: int,
+                              block_m: int = 128, block_n: int = 128,
+                              block_k: int = 128, interpret: bool = True):
+    """y = x @ dequant(W) when n_low == 0: pure-INT8 blocks, no mask/lo.
+
+    The only variant with no ``w % 8`` constraint — the hi payload carries
+    all ``w`` values per block, so the mask header is never consulted.
+    """
+    m, k_dim = x.shape
+    nb, rows, n = hi.shape
+    assert rows == w and k_dim == nb * w, (rows, w, k_dim, nb)
+    assert block_k % w == 0
+    assert m % block_m == 0 and n % block_n == 0 and k_dim % block_k == 0
+    bnb = block_k // w
+    grid = (m // block_m, n // block_n, k_dim // block_k)
+    kern = functools.partial(_kernel_dense, w=w)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bnb, w, block_n), lambda i, j, kk: (kk, 0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+        compiler_params=_mosaic_params(interpret),
+    )(x, hi, scale)

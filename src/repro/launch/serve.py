@@ -8,10 +8,12 @@ CPU-scale usage (examples/serve_strum.py wraps this):
         --strum mip2q --p 0.5 --L 5 --prompt-len 32 --gen 16 --batch 4
 
 ``--strum none`` serves dense weights (the INT8→bf16 baseline); any other
-method serves the compressed form through the StruM-aware linear
-(models/quantize.py), printing the weight-bytes ratio achieved (paper
-Eq. 1/2) and verifying the compressed model's outputs agree with the
-fake-quant reference.
+method (or ``--schedule sched.json``) builds a :class:`repro.engine`
+``ExecutionPlan`` — packed payloads + registry-selected kernel variant per
+leaf — and serves its params through the StruM-aware linear, printing the
+weight-bytes ratio achieved (paper Eq. 1/2) and the per-variant plan
+summary.  ``--backend interpret`` forces interpret-mode Pallas variants
+per call (no env var needed).
 """
 from __future__ import annotations
 
@@ -23,14 +25,13 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import engine
 from repro.configs.base import get_config, get_smoke_config
 from repro.core.policy import StruMConfig
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import cache_defs, model_defs
 from repro.models.params import init_params
-from repro.models.quantize import serve_tree_bytes, strum_serve_params
-from repro.core.apply import fake_quantize_tree
-from repro.core.policy import default_policy
+from repro.models.quantize import serve_tree_bytes
 
 
 def pad_caches(caches, extra: int):
@@ -80,6 +81,11 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--schedule", default=None,
+                    help="autotuned StruMSchedule JSON (overrides --strum)")
+    ap.add_argument("--backend", default=None,
+                    choices=["auto", "pallas", "interpret", "xla"],
+                    help="pin the engine's kernel-variant selection")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -87,15 +93,27 @@ def main(argv=None):
                          dtype_override="float32")
     dense_bytes = serve_tree_bytes(params)
 
-    if args.strum != "none":
-        scfg = StruMConfig(method=args.strum, p=args.p, q=args.q, L=args.L)
-        cfg = dataclasses.replace(cfg, strum=scfg)
-        served = strum_serve_params(params, cfg)
-        comp_bytes = serve_tree_bytes(served)
+    if args.schedule is not None or args.strum != "none":
+        if args.schedule is not None:
+            from repro.autotune.schedule import StruMSchedule
+            sched = StruMSchedule.load(args.schedule)
+            plan = engine.build_plan(params, schedule=sched,
+                                     backend=args.backend)
+            note = f"schedule {args.schedule}"
+        else:
+            scfg = StruMConfig(method=args.strum, p=args.p, q=args.q,
+                               L=args.L)
+            cfg = dataclasses.replace(cfg, strum=scfg)
+            plan = engine.build_plan(params, cfg=scfg, backend=args.backend)
+            note = f"theoretical vs int8 r={scfg.compression_ratio:.4f}"
+        comp_bytes = plan.serve_bytes()
+        summ = plan.summary()
         print(f"weights: dense {dense_bytes/1e6:.2f} MB -> StruM "
               f"{comp_bytes/1e6:.2f} MB (x{comp_bytes/dense_bytes:.3f}; "
-              f"theoretical vs int8 r={scfg.compression_ratio:.4f})")
-        params = served
+              f"{note})")
+        print(f"plan: {summ['n_entries']} entries, variants "
+              f"{summ['variant_distribution']} (backend {summ['backend']})")
+        params = plan.params
     else:
         print(f"weights: dense {dense_bytes/1e6:.2f} MB")
 

@@ -6,11 +6,12 @@ All layers are functional: ``apply(params_subtree, x, ...)``.  Parameter
 StruM integration (first-class feature): any linear's ``w`` leaf may be
 replaced by its compressed form — a dict of arrays
 ``{"mask", "hi", "lo", "scale"}`` produced by
-:func:`repro.models.quantize.strum_serve_params`.  Static metadata (method,
-w, p, q, L) comes from ``cfg.strum`` (the paper's statically-configured
-variant; per-layer dynamic p is the paper's future-work).  The compressed
-path runs either through the Pallas kernel (``use_kernel``) or a jnp
-dequant+dot that XLA fuses (portable under pjit).
+:func:`repro.engine.build_plan` (whose ``spec`` records the selected kernel
+variant) or by the legacy ``strum_serve_params`` shim.  Static metadata
+(method, w, p, q, L) rides the leaf (``spec``/``cfg``) or falls back to
+``cfg.strum``.  Execution goes through :func:`repro.engine.dispatch` — the
+registry-selected Pallas variant, the XLA dequant fallback, or the
+TP-sharded gather-dequant path; this module imports no kernels directly.
 """
 from __future__ import annotations
 
@@ -19,9 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import packing
 from repro.core.policy import StruMConfig
-from repro.kernels import ops as kops
 from repro.models.params import ParamDef
 
 __all__ = [
@@ -76,16 +75,16 @@ def linear_def(d_in: int, d_out: int, in_axis: str, out_axis: str,
     return d
 
 
-def _strum_packed_from(p: dict, scfg: StruMConfig, k_dim: int) -> packing.PackedStruM:
-    return packing.PackedStruM(
-        method=scfg.method, w=scfg.w, n_low=scfg.n_low, q=scfg.q, L=scfg.L,
-        k_dim=k_dim, scale=p["scale"], mask=p["mask"], hi=p["hi"], lo=p["lo"])
-
-
 def linear(p: dict, x: jnp.ndarray, *, strum: Optional[StruMConfig] = None,
-           use_kernel: bool = False, accum_dtype=jnp.float32,
+           use_kernel: bool = False, backend: Optional[str] = None,
+           accum_dtype=jnp.float32,
            tp_mesh=None, tp_pattern: Optional[str] = None) -> jnp.ndarray:
     """y = x @ W (+ b).  Dense or StruM-compressed weights.
+
+    Compressed leaves dispatch through :mod:`repro.engine` — the variant a
+    plan recorded, or one selected on the fly for legacy leaves.
+    ``backend`` overrides per call (``"interpret"``, ``"xla"``, ...);
+    ``use_kernel=True`` is the legacy spelling of ``backend="pallas"``.
 
     ``accum_dtype`` is the preferred element type of the contraction: when a
     contraction dim is TP-sharded, XLA all-reduces partial sums in this
@@ -95,30 +94,11 @@ def linear(p: dict, x: jnp.ndarray, *, strum: Optional[StruMConfig] = None,
     acc = jnp.dtype(accum_dtype)
     wleaf = p.get("w", p)
     if isinstance(wleaf, dict) and "mask" in wleaf:  # compressed (module docstring)
-        # per-leaf static metadata (autotune schedule) outranks the uniform
-        # cfg.strum — the compiler's per-layer PE programming (Fig. 9)
-        strum = wleaf.get("cfg", strum)
-        assert strum is not None, \
-            "compressed weights need cfg.strum or schedule-embedded metadata"
-        k_dim = x.shape[-1]
-        if tp_mesh is not None and tp_pattern is not None:
-            # distributed serving: FSDP-gather the PACKED payloads inside a
-            # shard_map, dequantize locally (models/quantize.gather_dequant)
-            from repro.models.quantize import gather_dequant
-            wd = gather_dequant(wleaf, strum, tp_mesh, tp_pattern, k_dim,
-                                dtype=x.dtype)
-            y = jnp.dot(x, wd, preferred_element_type=acc).astype(x.dtype)
-            if "b" in p:
-                y = y + p["b"].astype(y.dtype)
-            return y
-        packed = _strum_packed_from(wleaf, strum, k_dim)
-        if use_kernel:
-            y = kops.strum_matmul(x.reshape(-1, k_dim), packed,
-                                  out_dtype=x.dtype)
-            y = y.reshape(x.shape[:-1] + (y.shape[-1],))
-        else:
-            wd = packing.dequantize(packed, x.dtype)
-            y = jnp.dot(x, wd, preferred_element_type=acc).astype(x.dtype)
+        from repro.engine.dispatch import dispatch
+        if backend is None and use_kernel:
+            backend = "pallas"
+        y = dispatch(wleaf, x, strum=strum, backend=backend,
+                     accum_dtype=acc, tp_mesh=tp_mesh, tp_pattern=tp_pattern)
     else:
         w = p["w"]
         y = jnp.dot(x, w.astype(x.dtype),

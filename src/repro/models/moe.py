@@ -49,21 +49,13 @@ def moe_def(cfg, lead=()) -> dict:
 
 def _dequant_experts(wleaf, scfg, dtype):
     """Decompress a StruM-packed expert stack {mask,hi,lo,scale} with arrays
-    (E, nb, mb, N) back to dense (E, K, N) — vmapped over experts."""
-    if not isinstance(wleaf, dict):
-        return wleaf
-    from repro.core import packing as _pk
-    scfg = wleaf.get("cfg", scfg)  # schedule-embedded metadata wins
-    k_dim = wleaf["mask"].shape[-3] * scfg.w
+    (E, nb, mb, N) back to dense (E, K, N) — engine-vmapped over experts.
 
-    def one(mask, hi, lo, scale):
-        p = _pk.PackedStruM(method=scfg.method, w=scfg.w, n_low=scfg.n_low,
-                            q=scfg.q, L=scfg.L, k_dim=k_dim, scale=scale,
-                            mask=mask, hi=hi, lo=lo)
-        return _pk.dequantize(p, dtype)
-
-    return jax.vmap(one)(wleaf["mask"], wleaf["hi"], wleaf["lo"],
-                         wleaf["scale"])
+    A grouped packed matmul that keeps experts compressed through the
+    contraction is the registry's next entry (ROADMAP); until then the
+    engine's dequant path is the one variant that expresses stacks."""
+    from repro.engine.dispatch import dequant_leaf
+    return dequant_leaf(wleaf, dtype, cfg=scfg)
 
 
 def _capacity(tokens: int, cfg) -> int:
@@ -194,17 +186,23 @@ def moe_apply(p: dict, x: jnp.ndarray, cfg, mesh=None, **_kw):
     def spec_of(w):
         return pspec if isinstance(w, dict) else wspec
 
-    # the static "cfg" entry (autotune schedule metadata) cannot cross the
-    # shard_map spec boundary: capture per-stack configs in the closure and
-    # ship arrays-only dicts
+    # static metadata ("cfg"/"spec", the plan's per-stack selection) cannot
+    # cross the shard_map spec boundary: capture per-stack configs in the
+    # closure and ship arrays-only dicts
     def strip_cfg(w):
-        if isinstance(w, dict) and "cfg" in w:
-            return {k: v for k, v in w.items() if k != "cfg"}
+        if isinstance(w, dict):
+            return {k: v for k, v in w.items() if k in
+                    ("mask", "hi", "lo", "scale")}
         return w
 
+    def stack_cfg(w):
+        if not isinstance(w, dict):
+            return None
+        from repro.engine.dispatch import leaf_spec
+        return leaf_spec(w, scfg)[0]
+
     stacks = [p["wi"]] + ([wg] if gated else []) + [p["wo"]]
-    ws_cfgs = [w.get("cfg", scfg) if isinstance(w, dict) else None
-               for w in stacks]
+    ws_cfgs = [stack_cfg(w) for w in stacks]
     args = [x, p["router"]["w"]] + [strip_cfg(w) for w in stacks]
     in_specs = (dspec, P(None, None)) + tuple(spec_of(w) for w in args[2:])
     out_specs = (dspec, P())

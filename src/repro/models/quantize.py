@@ -1,16 +1,19 @@
-"""Model-level StruM integration: compress a trained param tree for serving.
+"""Model-level StruM integration: serving-layout packing + TP gather paths.
 
-``strum_serve_params`` walks the params pytree and replaces every eligible
-linear kernel ``{"w": (..., K, N)}`` with its compressed StruM form
-``{"mask", "hi", "lo", "scale"}`` (arrays only — static metadata comes from
-``cfg.strum``, the paper's statically-configured PE).  The model's
-``linear`` recognizes the compressed leaf and dequantizes on the fly
-(Pallas kernel or fused jnp path) — no other model code changes, which is
-the point: StruM is a storage/bandwidth transform, not an architecture
-change.
+The tree walk that used to live here (``strum_serve_params``) is now a
+deprecated shim over :func:`repro.engine.build_plan`; this module keeps the
+pieces the engine builds on:
 
-Stacked weights (leading scan-group or expert dims) are compressed
-column-folded, matching :mod:`repro.core.apply` conventions.
+``_pack_leaf``        (..., K, N) kernel -> compressed serving-layout arrays
+                      (lead dims preserved so ``lax.scan`` / expert indexing
+                      slice them exactly like dense params).
+``gather_dequant``    the TP/FSDP distributed path: gather *compressed*
+                      payloads inside shard_map, dequantize locally.
+``packed_model_defs`` dry-run ParamDefs with exact packed shapes/shardings.
+
+The model's ``linear`` recognizes compressed leaves and dispatches through
+:mod:`repro.engine` — no other model code changes, which is the point:
+StruM is a storage/bandwidth transform, not an architecture change.
 """
 from __future__ import annotations
 
@@ -61,39 +64,30 @@ def _pack_leaf(wt: jnp.ndarray, scfg: StruMConfig) -> dict:
 
 def strum_serve_params(params, cfg, policy: Optional[LayerPolicy] = None,
                        schedule=None):
-    """Compress eligible kernels for serving; leave the rest dense.
+    """Deprecated shim over :func:`repro.engine.build_plan` — returns
+    ``build_plan(...).params`` (the model-shaped served tree).
 
     Without a ``schedule``, every eligible kernel gets the uniform
     ``cfg.strum`` (the paper's statically-configured PE).  With one (a
     :class:`repro.autotune.schedule.StruMSchedule`, e.g. loaded from disk),
     each tensor gets *its own* config — the dynamically-configurable-PE
-    deployment — and the chosen config is embedded in the compressed leaf
-    as static metadata, so the model's ``linear`` needs no global config.
+    deployment — and the chosen config + selected kernel variant are
+    embedded in the compressed leaf as static metadata, so the model's
+    ``linear`` needs no global config.
     """
+    import warnings
+
+    warnings.warn(
+        "strum_serve_params is deprecated; use repro.engine.build_plan — "
+        "the ExecutionPlan additionally records per-leaf kernel variants",
+        DeprecationWarning, stacklevel=2)
     scfg = cfg.strum
-    if schedule is not None:
-        policy = schedule.to_policy()
     assert scfg is not None or schedule is not None, \
         "set cfg.strum or pass a schedule"
-    policy = policy or default_policy(scfg)
-
-    def visit(path, leaf):
-        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-        is_expert = "/moe/" in name and name.rsplit("/", 1)[-1] in ("wi", "wg", "wo")
-        if not name.endswith("/w") and not is_expert:
-            return leaf
-        if not hasattr(leaf, "ndim") or leaf.ndim < 2:
-            return leaf
-        leaf_cfg = policy.resolve(name, leaf.shape)
-        if is_expert and schedule is None:
-            leaf_cfg = scfg  # legacy: experts always pack with the uniform cfg
-        if leaf_cfg is None:
-            return leaf
-        packed = _pack_leaf(leaf, leaf_cfg)
-        packed["cfg"] = leaf_cfg  # static pytree node (registered above)
-        return packed
-
-    return jax.tree_util.tree_map_with_path(visit, params)
+    from repro.engine import build_plan
+    return build_plan(params, schedule=schedule,
+                      policy=policy if schedule is None else None,
+                      cfg=scfg).params
 
 
 def gather_dequant(wleaf: dict, scfg: StruMConfig, mesh, pattern: str,

@@ -59,21 +59,36 @@ def _splice(batched, single, slot: int):
 class BatchScheduler:
     """n_slots-way continuous decoding over one compiled step.
 
-    ``schedule`` (a :class:`repro.autotune.schedule.StruMSchedule` instance
-    or a path to its JSON) compresses the weights at construction time: the
-    serving loader consumes the searched per-layer config table directly —
-    the deployment end of the profile → search → schedule → pack → serve
-    flow.
+    ``plan`` (a prebuilt :class:`repro.engine.ExecutionPlan`) or ``schedule``
+    (a :class:`repro.autotune.schedule.StruMSchedule` instance or a path to
+    its JSON) compresses the weights at construction time: the serving
+    loader consumes the searched per-layer config table — and the kernel
+    variant the plan selected per leaf — directly.  The deployment end of
+    the profile → search → schedule → plan → serve flow.  ``backend``
+    (e.g. ``"interpret"``, ``"xla"``) pins the engine's variant selection
+    when the scheduler builds the plan itself.
     """
 
     def __init__(self, cfg, params, n_slots: int = 4, max_len: int = 256,
-                 mesh=None, rules=None, schedule=None):
+                 mesh=None, rules=None, schedule=None, plan=None,
+                 backend=None):
+        if plan is not None and schedule is not None:
+            raise ValueError("pass plan= or schedule=, not both")
+        if plan is not None and backend is not None:
+            raise ValueError("backend= only applies when the scheduler "
+                             "builds the plan (schedule=...); a prebuilt "
+                             "plan already recorded its variant selection")
         if schedule is not None:
+            from repro import engine
             from repro.autotune.schedule import StruMSchedule
-            from repro.models.quantize import strum_serve_params
             if isinstance(schedule, (str, bytes)) or hasattr(schedule, "__fspath__"):
                 schedule = StruMSchedule.load(schedule)
-            params = strum_serve_params(params, cfg, schedule=schedule)
+            plan = engine.build_plan(params, schedule=schedule,
+                                     backend=backend)
+        if plan is not None:
+            params = plan.params
+            schedule = schedule if schedule is not None else plan.schedule
+        self.plan = plan
         self.schedule = schedule
         self.cfg = cfg
         self.params = params

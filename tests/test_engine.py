@@ -1,0 +1,244 @@
+"""repro.engine: registry selection, plan construction, dispatch parity,
+and the heterogeneous-schedule end-to-end acceptance path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.configs import get_smoke_config
+from repro.core.apply import fake_quantize_array, pack_array
+from repro.core.policy import StruMConfig
+from repro.kernels import ref
+from repro.models import model_defs
+from repro.models.params import init_params
+
+RNG = np.random.default_rng(0)
+
+
+def _leaf(k=64, n=96, method="mip2q", p=0.5, **kw):
+    cfg = StruMConfig(method=method, p=p, **kw)
+    wt = jnp.asarray(RNG.normal(size=(k, n)).astype(np.float32))
+    x = jnp.asarray(RNG.normal(size=(3, k)).astype(np.float32))
+    from repro.models.quantize import _pack_leaf
+    return cfg, wt, x, _pack_leaf(wt, cfg)
+
+
+# ---------------------------------------------------------------- registry --
+
+@pytest.mark.parametrize("cfg,want", [
+    (StruMConfig(method="mip2q", p=0.5, L=5), "pallas:onehot"),
+    (StruMConfig(method="dliq", p=0.5, q=4), "pallas:onehot"),
+    (StruMConfig(method="sparsity", p=0.5), "pallas:onehot"),
+    (StruMConfig(method="dliq", p=1.0, q=4), "pallas:maskfree"),
+    (StruMConfig(method="mip2q", p=1.0, L=5), "pallas:maskfree"),
+    (StruMConfig(method="dliq", p=0.0, q=4), "pallas:dense"),
+    (StruMConfig(method="dliq", p=0.0, q=4, w=12), "pallas:dense"),
+    (StruMConfig(method="mip2q", p=0.5, L=5, w=12), "xla:dequant"),
+])
+def test_selection_expectations(cfg, want):
+    info = engine.LeafInfo(k_dim=64, n_out=96)
+    assert engine.select_variant(cfg, info, backend="pallas").name == want
+
+
+def test_selection_auto_off_tpu_and_stacks():
+    info = engine.LeafInfo(k_dim=64, n_out=96)
+    cfg = StruMConfig(method="mip2q", p=0.5, L=5)
+    if jax.default_backend() != "tpu":
+        assert engine.select_variant(cfg, info).name == "xla:dequant"
+    stacked = engine.LeafInfo(k_dim=64, n_out=96, lead=(4,))
+    # no pallas variant expresses expert stacks yet -> dequant fallback
+    assert engine.select_variant(cfg, stacked, backend="pallas").name \
+        == "xla:dequant"
+
+
+def test_register_kernel_shadows_and_unregisters():
+    cfg, wt, x, leaf = _leaf()
+    info = engine.LeafInfo(k_dim=64, n_out=96)
+
+    @engine.register_kernel("test:custom", family="pallas", priority=99,
+                            supports=lambda c, i: True)
+    def custom(x2, packed, *, out_dtype=None, interpret=None,
+               accum_dtype=None):
+        return jnp.zeros((x2.shape[0], packed.n_out), out_dtype or x2.dtype)
+
+    try:
+        assert engine.select_variant(cfg, info, backend="pallas").name \
+            == "test:custom"
+        y = engine.dispatch(leaf, x, strum=cfg, backend="pallas")
+        assert float(jnp.max(jnp.abs(y))) == 0.0
+    finally:
+        engine.unregister_kernel("test:custom")
+    assert "test:custom" not in engine.list_variants()
+    assert engine.select_variant(cfg, info, backend="pallas").name \
+        == "pallas:onehot"
+
+
+# ---------------------------------------------------------------- dispatch --
+
+@pytest.mark.parametrize("backend", [None, "interpret", "xla", "reference"])
+def test_dispatch_backends_agree_with_oracle(backend):
+    cfg, wt, x, leaf = _leaf()
+    pk = pack_array(wt, cfg)
+    want = ref.strum_matmul_ref(x, pk)
+    y = engine.dispatch(leaf, x, strum=cfg, backend=backend)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dispatch_needs_metadata():
+    _, _, x, leaf = _leaf()
+    bare = {k: leaf[k] for k in ("mask", "hi", "lo", "scale")}
+    with pytest.raises(ValueError, match="spec/cfg"):
+        engine.dispatch(bare, x)
+
+
+# -------------------------------------------------------------------- plan --
+
+def test_build_plan_model_scope_matches_legacy_shim():
+    cfg = dataclasses.replace(get_smoke_config("qwen2_7b"),
+                              strum=StruMConfig(method="mip2q", p=0.5, L=5))
+    params = init_params(model_defs(cfg), seed=0, dtype_override="float32")
+    plan = engine.build_plan(params, cfg=cfg.strum)
+    assert plan.entries, "no eligible leaves packed"
+    for name, entry in plan.entries.items():
+        assert name.endswith("/w")
+        assert entry.leaf["spec"].variant == entry.variant
+    with pytest.deprecated_call():
+        from repro.models.quantize import strum_serve_params
+        served = strum_serve_params(params, cfg)
+    a = jax.tree_util.tree_leaves(plan.params)
+    b = jax.tree_util.tree_leaves(served)
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_build_plan_tree_scope_manifest_and_fake_quantize():
+    w = jnp.asarray(RNG.normal(size=(48, 32)).astype(np.float32))
+    params = {"layer0": w, "small": jnp.zeros((3,), jnp.float32)}
+    plan = engine.build_plan(params, cfg=StruMConfig(method="dliq", q=4),
+                             scope="tree")
+    entry = plan.entries["layer0"]
+    pk, shape = plan.params["layer0"]
+    assert shape == (48, 32) and pk.payload_bytes() > 0
+    assert plan.params["small"].shape == (3,)
+    # selection-only plan drives fake-quant without packing
+    sel = engine.build_plan(params, cfg=StruMConfig(method="dliq", q=4),
+                            scope="tree", pack=False)
+    fq = sel.fake_quantize(params, baseline_int8=False)
+    want = fake_quantize_array(w, entry.cfg)
+    np.testing.assert_allclose(np.asarray(fq["layer0"]), np.asarray(want),
+                               rtol=0, atol=0)
+
+
+def test_plan_apply_name_keyed():
+    w = jnp.asarray(RNG.normal(size=(64, 96)).astype(np.float32))
+    plan = engine.build_plan({"layer0": w},
+                             cfg=StruMConfig(method="mip2q", p=0.5, L=5),
+                             scope="tree")
+    entry = plan.entries["layer0"]
+    x = jnp.asarray(RNG.normal(size=(2, 64)).astype(np.float32))
+    y = plan.apply("layer0", x)
+    want = ref.strum_matmul_ref(x, entry.as_packed())
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_linear_use_kernel_and_backend_override():
+    from repro.models.layers import linear
+    cfg, wt, x, leaf = _leaf(k=96, n=48)
+    y_jnp = linear({"w": leaf}, x, strum=cfg)
+    y_krn = linear({"w": leaf}, x, strum=cfg, use_kernel=True)
+    y_int = linear({"w": leaf}, x, strum=cfg, backend="interpret")
+    np.testing.assert_allclose(np.asarray(y_jnp), np.asarray(y_krn),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_jnp), np.asarray(y_int),
+                               rtol=1e-4, atol=1e-4)
+
+
+# -------------------------------------------- heterogeneous schedule e2e --
+
+def _hetero_schedule(params):
+    from repro.autotune.schedule import StruMSchedule
+    from repro.core.apply import _named_leaves
+    assignments = {}
+    for name, leaf in _named_leaves(params):
+        if not name.endswith("/w") or not hasattr(leaf, "ndim"):
+            continue
+        if "/attn/" in name:
+            assignments[name] = StruMConfig(method="mip2q", p=0.5, L=5, w=16)
+        elif "/mlp/" in name:
+            assignments[name] = StruMConfig(method="dliq", p=1.0, q=4, w=8)
+    return StruMSchedule(assignments=assignments)
+
+
+def test_heterogeneous_schedule_serves_with_distinct_variants():
+    """Acceptance: two layer groups with different w/q serve end-to-end with
+    (at least) two distinct registry variants, and every packed leaf agrees
+    with the reference kernel."""
+    cfg = dataclasses.replace(get_smoke_config("qwen2_7b"), strum=None,
+                              dtype="float32")
+    params = init_params(model_defs(cfg), seed=0, dtype_override="float32")
+    sched = _hetero_schedule(params)
+    assert len({(c.method, c.w, c.q) for c in sched.assignments.values()}) >= 2
+
+    plan = engine.build_plan(params, schedule=sched, backend="interpret")
+    chosen = set(plan.variants().values())
+    assert {"pallas:onehot", "pallas:maskfree"} <= chosen, chosen
+
+    # per-entry parity against the reference kernel.  Weights here carry a
+    # scan-group lead dim the forward slices away — dispatch group 0's
+    # slice exactly as the scanned linear would.
+    from repro.core import packing
+    for name, entry in plan.entries.items():
+        c = entry.cfg
+        leaf = entry.leaf
+        if len(entry.shape) > 2:
+            leaf = dict(leaf, **{k: leaf[k][0]
+                                 for k in ("mask", "hi", "lo", "scale")})
+        x = jnp.asarray(RNG.normal(size=(2, entry.shape[-2]))
+                        .astype(np.float32))
+        y = engine.dispatch(leaf, x)
+        pk = packing.PackedStruM(
+            method=c.method, w=c.w, n_low=c.n_low, q=c.q, L=c.L,
+            k_dim=entry.shape[-2], scale=leaf["scale"], mask=leaf["mask"],
+            hi=leaf["hi"], lo=leaf["lo"])
+        want = ref.strum_matmul_ref(x, pk)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4, err_msg=name)
+
+    # end-to-end serving: prefill + decode through the jitted steps, and the
+    # interpret-pallas plan matches the XLA-dequant plan on logits
+    from repro.launch.serve import serve
+    prompt = jax.random.randint(jax.random.PRNGKey(0), (1, 8), 0,
+                                cfg.vocab_size, dtype=jnp.int32)
+    toks_i, _, _ = serve(cfg, plan.params, prompt, 2, {})
+    plan_x = engine.build_plan(params, schedule=sched, backend="xla")
+    toks_x, _, _ = serve(cfg, plan_x.params, prompt, 2, {})
+    assert toks_i.shape == toks_x.shape == (1, 3)
+
+    from repro.models import forward_train
+    batch = {"tokens": prompt}
+    lg_i, _ = forward_train(plan.params, batch, cfg)
+    lg_x, _ = forward_train(plan_x.params, batch, cfg)
+    np.testing.assert_allclose(np.asarray(lg_i), np.asarray(lg_x),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_batch_scheduler_takes_plan():
+    from repro.serving import BatchScheduler, Request
+    cfg = dataclasses.replace(get_smoke_config("qwen2_7b"), strum=None,
+                              dtype="float32")
+    params = init_params(model_defs(cfg), seed=0, dtype_override="float32")
+    sched = _hetero_schedule(params)
+    plan = engine.build_plan(params, schedule=sched)
+    bs = BatchScheduler(cfg, params, n_slots=2, max_len=32, plan=plan)
+    assert bs.plan is plan
+    prompt = jnp.asarray(RNG.integers(0, cfg.vocab_size, size=(6,)),
+                         jnp.int32)
+    bs.submit(Request(uid=0, prompt=prompt, max_new_tokens=4))
+    done = bs.run_to_completion(max_steps=50)
+    assert len(done) == 1 and len(done[0].output) >= 4

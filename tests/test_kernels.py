@@ -80,3 +80,72 @@ def test_kernel_streams_fewer_bytes():
     _, packed = _case(1, 1024, 512)
     int8_bytes = 1024 * 512
     assert packed.payload_bytes() / int8_bytes == pytest.approx(0.875)
+
+
+# ------------------------------------------------------------- block picker --
+
+def test_pick_block_stays_aligned():
+    """Regression: the tile must be a multiple of ``align`` and never exceed
+    the padded axis, even when pref is unaligned or the dim is tiny."""
+    from repro.kernels.ops import _pick_block
+    assert _pick_block(256, 200, 128) == 128   # pref unaligned: round down
+    assert _pick_block(5, 256, 128) == 128     # tiny dim: one aligned block
+    assert _pick_block(3, 256, 16) == 16
+    assert _pick_block(200, 256, 128) == 256   # padded-axis clamp
+    assert _pick_block(300, 256, 128) == 256
+    assert _pick_block(64, 32, 128) == 128     # pref below align: floor
+    for dim in (1, 3, 8, 127, 128, 129, 512):
+        for pref in (8, 100, 128, 256):
+            for align in (8, 16, 128):
+                b = _pick_block(dim, pref, align)
+                padded = -(-dim // align) * align
+                assert b % align == 0 and b <= max(padded, align), \
+                    (dim, pref, align, b)
+
+
+def test_matmul_tiny_weight():
+    """Regression: a weight smaller than every alignment (3x5) still runs
+    and matches the oracle through each applicable variant."""
+    for method, p, variant in [("mip2q", 0.5, "onehot"),
+                               ("dliq", 1.0, "maskfree"),
+                               ("dliq", 0.0, "dense")]:
+        x, packed = _case(2, 3, 5, method=method, p=p,
+                          **({"L": 5} if method == "mip2q" else {"q": 4}))
+        y = ops.strum_matmul(x, packed, interpret=True, variant=variant)
+        y_ref = ref.strum_matmul_ref(x, packed)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-5, atol=1e-4, err_msg=variant)
+
+
+# ------------------------------------------- full-grid three-way parity --
+
+GRID = []
+for _w in (8, 16):
+    for _p in (0.0, 0.25, 1.0):
+        GRID.append(("sparsity", _w, _p, {}))
+        for _q in (2, 4, 8):
+            GRID.append(("dliq", _w, _p, {"q": _q}))
+        for _L in (3, 5):
+            GRID.append(("mip2q", _w, _p, {"L": _L}))
+
+
+@pytest.mark.parametrize("method,w,p,kw", GRID)
+def test_parity_pallas_ref_dequant_grid(method, w, p, kw):
+    """Pallas (registry-selected variant) vs jnp oracle vs dequant+dot across
+    the full method × w × q grid, incl. the p=1.0 / n_low=0 edge cases."""
+    from repro import engine
+    from repro.core import packing
+
+    x, packed = _case(3, 48 if w == 8 else 64, 96, method=method, p=p, w=w,
+                      **kw)
+    cfg = StruMConfig(method=method, p=p, w=w, **kw)
+    info = engine.LeafInfo(k_dim=x.shape[-1], n_out=96)
+    variant = engine.select_variant(cfg, info, backend="interpret")
+    y_pal = variant.fn(x, packed, interpret=True)
+    y_ref = ref.strum_matmul_ref(x, packed)
+    y_deq = jnp.dot(x, packing.dequantize(packed, jnp.float32),
+                    preferred_element_type=jnp.float32)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-4, err_msg=variant.name)
+    np.testing.assert_allclose(np.asarray(y_deq), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-4)
