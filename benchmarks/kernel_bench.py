@@ -9,9 +9,12 @@ TPU kernel; it is reported for relative comparison between decode paths
 only.
 
 ``check_selection()`` asserts that plan construction picks the expected
-registry variant for each config — CI runs this in interpret mode
+registry variant for each config — both 2-D leaves and expert stacks (the
+``pallas:grouped*`` family) — and CI runs this in interpret mode
 (``python -m benchmarks.kernel_bench --smoke``) so a registry/predicate
-regression fails fast without a TPU.
+regression fails fast without a TPU.  The grouped section additionally
+benchmarks expert-stack tokens/s through the two served dispatch paths
+(compressed grouped kernel vs dequant + batched dot).
 
 Output: ``name,us_per_call,derived`` CSV rows + results/kernel_bench.json.
 """
@@ -39,6 +42,14 @@ SHAPES = [  # (M, K, N) — decode-ish GEMVs and a prefill tile; K=1536 is the
 ]
 SMOKE_SHAPES = [(1, 256, 512), (8, 128, 256), (4, 96, 256)]
 
+# expert-stack shapes (E, C, K, N) for the grouped family — the per-expert
+# capacity C plays the M role; K=1500 exercises K % w != 0 block padding.
+# Sized so E·K·N stays near the largest 2-D shape: interpret-mode decode
+# cost scales with total decoded weights and the full grid budgets one
+# call per path.
+GROUPED_SHAPES = [(4, 16, 2048, 8192), (4, 32, 1500, 4096)]
+SMOKE_GROUPED_SHAPES = [(2, 4, 120, 256)]
+
 # config grid: (label, cfg) — includes both specialization extremes
 CONFIGS = [
     ("mip2q_p0.5", StruMConfig(method="mip2q", p=0.5, L=5)),
@@ -61,18 +72,35 @@ EXPECTED_PALLAS = {
     "dliq_w12_p0.0": "pallas:dense",   # no w%8 constraint on the hi-only path
 }
 
+# ... and for expert-stack leaves (info.lead != ()): the grouped family
+EXPECTED_GROUPED = {
+    "mip2q_p0.5": "pallas:grouped",
+    "dliq_p0.5": "pallas:grouped",
+    "sparsity_p0.5": "pallas:grouped",
+    "dliq_p1.0": "pallas:grouped_maskfree",
+    "mip2q_p1.0": "pallas:grouped_maskfree",
+    "dliq_p0.0": "pallas:grouped_dense",
+    "dliq_w12_p0.0": "pallas:grouped_dense",
+}
+
 
 def check_selection(verbose: bool = True) -> None:
     """Assert plan construction picks the expected variant per config."""
     info = engine.LeafInfo(k_dim=256, n_out=512)
+    ginfo = engine.LeafInfo(k_dim=256, n_out=512, lead=(8,))
     for label, cfg in CONFIGS:
         got = engine.select_variant(cfg, info, backend="interpret").name
         want = EXPECTED_PALLAS[label]
         assert got == want, f"{label}: selected {got}, expected {want}"
+        gg = engine.select_variant(cfg, ginfo, backend="interpret").name
+        gw = EXPECTED_GROUPED[label]
+        assert gg == gw, f"{label} (stacked): selected {gg}, expected {gw}"
         # auto off-TPU must stay on the portable dequant path
         if jax.default_backend() != "tpu":
             auto = engine.select_variant(cfg, info).name
             assert auto == "xla:dequant", (label, auto)
+            gauto = engine.select_variant(cfg, ginfo).name
+            assert gauto == "xla:dequant", (label, gauto)
     # and through an actual plan: heterogeneous tree -> per-leaf variants
     params = {"a": {"w": jnp.zeros((256, 512))}, "b": {"w": jnp.zeros((256, 512))}}
     from repro.autotune.schedule import StruMSchedule
@@ -83,9 +111,23 @@ def check_selection(verbose: bool = True) -> None:
                              pack=False)
     assert plan.variants() == {"a/w": "pallas:onehot",
                                "b/w": "pallas:maskfree"}, plan.variants()
+    # expert-stack plan: stacked /moe/ leaves select the grouped family,
+    # never the dequant fallback, under a pallas backend
+    eparams = {"blocks": {"moe": {"wi": jnp.zeros((4, 256, 512)),
+                                  "wo": jnp.zeros((4, 512, 256))}}}
+    esched = StruMSchedule(assignments={
+        "blocks/moe/wi": StruMConfig(method="mip2q", p=0.5, L=5),
+        "blocks/moe/wo": StruMConfig(method="dliq", p=1.0, q=4)})
+    eplan = engine.build_plan(eparams, schedule=esched, backend="interpret",
+                              pack=False)
+    assert eplan.variants() == {
+        "blocks/moe/wi": "pallas:grouped",
+        "blocks/moe/wo": "pallas:grouped_maskfree"}, eplan.variants()
+    assert "xla:dequant" not in eplan.summary()["variant_distribution"]
     if verbose:
         print("selection check: "
-              f"{len(CONFIGS)} configs + heterogeneous plan OK")
+              f"{len(CONFIGS)} configs (2-D + stacked) + heterogeneous and "
+              f"expert-stack plans OK")
 
 
 def _bench_call(fn, *args, reps: int = 3, **kw) -> tuple[float, jnp.ndarray]:
@@ -152,6 +194,44 @@ def run(smoke: bool = False):
         if not covered:
             print(f"# {label}: no benchmark shape has K % w == 0 "
                   f"(w={cfg.w}) — config skipped")
+
+    # grouped expert-stack shapes: benchmark the two *served* dispatch paths
+    # (compressed pallas:grouped* vs the dequant + batched-dot fallback).
+    # No K % w skip — block padding is the grouped wrapper's job.
+    from repro.engine.dispatch import dequant_leaf, dispatch_grouped
+    from repro.models.quantize import _pack_leaf
+    gshapes = SMOKE_GROUPED_SHAPES if smoke else GROUPED_SHAPES
+    for label, cfg in configs:
+        for (e, c, k, n) in gshapes:
+            wt = jnp.asarray(rng.normal(size=(e, k, n)).astype(np.float32))
+            x = jnp.asarray(rng.normal(size=(e, c, k)).astype(np.float32))
+            leaf = dict(_pack_leaf(wt, cfg))
+            leaf["cfg"] = cfg
+            info = engine.LeafInfo(k_dim=k, n_out=n, lead=(e,))
+            sel = engine.select_variant(cfg, info, backend="interpret").name
+            assert sel == EXPECTED_GROUPED[label], (label, sel)
+            y_ref = jnp.matmul(x, dequant_leaf(leaf, jnp.float32, k_dim=k))
+            tol = 1e-4 * max(1.0, float(jnp.max(jnp.abs(y_ref))))
+            w_bytes = sum(int(leaf[key].size) for key in ("mask", "hi", "lo"))
+            dense_bf16, dense_int8 = e * k * n * 2, e * k * n
+            for backend, name in (("interpret", sel), ("xla", "xla:dequant")):
+                reps = 1 if (backend == "interpret" and not smoke) else 3
+                t_call, y = _bench_call(dispatch_grouped, leaf, x,
+                                        backend=backend, reps=reps)
+                err = float(jnp.max(jnp.abs(y - y_ref)))
+                rows.append({
+                    "config": f"grouped_{label}", "variant": name,
+                    "m": e * c, "k": k, "n": n, "lead": e,
+                    "err_tol": tol,
+                    "packed_bytes": w_bytes,
+                    "ratio_vs_int8": w_bytes / dense_int8,
+                    "ratio_vs_bf16": w_bytes / dense_bf16,
+                    "proj_decode_us_bf16": dense_bf16 / HBM_BW * 1e6,
+                    "proj_decode_us_strum": w_bytes / HBM_BW * 1e6,
+                    "sec_per_call": t_call,
+                    "tokens_per_s": e * c / t_call,
+                    "max_abs_err": err,
+                })
     os.makedirs(os.path.join(os.path.dirname(__file__), "results"),
                 exist_ok=True)
     with open(os.path.join(os.path.dirname(__file__), "results",

@@ -24,7 +24,8 @@ The legacy entrypoints (``core.apply.pack_tree`` / ``fake_quantize_tree``,
 ``models.quantize.strum_serve_params``) remain as thin deprecated shims over
 plan construction.
 """
-from repro.engine.dispatch import apply, dequant_leaf, dispatch, leaf_spec
+from repro.engine.dispatch import (apply, dequant_leaf, dispatch,
+                                   dispatch_grouped, leaf_spec)
 from repro.engine.plan import (ExecutionPlan, PlanEntry, build_plan,
                                fake_quantize)
 from repro.engine.registry import (BACKENDS, ExecSpec, KernelVariant,
@@ -33,7 +34,7 @@ from repro.engine.registry import (BACKENDS, ExecSpec, KernelVariant,
                                    select_variant, unregister_kernel)
 
 __all__ = [
-    "apply", "dispatch", "dequant_leaf", "leaf_spec",
+    "apply", "dispatch", "dispatch_grouped", "dequant_leaf", "leaf_spec",
     "ExecutionPlan", "PlanEntry", "build_plan", "fake_quantize",
     "BACKENDS", "ExecSpec", "KernelVariant", "LeafInfo",
     "register_kernel", "unregister_kernel", "get_variant", "list_variants",

@@ -9,6 +9,7 @@ registry — there is exactly one selection rule either way.
 """
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
@@ -19,7 +20,8 @@ from repro.core.policy import StruMConfig
 from repro.engine.registry import (ExecSpec, LeafInfo, get_variant,
                                    resolve_backend, select_variant)
 
-__all__ = ["dispatch", "apply", "dequant_leaf", "leaf_spec"]
+__all__ = ["dispatch", "dispatch_grouped", "apply", "dequant_leaf",
+           "leaf_spec"]
 
 PAYLOAD_KEYS = ("mask", "hi", "lo", "scale")
 
@@ -48,6 +50,14 @@ def _as_packed(wleaf: dict, cfg: StruMConfig, k_dim: int) -> packing.PackedStruM
         hi=wleaf["hi"], lo=wleaf["lo"])
 
 
+def _check_k(spec: Optional[ExecSpec], k_dim: int) -> None:
+    """A plan-built leaf records its true reduction dim — a mismatched x
+    would otherwise contract against a silently truncated/padded weight."""
+    if spec is not None and spec.k_dim is not None and spec.k_dim != k_dim:
+        raise ValueError(f"x K={k_dim} does not match the leaf's recorded "
+                         f"reduction dim K={spec.k_dim}")
+
+
 def _pick(cfg: StruMConfig, info: LeafInfo, spec: Optional[ExecSpec],
           backend: Optional[str]):
     """(variant, interpret-flag) for this call.
@@ -70,12 +80,15 @@ def dispatch(wleaf: dict, x: jnp.ndarray, *,
     """y = x @ dequant(leaf) through the leaf's selected kernel variant.
 
     ``x``: (..., K); returns (..., N) in ``out_dtype`` (default x.dtype).
+    Stacked leaves (lead dims, e.g. MoE expert stacks) delegate to
+    :func:`dispatch_grouped` — ``x`` must then carry matching lead dims.
     With ``tp_mesh``/``tp_pattern`` the leaf is FSDP-gathered *compressed*
     and dequantized locally (models.quantize.gather_dequant) — the
     distributed serving path, where the collective itself is the win.
     """
     cfg, spec = leaf_spec(wleaf, strum)
     k_dim = x.shape[-1]
+    _check_k(spec, k_dim)
     out_dtype = out_dtype or x.dtype
 
     if tp_mesh is not None and tp_pattern is not None:
@@ -87,9 +100,8 @@ def dispatch(wleaf: dict, x: jnp.ndarray, *,
 
     lead_dims = wleaf["mask"].ndim - 3          # stacked (expert/scan) leaves
     if lead_dims > 0:
-        raise ValueError(
-            "dispatch() is a 2-D matmul; stacked leaves go through "
-            "dequant_leaf() + the caller's grouped contraction (models.moe)")
+        return dispatch_grouped(wleaf, x, strum=strum, backend=backend,
+                                accum_dtype=accum_dtype, out_dtype=out_dtype)
 
     info = LeafInfo(k_dim=k_dim, n_out=wleaf["scale"].shape[-1],
                     lead=(), name="")
@@ -101,33 +113,93 @@ def dispatch(wleaf: dict, x: jnp.ndarray, *,
     return y.reshape(lead + (y.shape[-1],))
 
 
+def dispatch_grouped(wleaf: dict, x: jnp.ndarray, *,
+                     strum: Optional[StruMConfig] = None,
+                     backend: Optional[str] = None,
+                     accum_dtype=jnp.float32,
+                     out_dtype=None) -> jnp.ndarray:
+    """Batched y[..., c, n] = x[..., c, :] @ dequant(leaf[...]) for stacks.
+
+    ``x``: (lead..., C, K) where ``lead`` matches the leaf's stack dims —
+    e.g. MoE expert buffers ``(E, C, D)`` against a packed ``(E, D, F)``
+    stack.  Selection goes through the same registry as 2-D dispatch: a
+    ``grouped`` variant (``pallas:grouped*``) streams the compressed stack
+    through a lead-axis Pallas grid; any non-grouped selection (the
+    ``xla:dequant`` fallback) decompresses the stack at its *true* K and
+    contracts with a batched XLA dot.
+    """
+    cfg, spec = leaf_spec(wleaf, strum)
+    lead_dims = wleaf["mask"].ndim - 3
+    if lead_dims == 0:
+        return dispatch(wleaf, x, strum=strum, backend=backend,
+                        accum_dtype=accum_dtype, out_dtype=out_dtype)
+    lead = wleaf["mask"].shape[:lead_dims]
+    if x.ndim != lead_dims + 2 or tuple(x.shape[:lead_dims]) != tuple(lead):
+        raise ValueError(
+            f"stacked leaf with lead dims {tuple(lead)} needs x of shape "
+            f"(*lead, C, K); got {tuple(x.shape)}")
+    k_dim = x.shape[-1]
+    _check_k(spec, k_dim)
+    out_dtype = out_dtype or x.dtype
+
+    info = LeafInfo(k_dim=k_dim, n_out=wleaf["scale"].shape[-1],
+                    lead=tuple(lead), name="")
+    variant, interpret = _pick(cfg, info, spec, backend)
+    if variant.grouped:
+        packed = _as_packed(wleaf, cfg, k_dim)
+        return variant.fn(x, packed, out_dtype=out_dtype,
+                          interpret=interpret, accum_dtype=accum_dtype)
+    wd = dequant_leaf(wleaf, x.dtype, cfg=cfg, k_dim=k_dim)
+    return jnp.matmul(x, wd, preferred_element_type=accum_dtype or
+                      jnp.float32).astype(out_dtype)
+
+
 def apply(plan, name: str, x: jnp.ndarray, *, backend: Optional[str] = None,
           **kw) -> jnp.ndarray:
-    """Name-keyed plan execution: y = x @ dequant(plan[name])."""
+    """Name-keyed plan execution: y = x @ dequant(plan[name]).
+
+    Stacked serving-layout entries (MoE expert stacks) route through
+    :func:`dispatch_grouped` — ``x`` must then carry the matching lead dims.
+    Column-folded entries fold lead dims into output channels, so a 3-D+
+    original shape cannot be served as a matmul at all.
+    """
     entry = plan.entries[name]
     if entry.leaf is None:
         raise ValueError(f"plan entry {name!r} is selection-only "
                          f"(built with pack=False)")
-    if entry.layout == "serve" and len(entry.shape) > 2:
-        raise ValueError(f"{name!r} is a stacked leaf; apply() serves 2-D "
-                         f"matmuls — use plan[{name!r}].dequantized()")
+    if entry.layout == "folded" and len(entry.shape) > 2:
+        raise ValueError(
+            f"{name!r} folded a {len(entry.shape)}-D weight of shape "
+            f"{entry.shape} into columns; apply() would return "
+            f"column-folded output — use plan[{name!r}].dequantized()")
     return dispatch(entry.leaf, x, backend=backend, **kw)
 
 
 def dequant_leaf(wleaf, dtype=jnp.bfloat16,
-                 cfg: Optional[StruMConfig] = None) -> jnp.ndarray:
+                 cfg: Optional[StruMConfig] = None,
+                 k_dim: Optional[int] = None) -> jnp.ndarray:
     """Decompress a (possibly stacked) packed leaf to dense weights.
 
     Non-dict leaves pass through — callers can feed any mix of packed and
     dense stacks (a heterogeneous schedule may pack any subset).  Stacked
     payloads (lead dims, e.g. MoE expert stacks ``(E, nb, rows, N)``) are
     vmapped over their lead axes.
+
+    The true (unpadded) K comes from, in order: the explicit ``k_dim``
+    argument, the leaf's embedded ``spec`` (plan-built leaves record it),
+    or — last resort, legacy hand-built leaves only — the padded payload
+    (``nb * w``).  The padded derivation is only correct when ``K % w == 0``:
+    padding rows decode to *nonzero* junk (MIP2Q code 0 is ±2⁰·scale), so
+    plan-built stacks always carry the exact K.
     """
     if not isinstance(wleaf, dict):
         return wleaf
-    cfg, _ = leaf_spec(wleaf, cfg)
+    cfg, spec = leaf_spec(wleaf, cfg)
     lead_dims = wleaf["mask"].ndim - 3
-    k_dim = wleaf["mask"].shape[-3] * cfg.w
+    if k_dim is None:
+        k_dim = getattr(spec, "k_dim", None)
+    if k_dim is None:
+        k_dim = wleaf["mask"].shape[-3] * cfg.w
 
     def one(mask, hi, lo, scale):
         p = packing.PackedStruM(
@@ -137,8 +209,9 @@ def dequant_leaf(wleaf, dtype=jnp.bfloat16,
 
     if lead_dims == 0:
         return one(wleaf["mask"], wleaf["hi"], wleaf["lo"], wleaf["scale"])
-    fields = [wleaf["mask"], wleaf["hi"], wleaf["lo"], wleaf["scale"]]
-    flat = [f.reshape((-1,) + f.shape[lead_dims:]) for f in fields]
-    dq = jax.vmap(one)(*flat)
     lead = wleaf["mask"].shape[:lead_dims]
-    return dq.reshape(lead + dq.shape[1:])
+    g = math.prod(lead)   # explicit: -1 breaks on 0-row payloads (sparsity)
+    fields = [wleaf["mask"], wleaf["hi"], wleaf["lo"], wleaf["scale"]]
+    flat = [f.reshape((g,) + f.shape[lead_dims:]) for f in fields]
+    dq = jax.vmap(one)(*flat)
+    return dq.reshape(tuple(lead) + dq.shape[1:])

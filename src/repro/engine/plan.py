@@ -74,8 +74,11 @@ class PlanEntry:
 
     @property
     def spec(self) -> ExecSpec:
+        # K is shape[-2] in both layouts (folding moves lead dims into
+        # columns); recording it lets stacked dequant slice off block
+        # padding, which decodes to junk rather than zeros
         return ExecSpec(cfg=self.cfg, variant=self.variant,
-                        backend=self.backend)
+                        backend=self.backend, k_dim=self.shape[-2])
 
     def as_packed(self) -> packing.PackedStruM:
         """The 2-D :class:`PackedStruM` view (folded, or lead-free serve)."""
@@ -211,8 +214,9 @@ def build_plan(params: Any, *, schedule: Any = None,
                ) -> PlanEntry:
         # exec_lead: lead dims as the *kernel* sees them.  Scan-group leads
         # are () — lax.scan slices them away before dispatch — while MoE
-        # expert stacks keep theirs (a grouped contraction the pallas
-        # family cannot express yet, so selection falls back to dequant).
+        # expert stacks keep theirs and select from the grouped registry
+        # family (pallas:grouped* on a pallas backend, xla:dequant where no
+        # grouped variant expresses the config).
         shape = tuple(leaf.shape)
         info = LeafInfo(k_dim=shape[-2], n_out=shape[-1], lead=exec_lead,
                         name=name)

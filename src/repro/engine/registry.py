@@ -58,6 +58,12 @@ class KernelVariant:
     on flattened ``(M, K)`` activations and a :class:`PackedStruM`; wrappers
     ignore kwargs their substrate has no use for (xla ignores ``interpret``,
     pallas ignores ``accum_dtype`` — it always accumulates f32 in the MXU).
+
+    ``grouped=True`` marks a variant whose ``fn`` contracts *stacked* leaves:
+    it takes ``(lead..., M, K)`` activations plus a PackedStruM whose payload
+    fields carry the same lead dims, and returns ``(lead..., M, N)``.  Its
+    ``supports`` predicate should require ``info.lead`` — the two shapes are
+    disjoint, so grouped and 2-D variants never compete for the same leaf.
     """
 
     name: str
@@ -66,6 +72,7 @@ class KernelVariant:
     family: str = "pallas"
     priority: int = 0
     description: str = ""
+    grouped: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +88,11 @@ class ExecSpec:
     variant: str
     backend: Optional[str] = None   # plan-level backend the variant was
                                     # selected under (None = auto)
+    k_dim: Optional[int] = None     # true (unpadded) reduction dim — packed
+                                    # payloads only know ceil(K/w)*w, so
+                                    # stacked dequant needs this to slice off
+                                    # block-padding rows (which decode to
+                                    # junk, not zero, under MIP2Q)
 
 
 try:
@@ -93,7 +105,8 @@ _REGISTRY: dict[str, KernelVariant] = {}
 
 
 def register_kernel(name: str, *, supports: Callable, family: str = "pallas",
-                    priority: int = 0, description: str = ""):
+                    priority: int = 0, description: str = "",
+                    grouped: bool = False):
     """Decorator: register ``fn`` as kernel variant ``name``.
 
     Re-registering a name replaces the previous entry (latest wins), so a
@@ -105,7 +118,7 @@ def register_kernel(name: str, *, supports: Callable, family: str = "pallas",
     def deco(fn):
         _REGISTRY[name] = KernelVariant(
             name=name, fn=fn, supports=supports, family=family,
-            priority=priority, description=description)
+            priority=priority, description=description, grouped=grouped)
         return fn
     return deco
 
@@ -161,12 +174,11 @@ def select_variant(cfg: StruMConfig, info: LeafInfo,
         cands = [v for v in _REGISTRY.values()
                  if v.family == family and v.supports(cfg, info)]
         if cands:
-            if family != fam and backend not in (None, "auto") and \
-                    not info.lead:
+            if family != fam and backend not in (None, "auto"):
                 # an explicitly requested family had no supporting variant
-                # for a plain 2-D leaf — substitution should be visible
-                # (stacked leaves fall back by design until a grouped
-                # pallas matmul registers)
+                # — substitution should be visible (stacked leaves now have
+                # the pallas:grouped* family, so they warn like 2-D leaves
+                # when, e.g., w % 8 != 0 forces the dequant fallback)
                 warnings.warn(
                     f"backend={backend!r} has no variant supporting "
                     f"{cfg.method} w={cfg.w} n_low={cfg.n_low} "

@@ -6,13 +6,19 @@ Each wraps an existing lowering behind the uniform variant signature
   pallas:maskfree   p = 1.0 — lo payload only, no mask/hi stream
   pallas:dense      n_low = 0 — hi payload only; works for any ``w``
   pallas:onehot     general one-hot scatter decode (needs ``w % 8 == 0``)
-  xla:dequant       dequantize + XLA dot — the portable fallback; the only
-                    family that expresses stacked (expert / scan) leaves
-                    until a grouped Pallas matmul registers itself
+  pallas:grouped            stacked (expert / scan) leaves — lead grid axis,
+                            same one-hot decode per group
+  pallas:grouped_maskfree   stacked, p = 1.0
+  pallas:grouped_dense      stacked, n_low = 0 (any ``w``)
+  xla:dequant       dequantize + XLA dot — the portable fallback for both
+                    2-D and stacked leaves (stacks dequant + batched dot)
   ref:jnp           pure-jnp oracle (``kernels.ref``)
 
 Specializations carry higher priority than the general Pallas path, so
-selection prefers the cheapest decoder that can express the config.
+selection prefers the cheapest decoder that can express the config.  The
+``pallas:grouped*`` family only accepts ``info.lead != ()``; stacks whose
+config no grouped variant expresses (``w % 8 != 0`` with a mixed payload)
+still fall back to ``xla:dequant``.
 """
 from __future__ import annotations
 
@@ -25,6 +31,10 @@ from repro.kernels import ops, ref
 
 def _two_d(cfg, info):
     return not info.lead
+
+
+def _stacked(cfg, info):
+    return bool(info.lead)
 
 
 @register_kernel(
@@ -53,6 +63,36 @@ def _maskfree(x2, packed, *, out_dtype=None, interpret=None, accum_dtype=None):
 def _dense(x2, packed, *, out_dtype=None, interpret=None, accum_dtype=None):
     return ops.strum_matmul(x2, packed, out_dtype=out_dtype,
                             interpret=interpret, variant="dense")
+
+
+@register_kernel(
+    "pallas:grouped", family="pallas", priority=10, grouped=True,
+    supports=lambda cfg, info: _stacked(cfg, info) and cfg.w % 8 == 0,
+    description="stacked expert/scan leaves: lead grid axis, one-hot decode")
+def _grouped(xg, packed, *, out_dtype=None, interpret=None, accum_dtype=None):
+    return ops.strum_grouped_matmul(xg, packed, out_dtype=out_dtype,
+                                    interpret=interpret, variant="onehot")
+
+
+@register_kernel(
+    "pallas:grouped_maskfree", family="pallas", priority=20, grouped=True,
+    supports=lambda cfg, info: (_stacked(cfg, info) and cfg.n_low == cfg.w
+                                and cfg.method in ("dliq", "mip2q")),
+    description="stacked p=1.0: per-group lo payload only, no mask/hi stream")
+def _grouped_maskfree(xg, packed, *, out_dtype=None, interpret=None,
+                      accum_dtype=None):
+    return ops.strum_grouped_matmul(xg, packed, out_dtype=out_dtype,
+                                    interpret=interpret, variant="maskfree")
+
+
+@register_kernel(
+    "pallas:grouped_dense", family="pallas", priority=20, grouped=True,
+    supports=lambda cfg, info: _stacked(cfg, info) and cfg.n_low == 0,
+    description="stacked n_low=0: per-group hi payload in order; any w")
+def _grouped_dense(xg, packed, *, out_dtype=None, interpret=None,
+                   accum_dtype=None):
+    return ops.strum_grouped_matmul(xg, packed, out_dtype=out_dtype,
+                                    interpret=interpret, variant="dense")
 
 
 @register_kernel(

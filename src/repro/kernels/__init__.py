@@ -9,10 +9,10 @@ code should dispatch through :mod:`repro.engine` rather than importing
 kernels directly.
 """
 from repro.kernels.ops import (PALLAS_VARIANTS, default_interpret,
-                               strum_gemv, strum_matmul)
+                               strum_gemv, strum_grouped_matmul, strum_matmul)
 from repro.kernels.ref import strum_dequant_ref, strum_matmul_ref
 
 __all__ = [
-    "strum_matmul", "strum_gemv", "default_interpret", "PALLAS_VARIANTS",
-    "strum_matmul_ref", "strum_dequant_ref",
+    "strum_matmul", "strum_gemv", "strum_grouped_matmul", "default_interpret",
+    "PALLAS_VARIANTS", "strum_matmul_ref", "strum_dequant_ref",
 ]

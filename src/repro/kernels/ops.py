@@ -17,6 +17,7 @@ selects the variant from each leaf's :class:`StruMConfig`.
 """
 from __future__ import annotations
 
+import math
 import os
 
 import jax
@@ -25,10 +26,13 @@ import jax.numpy as jnp
 from repro.core.packing import PackedStruM
 from repro.kernels.strum_matmul import (strum_matmul_pallas,
                                         strum_matmul_pallas_dense,
+                                        strum_matmul_pallas_grouped,
+                                        strum_matmul_pallas_grouped_dense,
+                                        strum_matmul_pallas_grouped_maskfree,
                                         strum_matmul_pallas_maskfree)
 
-__all__ = ["strum_matmul", "strum_gemv", "default_interpret",
-           "PALLAS_VARIANTS"]
+__all__ = ["strum_matmul", "strum_gemv", "strum_grouped_matmul",
+           "default_interpret", "PALLAS_VARIANTS"]
 
 PALLAS_VARIANTS = ("onehot", "maskfree", "dense")
 
@@ -50,6 +54,36 @@ def _pad_axis(a: jnp.ndarray, axis: int, to: int) -> jnp.ndarray:
     widths = [(0, 0)] * a.ndim
     widths[axis] = (0, pad)
     return jnp.pad(a, widths)
+
+
+def _min1(a: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Payload axes must be >= 1 for BlockSpec; the zero filler is inert."""
+    if a.shape[axis] != 0:
+        return a
+    shape = list(a.shape)
+    shape[axis] = 1
+    return jnp.zeros(tuple(shape), a.dtype)
+
+
+def _validate_variant(variant: str, packed: PackedStruM) -> None:
+    """Preconditions shared by the 2-D and grouped variant dispatch."""
+    w = packed.w
+    if variant == "onehot":
+        if w % 8:
+            raise ValueError(f"onehot variant needs byte-aligned mask rows "
+                             f"(w={w}); use the dequant fallback")
+    elif variant == "maskfree":
+        if packed.n_low != w or packed.method not in ("dliq", "mip2q"):
+            raise ValueError(f"maskfree variant needs n_low == w and a lo "
+                             f"payload, got n_low={packed.n_low} w={w} "
+                             f"method={packed.method}")
+    elif variant == "dense":
+        if packed.n_low != 0:
+            raise ValueError(f"dense variant needs n_low == 0, "
+                             f"got {packed.n_low}")
+    else:
+        raise ValueError(f"unknown variant {variant!r}; "
+                         f"want one of {PALLAS_VARIANTS}")
 
 
 def _pick_block(dim: int, pref: int, align: int) -> int:
@@ -88,14 +122,9 @@ def _prepare(x: jnp.ndarray, packed: PackedStruM, block_m: int, block_n: int,
 
     x2 = _pad_axis(_pad_axis(x2, 0, bm), 1, bk)
 
-    def _min1(a):  # payload axes must be >= 1 for BlockSpec; zeros are inert
-        if a.shape[1] == 0:
-            return jnp.zeros((a.shape[0], 1, a.shape[2]), a.dtype)
-        return a
-
     mask = _pad_axis(_pad_axis(packed.mask, 0, bk // w), 2, bn)
-    hi = _pad_axis(_pad_axis(_min1(packed.hi), 0, bk // w), 2, bn)
-    lo = _pad_axis(_pad_axis(_min1(packed.lo), 0, bk // w), 2, bn)
+    hi = _pad_axis(_pad_axis(_min1(packed.hi, 1), 0, bk // w), 2, bn)
+    lo = _pad_axis(_pad_axis(_min1(packed.lo, 1), 0, bk // w), 2, bn)
     # zero scale in padded columns kills any junk the decoder would produce
     scale = _pad_axis(packed.scale, 1, bn)
     return x2, mask, hi, lo, scale, (lead, m, n, bm, bn, bk)
@@ -113,37 +142,96 @@ def strum_matmul(x: jnp.ndarray, packed: PackedStruM, *,
     if interpret is None:
         interpret = default_interpret()
     out_dtype = out_dtype or x.dtype
+    _validate_variant(variant, packed)
     x2, mask, hi, lo, scale, (lead, m, n, bm, bn, bk) = _prepare(
         x, packed, block_m, block_n, block_k)
     w = packed.w
 
     if variant == "onehot":
-        if w % 8:
-            raise ValueError(f"onehot variant needs byte-aligned mask rows "
-                             f"(w={w}); use the dequant fallback")
         y = strum_matmul_pallas(
             x2, mask, hi, lo, scale,
             w=w, n_low=packed.n_low, q=packed.q, method=packed.method,
             block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
     elif variant == "maskfree":
-        if packed.n_low != w or packed.method not in ("dliq", "mip2q"):
-            raise ValueError(f"maskfree variant needs n_low == w and a lo "
-                             f"payload, got n_low={packed.n_low} w={w} "
-                             f"method={packed.method}")
         y = strum_matmul_pallas_maskfree(
             x2, lo, scale, w=w, q=packed.q, method=packed.method,
             block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
-    elif variant == "dense":
-        if packed.n_low != 0:
-            raise ValueError(f"dense variant needs n_low == 0, "
-                             f"got {packed.n_low}")
+    else:
         y = strum_matmul_pallas_dense(
             x2, hi, scale, w=w,
             block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
-    else:
-        raise ValueError(f"unknown variant {variant!r}; "
-                         f"want one of {PALLAS_VARIANTS}")
     return y[:m, :n].reshape(lead + (n,)).astype(out_dtype)
+
+
+def strum_grouped_matmul(x: jnp.ndarray, packed: PackedStruM, *,
+                         out_dtype=None, block_m: int = 128,
+                         block_n: int = 256, block_k: int = 256,
+                         interpret: bool | None = None,
+                         variant: str = "onehot") -> jnp.ndarray:
+    """Batched y[..., m, n] = x[..., m, :] @ dequant(W[...]) for stacked leaves.
+
+    ``packed`` carries lead stack dims on every payload field — mask
+    ``(lead..., nb, w//8, N)``, hi/lo alike, scale ``(lead..., 1, N)`` — the
+    serving layout :func:`repro.models.quantize._pack_leaf` emits for MoE
+    expert stacks.  ``x`` is ``(lead..., M, K)`` with ``K == packed.k_dim``
+    (the true, unpadded reduction dim).  Lead dims are flattened into one
+    grid axis; per-stack padding / tile selection mirrors
+    :func:`strum_matmul`.  Returns ``(lead..., M, N)`` in ``out_dtype``.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    out_dtype = out_dtype or x.dtype
+    _validate_variant(variant, packed)
+    lead_dims = packed.mask.ndim - 3
+    if lead_dims < 1:
+        raise ValueError("strum_grouped_matmul needs stacked payloads "
+                         "(lead dims); use strum_matmul for 2-D leaves")
+    lead = packed.mask.shape[:lead_dims]
+    if x.ndim != lead_dims + 2 or x.shape[:lead_dims] != lead:
+        raise ValueError(f"x shape {x.shape} does not match packed lead "
+                         f"dims {lead} + (M, K)")
+    k_in = x.shape[-1]
+    if k_in != packed.k_dim:
+        raise ValueError(f"x K={k_in} vs packed k_dim={packed.k_dim}")
+    w = packed.w
+    m, n = x.shape[-2], packed.n_out
+    nb = packed.mask.shape[-3]
+    k_pad = nb * w
+
+    bm = _pick_block(m, block_m, 8)
+    bn = _pick_block(n, block_n, 128)
+    bk = _pick_block(k_pad, block_k, w)
+
+    g = math.prod(lead)
+    x3 = x.reshape((g, m, k_in))
+    # zero-padded x rows null out whatever the decoder produces for padded
+    # K blocks (MIP2Q code 0 decodes to ±1, not 0 — junk rows are benign
+    # only because the matching activations are zero)
+    x3 = _pad_axis(_pad_axis(x3, 1, bm), 2, bk)
+
+    def _flat(a):
+        return a.reshape((g,) + a.shape[lead_dims:])
+
+    mask = _pad_axis(_pad_axis(_flat(packed.mask), 1, bk // w), 3, bn)
+    hi = _pad_axis(_pad_axis(_min1(_flat(packed.hi), 2), 1, bk // w), 3, bn)
+    lo = _pad_axis(_pad_axis(_min1(_flat(packed.lo), 2), 1, bk // w), 3, bn)
+    # zero scale in padded columns kills any junk the decoder would produce
+    scale = _pad_axis(_flat(packed.scale), 2, bn)
+
+    if variant == "onehot":
+        y = strum_matmul_pallas_grouped(
+            x3, mask, hi, lo, scale,
+            w=w, n_low=packed.n_low, q=packed.q, method=packed.method,
+            block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    elif variant == "maskfree":
+        y = strum_matmul_pallas_grouped_maskfree(
+            x3, lo, scale, w=w, q=packed.q, method=packed.method,
+            block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    else:
+        y = strum_matmul_pallas_grouped_dense(
+            x3, hi, scale, w=w,
+            block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    return y[:, :m, :n].reshape(lead + (m, n)).astype(out_dtype)
 
 
 def strum_gemv(x: jnp.ndarray, packed: PackedStruM, *, out_dtype=None,

@@ -39,6 +39,15 @@ and skip the rank/one-hot machinery entirely:
                                   decode is a reshape + scale.  No mask or lo
                                   stream, and no ``w % 8`` constraint.
 
+The **grouped** family (``strum_matmul_pallas_grouped`` and its
+maskfree/dense twins) batches the same decode over a *leading* stack axis —
+one grid dimension per expert/scan group, so MoE expert stacks execute
+compressed end-to-end instead of falling back to dequantize + XLA einsum.
+Every group streams its own packed payload tile (same uniform DMA
+descriptors: StruM's fixed ``n_low`` keeps block shapes static across
+experts), and the decode helpers (`_decode_tile`, `_unpack_fields`,
+`_decode_low`) are shared with the 2-D kernels verbatim.
+
 Selection between these lives in :mod:`repro.engine.registry` — the kernels
 themselves stay selection-free.
 """
@@ -55,6 +64,9 @@ __all__ = [
     "strum_matmul_pallas",
     "strum_matmul_pallas_maskfree",
     "strum_matmul_pallas_dense",
+    "strum_matmul_pallas_grouped",
+    "strum_matmul_pallas_grouped_maskfree",
+    "strum_matmul_pallas_grouped_dense",
 ]
 
 
@@ -128,7 +140,7 @@ def _decode_tile(mask_u8, hi_i8, lo_u8, scale_f32, *, w, n_low, q, method):
 
 
 def _kernel(x_ref, mask_ref, hi_ref, lo_ref, scale_ref, o_ref, *,
-            w, n_low, q, method, k_steps):
+            w, n_low, q, method):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -160,8 +172,7 @@ def strum_matmul_pallas(x, mask, hi, lo, scale, *, w: int, n_low: int, q: int,
     bnb = block_k // w
     grid = (m // block_m, n // block_n, k_dim // block_k)
 
-    kern = functools.partial(_kernel, w=w, n_low=n_low, q=q, method=method,
-                             k_steps=grid[2])
+    kern = functools.partial(_kernel, w=w, n_low=n_low, q=q, method=method)
     n_high = w - n_low
     lb = lo.shape[1]
     mb = w // 8
@@ -178,18 +189,17 @@ def strum_matmul_pallas(x, mask, hi, lo, scale, *, w: int, n_low: int, q: int,
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
-        compiler_params=dict(
-            mosaic=dict(dimension_semantics=("parallel", "parallel", "arbitrary"))
-        ) if not interpret else None,
+        compiler_params=_mosaic_params(interpret),
     )(x, mask, hi, lo, scale)
     return out
 
 
-def _mosaic_params(interpret: bool):
+def _mosaic_params(interpret: bool, grid_rank: int = 3):
     if interpret:
         return None
+    # all axes are parallel except the innermost reduction (k) axis
     return dict(mosaic=dict(
-        dimension_semantics=("parallel", "parallel", "arbitrary")))
+        dimension_semantics=("parallel",) * (grid_rank - 1) + ("arbitrary",)))
 
 
 def _kernel_maskfree(x_ref, lo_ref, scale_ref, o_ref, *, w, q, method):
@@ -279,4 +289,162 @@ def strum_matmul_pallas_dense(x, hi, scale, *, w: int,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
         compiler_params=_mosaic_params(interpret),
+    )(x, hi, scale)
+
+
+# --------------------------------------------------------------- grouped --
+#
+# Expert-stack lowerings: grid (G, M/bm, N/bn, K/bk) with the *lead* stack
+# axis outermost.  Each (g, i, j, kk) step streams group g's packed payload
+# tile and decodes it with the same helpers as the 2-D kernels — the MoE
+# expert contraction never materializes dense weights in HBM.
+
+def _kernel_grouped(x_ref, mask_ref, hi_ref, lo_ref, scale_ref, o_ref, *,
+                    w, n_low, q, method):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    wv = _decode_tile(mask_ref[0], hi_ref[0], lo_ref[0], scale_ref[0],
+                      w=w, n_low=n_low, q=q, method=method)
+    x = x_ref[0].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x, wv, preferred_element_type=jnp.float32)[None]
+
+
+def strum_matmul_pallas_grouped(x, mask, hi, lo, scale, *, w: int,
+                                n_low: int, q: int, method: str,
+                                block_m: int = 128, block_n: int = 128,
+                                block_k: int = 128, interpret: bool = True):
+    """y(G,M,N) = batched x(G,M,K) @ dequant(packed W[g]) per stack group.
+
+    Operands are stacked PackedStruM fields:
+      mask  (G, nb, w//8, N) uint8,  hi (G, nb, n_high, N) int8,
+      lo    (G, nb, lb, N)   uint8,  scale (G, 1, N) f32.
+    """
+    g, m, k_dim = x.shape
+    nb, n = mask.shape[1], mask.shape[3]
+    assert k_dim == nb * w, (k_dim, nb, w)
+    assert w % 8 == 0, "grouped onehot path requires byte-aligned mask rows"
+    assert block_k % w == 0
+    assert m % block_m == 0 and n % block_n == 0 and k_dim % block_k == 0
+    bnb = block_k // w
+    grid = (g, m // block_m, n // block_n, k_dim // block_k)
+    kern = functools.partial(_kernel_grouped, w=w, n_low=n_low, q=q,
+                             method=method)
+    n_high = w - n_low
+    mb, lb = w // 8, lo.shape[2]
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, block_k),
+                         lambda e, i, j, kk: (e, i, kk)),
+            pl.BlockSpec((1, bnb, mb, block_n),
+                         lambda e, i, j, kk: (e, kk, 0, j)),
+            pl.BlockSpec((1, bnb, max(n_high, 1), block_n),
+                         lambda e, i, j, kk: (e, kk, 0, j)),
+            pl.BlockSpec((1, bnb, max(lb, 1), block_n),
+                         lambda e, i, j, kk: (e, kk, 0, j)),
+            pl.BlockSpec((1, 1, block_n), lambda e, i, j, kk: (e, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n),
+                               lambda e, i, j, kk: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, m, n), jnp.float32),
+        interpret=interpret,
+        compiler_params=_mosaic_params(interpret, grid_rank=4),
+    )(x, mask, hi, lo, scale)
+
+
+def _kernel_grouped_maskfree(x_ref, lo_ref, scale_ref, o_ref, *, w, q, method):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    codes = _unpack_fields(lo_ref[0], w, q)                  # (bnb, w, bn)
+    vals = _decode_low(codes, method, q)
+    bnb, _, bn = vals.shape
+    wv = vals.reshape(bnb * w, bn) * scale_ref[0]
+    x = x_ref[0].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x, wv, preferred_element_type=jnp.float32)[None]
+
+
+def strum_matmul_pallas_grouped_maskfree(x, lo, scale, *, w: int, q: int,
+                                         method: str, block_m: int = 128,
+                                         block_n: int = 128,
+                                         block_k: int = 128,
+                                         interpret: bool = True):
+    """Grouped p = 1.0 path: per-group lo payload only, no mask/hi stream."""
+    g, m, k_dim = x.shape
+    _, nb, lb, n = lo.shape
+    assert k_dim == nb * w, (k_dim, nb, w)
+    assert method in ("dliq", "mip2q"), method
+    assert block_k % w == 0
+    assert m % block_m == 0 and n % block_n == 0 and k_dim % block_k == 0
+    bnb = block_k // w
+    grid = (g, m // block_m, n // block_n, k_dim // block_k)
+    kern = functools.partial(_kernel_grouped_maskfree, w=w, q=q, method=method)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, block_k),
+                         lambda e, i, j, kk: (e, i, kk)),
+            pl.BlockSpec((1, bnb, lb, block_n),
+                         lambda e, i, j, kk: (e, kk, 0, j)),
+            pl.BlockSpec((1, 1, block_n), lambda e, i, j, kk: (e, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n),
+                               lambda e, i, j, kk: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, m, n), jnp.float32),
+        interpret=interpret,
+        compiler_params=_mosaic_params(interpret, grid_rank=4),
+    )(x, lo, scale)
+
+
+def _kernel_grouped_dense(x_ref, hi_ref, scale_ref, o_ref, *, w):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    hv = hi_ref[0].astype(jnp.float32)                       # (bnb, w, bn)
+    bnb, _, bn = hv.shape
+    wv = hv.reshape(bnb * w, bn) * scale_ref[0]
+    x = x_ref[0].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x, wv, preferred_element_type=jnp.float32)[None]
+
+
+def strum_matmul_pallas_grouped_dense(x, hi, scale, *, w: int,
+                                      block_m: int = 128, block_n: int = 128,
+                                      block_k: int = 128,
+                                      interpret: bool = True):
+    """Grouped n_low = 0 path: pure-INT8 blocks per group, no mask/lo, any w."""
+    g, m, k_dim = x.shape
+    _, nb, rows, n = hi.shape
+    assert rows == w and k_dim == nb * w, (rows, w, k_dim, nb)
+    assert block_k % w == 0
+    assert m % block_m == 0 and n % block_n == 0 and k_dim % block_k == 0
+    bnb = block_k // w
+    grid = (g, m // block_m, n // block_n, k_dim // block_k)
+    kern = functools.partial(_kernel_grouped_dense, w=w)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, block_k),
+                         lambda e, i, j, kk: (e, i, kk)),
+            pl.BlockSpec((1, bnb, w, block_n),
+                         lambda e, i, j, kk: (e, kk, 0, j)),
+            pl.BlockSpec((1, 1, block_n), lambda e, i, j, kk: (e, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, block_n),
+                               lambda e, i, j, kk: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, m, n), jnp.float32),
+        interpret=interpret,
+        compiler_params=_mosaic_params(interpret, grid_rank=4),
     )(x, hi, scale)

@@ -47,15 +47,26 @@ def moe_def(cfg, lead=()) -> dict:
     return out
 
 
-def _dequant_experts(wleaf, scfg, dtype):
-    """Decompress a StruM-packed expert stack {mask,hi,lo,scale} with arrays
-    (E, nb, mb, N) back to dense (E, K, N) — engine-vmapped over experts.
+def _expert_contract(wstack, xbuf, scfg):
+    """(E, C, K) ⊗ (E, K, N) -> (E, C, N), keeping packed stacks compressed.
 
-    A grouped packed matmul that keeps experts compressed through the
-    contraction is the registry's next entry (ROADMAP); until then the
-    engine's dequant path is the one variant that expresses stacks."""
-    from repro.engine.dispatch import dequant_leaf
-    return dequant_leaf(wleaf, dtype, cfg=scfg)
+    Dense stacks use the plain batched einsum; packed stacks
+    ({mask,hi,lo,scale} dicts) dispatch through the engine's grouped
+    registry path — ``pallas:grouped*`` streams the compressed payload
+    through a lead-axis grid (the paper's Eq.-1/2 bandwidth win applied to
+    the expert decode bill), ``xla:dequant`` decompresses at the true K and
+    contracts with a batched dot everywhere else."""
+    if isinstance(wstack, dict):
+        from repro.engine.dispatch import dispatch_grouped
+        return dispatch_grouped(wstack, xbuf, strum=scfg,
+                                out_dtype=xbuf.dtype)
+    return jnp.einsum("eck,ekn->ecn", xbuf, wstack.astype(xbuf.dtype),
+                      preferred_element_type=jnp.float32).astype(xbuf.dtype)
+
+
+def _stack_len(wstack) -> int:
+    """Leading (expert) dim of a dense or packed stack."""
+    return (wstack["mask"] if isinstance(wstack, dict) else wstack).shape[0]
 
 
 def _capacity(tokens: int, cfg) -> int:
@@ -63,10 +74,16 @@ def _capacity(tokens: int, cfg) -> int:
     return max(int(math.ceil(per_expert * cfg.capacity_factor)), cfg.top_k)
 
 
-def _moe_local(x2, router_w, wi, wg, wo, cfg, e_offset: int, capacity: int):
-    """Token-local, expert-local MoE.  x2: (T, D); wi/wo: (E_local, D, F)/(E_local, F, D)."""
+def _moe_local(x2, router_w, wi, wg, wo, cfg, e_offset: int, capacity: int,
+               scfgs=(None, None, None)):
+    """Token-local, expert-local MoE.  x2: (T, D); wi/wo: (E_local, D, F)/(E_local, F, D).
+
+    Stacks may arrive StruM-packed (dicts) — the three expert contractions
+    then stay compressed through :func:`_expert_contract`.  ``scfgs`` are
+    fallback StruMConfigs per stack (wi, wg, wo) for payload dicts whose
+    static metadata was stripped (the shard_map body)."""
     t, d = x2.shape
-    e_local = wi.shape[0]
+    e_local = _stack_len(wi)
     e_global, k = cfg.n_experts, cfg.top_k
 
     logits = jnp.dot(x2.astype(jnp.float32), router_w.astype(jnp.float32))
@@ -103,16 +120,13 @@ def _moe_local(x2, router_w, wi, wg, wo, cfg, e_offset: int, capacity: int):
     buf = buf.at[a_exp, a_pos].add(jnp.where(keep[:, None], x2[a_tok], 0))
     buf = buf[:, :capacity]
 
-    h = jnp.einsum("ecd,edf->ecf", buf, wi.astype(buf.dtype),
-                   preferred_element_type=jnp.float32).astype(buf.dtype)
+    h = _expert_contract(wi, buf, scfgs[0])
     if wg is not None:
-        g = jnp.einsum("ecd,edf->ecf", buf, wg.astype(buf.dtype),
-                       preferred_element_type=jnp.float32).astype(buf.dtype)
+        g = _expert_contract(wg, buf, scfgs[1])
         h = jax.nn.silu(g) * h
     else:
         h = jax.nn.gelu(h)
-    out_buf = jnp.einsum("ecf,efd->ecd", h, wo.astype(h.dtype),
-                         preferred_element_type=jnp.float32).astype(h.dtype)
+    out_buf = _expert_contract(wo, h, scfgs[2])
 
     # combine
     gathered = out_buf[a_exp, jnp.minimum(a_pos, capacity - 1)]  # (T*k, D)
@@ -125,9 +139,11 @@ def moe_apply(p: dict, x: jnp.ndarray, cfg, mesh=None, **_kw):
     """x: (B, S, D) -> (y, aux_loss).
 
     Expert stacks may arrive StruM-packed ({mask,hi,lo,scale} dicts); the
-    distributed path then FSDP-gathers the *compressed* payloads and
-    dequantizes locally (the §Perf packed-expert iteration — on MoE archs
-    the expert gathers ARE the decode collective bill)."""
+    distributed path then FSDP-gathers the *compressed* payloads and the
+    expert contractions execute compressed end-to-end through the engine's
+    grouped registry path (the §Perf packed-expert iteration — on MoE archs
+    the expert gathers ARE the decode collective bill, and pallas:grouped
+    extends the r× byte saving through the matmul itself)."""
     b, s, d = x.shape
     wg = p.get("wg")
     scfg = cfg.strum
@@ -135,17 +151,35 @@ def moe_apply(p: dict, x: jnp.ndarray, cfg, mesh=None, **_kw):
     if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
         cap = _capacity(b * s, cfg)
         # per-stack: a heterogeneous schedule may pack any subset of
-        # wi/wg/wo; _dequant_experts no-ops on dense stacks
-        wi = _dequant_experts(p["wi"], scfg, x.dtype)
-        wg_l = _dequant_experts(wg, scfg, x.dtype) if wg is not None else wg
-        wo = _dequant_experts(p["wo"], scfg, x.dtype)
-        y, (df, pf) = _moe_local(x.reshape(-1, d), p["router"]["w"], wi, wg_l,
-                                 wo, cfg, 0, cap)
+        # wi/wg/wo; packed stacks stay compressed through the grouped
+        # contraction (_expert_contract), dense stacks einsum as before
+        y, (df, pf) = _moe_local(x.reshape(-1, d), p["router"]["w"], p["wi"],
+                                 wg, p["wo"], cfg, 0, cap,
+                                 scfgs=(scfg, scfg, scfg))
         return y.reshape(b, s, d), cfg.n_experts * jnp.sum(df * pf)
 
     data_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
     n_data = math.prod(mesh.shape[a] for a in data_axes)
     n_model = mesh.shape["model"]
+    if cfg.n_experts % n_model:
+        raise ValueError(
+            f"moe_apply: n_experts={cfg.n_experts} is not divisible by the "
+            f"'model' mesh axis (size {n_model}, mesh shape "
+            f"{dict(mesh.shape)}); experts shard evenly over 'model'")
+    for nm in ("wi", "wg", "wo"):
+        w = p.get(nm)
+        if w is None:
+            continue
+        # axis 1 is the FSDP shard dim: K for dense stacks, the packed
+        # block axis nb = ceil(K/w) for compressed ones
+        arr = w["mask"] if isinstance(w, dict) else w
+        kind = "packed block axis nb" if isinstance(w, dict) else "K axis"
+        if arr.shape[1] % n_data:
+            raise ValueError(
+                f"moe_apply: expert stack {nm!r} {kind} of size "
+                f"{arr.shape[1]} (array shape {tuple(arr.shape)}) is not "
+                f"divisible by the FSDP data axes {data_axes} "
+                f"(size {n_data}); the all-gather would mis-shard")
     e_local = cfg.n_experts // n_model
     shard_tokens = b % n_data == 0
     t_local = (b // n_data) * s if shard_tokens else b * s
@@ -155,20 +189,24 @@ def moe_apply(p: dict, x: jnp.ndarray, cfg, mesh=None, **_kw):
     def body(x_l, router_w, *ws):
         # expert weights arrive FSDP-sharded on their reduction dim; gather
         # (ZeRO-3 style) before use — roofline-visible.  Packed stacks
-        # gather their COMPRESSED payloads, then dequantize locally.
-        def gather_one(w, sc):
+        # gather their COMPRESSED payloads and stay compressed through the
+        # grouped contraction in _moe_local (r× fewer wire + HBM bytes).
+        def gather_one(w):
             if isinstance(w, dict):
-                g = {k: (jax.lax.all_gather(v, data_axes, axis=1, tiled=True)
-                         if k != "scale" else v) for k, v in w.items()}
-                return _dequant_experts(g, sc, x_l.dtype)
+                return {k: (jax.lax.all_gather(v, data_axes, axis=1,
+                                               tiled=True)
+                            if k != "scale" else v) for k, v in w.items()}
             return jax.lax.all_gather(w, data_axes, axis=1, tiled=True)
 
-        ws = [gather_one(w, sc) for w, sc in zip(ws, ws_cfgs)]
+        ws = [gather_one(w) for w in ws]
         wi_l, wo_l = ws[0], ws[-1]
         wg_l = ws[1] if gated else None
         midx = jax.lax.axis_index("model")
         y, (df, pf) = _moe_local(x_l.reshape(-1, d), router_w, wi_l, wg_l,
-                                 wo_l, cfg, midx * e_local, cap)
+                                 wo_l, cfg, midx * e_local, cap,
+                                 scfgs=(ws_cfgs[0],
+                                        ws_cfgs[1] if gated else None,
+                                        ws_cfgs[-1]))
         y = jax.lax.psum(y, "model")           # combine expert shards
         # global fractions BEFORE the product (aux is nonlinear in them)
         df = jax.lax.pmean(df, data_axes + ("model",))

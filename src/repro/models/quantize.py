@@ -146,8 +146,8 @@ def packed_model_defs(cfg, policy: Optional[LayerPolicy] = None):
     becomes ``{"w": {"mask", "hi", "lo", "scale"}}`` with the in-axis
     sharding moved to the block dim (nb = K/w) and the out-axis kept — so
     FSDP gathers and HBM streams move the COMPRESSED bytes (r× fewer).
-    MoE expert stacks stay dense (packed grouped-matmul is future work,
-    DESIGN.md §5).
+    MoE expert stacks pack the same way (lead dims preserved) and serve
+    through the grouped registry family (``engine.dispatch_grouped``).
     """
     import math as _math
 

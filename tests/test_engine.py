@@ -49,9 +49,21 @@ def test_selection_auto_off_tpu_and_stacks():
     if jax.default_backend() != "tpu":
         assert engine.select_variant(cfg, info).name == "xla:dequant"
     stacked = engine.LeafInfo(k_dim=64, n_out=96, lead=(4,))
-    # no pallas variant expresses expert stacks yet -> dequant fallback
+    # expert stacks select the grouped pallas family
     assert engine.select_variant(cfg, stacked, backend="pallas").name \
-        == "xla:dequant"
+        == "pallas:grouped"
+    assert engine.select_variant(
+        StruMConfig(method="dliq", p=1.0, q=4), stacked,
+        backend="pallas").name == "pallas:grouped_maskfree"
+    assert engine.select_variant(
+        StruMConfig(method="dliq", p=0.0, q=4, w=12), stacked,
+        backend="pallas").name == "pallas:grouped_dense"
+    # a config no grouped variant expresses (w % 8 != 0, mixed payload)
+    # still falls back to the portable dequant path
+    with pytest.warns(UserWarning, match="falling back"):
+        assert engine.select_variant(
+            StruMConfig(method="mip2q", p=0.5, L=5, w=12), stacked,
+            backend="pallas").name == "xla:dequant"
 
 
 def test_register_kernel_shadows_and_unregisters():

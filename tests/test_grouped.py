@@ -1,0 +1,299 @@
+"""Grouped packed matmul (pallas:grouped*): parity grid vs the dequant path
+and the jnp reference, the padded-K dequant_leaf regression, and the MoE
+heterogeneous-schedule acceptance path."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.configs import get_smoke_config
+from repro.core import packing
+from repro.core.policy import StruMConfig
+from repro.models.moe import moe_apply, moe_def
+from repro.models.params import init_params
+from repro.models.quantize import _pack_leaf
+
+RNG = np.random.default_rng(0)
+
+
+def _stacked_leaf(cfg, e=3, k=48, n=96):
+    wt = jnp.asarray(RNG.normal(size=(e, k, n)).astype(np.float32))
+    leaf = dict(_pack_leaf(wt, cfg))
+    leaf["cfg"] = cfg
+    return wt, leaf
+
+
+def _ref_dense(leaf, cfg, k):
+    """Per-group jnp reference: dequantize each expert at the TRUE K."""
+    e = leaf["mask"].shape[0]
+    return jnp.stack([
+        packing.dequantize(packing.PackedStruM(
+            cfg.method, cfg.w, cfg.n_low, cfg.q, cfg.L, k,
+            leaf["scale"][i], leaf["mask"][i], leaf["hi"][i], leaf["lo"][i]),
+            jnp.float32)
+        for i in range(e)])
+
+
+# ------------------------------------------------------------ parity grid --
+
+GRID = [  # method × w × q/L across all three grouped lowerings
+    ("mip2q", 16, 0.5, dict(L=5)),       # grouped (onehot)
+    ("mip2q", 8, 0.75, dict(L=3)),
+    ("dliq", 16, 0.5, dict(q=4)),
+    ("dliq", 8, 0.5, dict(q=2)),
+    ("sparsity", 16, 0.5, dict()),
+    ("sparsity", 16, 1.0, dict()),       # all-zero blocks, mask-only decode
+    ("dliq", 16, 1.0, dict(q=4)),        # grouped_maskfree
+    ("mip2q", 16, 1.0, dict(L=5)),       # grouped_maskfree
+    ("dliq", 16, 0.0, dict(q=4)),        # grouped_dense (n_low=0)
+    ("dliq", 12, 0.0, dict(q=4)),        # grouped_dense, w % 8 != 0
+]
+
+
+@pytest.mark.parametrize("k", [48, 40])  # 40: K % w != 0 for w in {16, 12}
+@pytest.mark.parametrize("method,w,p,kw", GRID)
+def test_grouped_parity(method, w, p, kw, k):
+    cfg = StruMConfig(method=method, w=w, p=p, **kw)
+    _, leaf = _stacked_leaf(cfg, k=k)
+    x = jnp.asarray(RNG.normal(size=(3, 5, k)).astype(np.float32))
+
+    want = jnp.matmul(x, _ref_dense(leaf, cfg, k))
+    y_pal = engine.dispatch_grouped(leaf, x, backend="interpret")
+    y_xla = engine.dispatch_grouped(leaf, x, backend="xla")
+    wd = engine.dequant_leaf(leaf, jnp.float32, k_dim=k)
+    y_ein = jnp.einsum("eck,ekn->ecn", x, wd)
+
+    for got, label in ((y_pal, "pallas"), (y_xla, "xla"), (y_ein, "einsum")):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4, err_msg=label)
+
+
+def test_grouped_multi_lead_dims():
+    """Scan-grouped expert stacks (two lead dims) flatten into one grid axis."""
+    cfg = StruMConfig(method="mip2q", p=0.5, L=5, w=16)
+    wt = jnp.asarray(RNG.normal(size=(2, 3, 32, 96)).astype(np.float32))
+    leaf = dict(_pack_leaf(wt, cfg))
+    leaf["cfg"] = cfg
+    x = jnp.asarray(RNG.normal(size=(2, 3, 4, 32)).astype(np.float32))
+    y = engine.dispatch_grouped(leaf, x, backend="interpret")
+    want = engine.dispatch_grouped(leaf, x, backend="xla")
+    assert y.shape == (2, 3, 4, 96)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_grouped_shape_mismatch_raises():
+    cfg = StruMConfig(method="mip2q", p=0.5, L=5)
+    _, leaf = _stacked_leaf(cfg, e=3, k=48)
+    with pytest.raises(ValueError, match="lead dims"):
+        engine.dispatch_grouped(leaf, jnp.zeros((5, 48)))
+    with pytest.raises(ValueError, match="lead dims"):
+        engine.dispatch_grouped(leaf, jnp.zeros((4, 5, 48)))
+    # a plan-built leaf records its true K: a shorter x is an error, not a
+    # silent contraction against a truncated weight
+    plan = engine.build_plan(
+        {"blocks": {"moe": {"wi": jnp.zeros((3, 48, 64), jnp.float32)}}},
+        cfg=cfg)
+    pleaf = plan.params["blocks"]["moe"]["wi"]
+    with pytest.raises(ValueError, match="recorded reduction dim"):
+        engine.dispatch_grouped(pleaf, jnp.zeros((3, 5, 32)))
+
+
+# ------------------------------------------- padded-K dequant regression --
+
+@pytest.mark.parametrize("method,p", [
+    ("sparsity", 0.5), ("dliq", 0.5), ("mip2q", 0.5),
+    ("dliq", 1.0), ("mip2q", 1.0), ("dliq", 0.0),
+])
+def test_dequant_leaf_padded_k_regression(method, p):
+    """Plan-built stacked leaves with K % w != 0 dequantize at the TRUE K.
+
+    The old code derived K from the padded mask (nb * w), so a (E, 40, N)
+    stack came back as (E, 48, N) with 8 junk rows per expert — MIP2Q code 0
+    decodes to ±2⁰·scale, not 0."""
+    cfg = StruMConfig(method=method, p=p, w=16, q=4, L=5)
+    k = 40
+    wt = jnp.asarray(RNG.normal(size=(3, k, 64)).astype(np.float32))
+    plan = engine.build_plan({"blocks": {"moe": {"wi": wt}}}, cfg=cfg)
+    leaf = plan.params["blocks"]["moe"]["wi"]
+    assert leaf["spec"].k_dim == k
+
+    dq = engine.dequant_leaf(leaf, jnp.float32)
+    assert dq.shape == (3, k, 64)
+    np.testing.assert_allclose(np.asarray(dq),
+                               np.asarray(_ref_dense(leaf, cfg, k)),
+                               rtol=0, atol=0)
+    # the plan's own dequantized() view agrees
+    np.testing.assert_array_equal(
+        np.asarray(plan["blocks/moe/wi"].dequantized(jnp.float32)),
+        np.asarray(dq))
+
+
+@pytest.mark.parametrize("method", ["sparsity", "dliq", "mip2q"])
+def test_moe_padded_k_matches_fake_quant(method):
+    """End-to-end MoE with d_ff % w != 0: packed serving == fake-quant dense.
+
+    Exercises the dequant_leaf padding bug through moe_apply (the wo stack
+    has K = d_ff = 40 with w = 16)."""
+    scfg = StruMConfig(method=method, p=0.5, w=16, q=4, L=5)
+    mcfg = dataclasses.replace(get_smoke_config("qwen3_moe_235b_a22b"),
+                               d_ff=40, strum=scfg)
+    params = init_params({"blocks": {"moe": moe_def(mcfg)}}, seed=1,
+                         dtype_override="float32")
+    x = jnp.asarray(RNG.normal(size=(2, 8, mcfg.d_model)).astype(np.float32))
+
+    plan = engine.build_plan(params, cfg=scfg)
+    y_pk, aux_pk = moe_apply(plan.params["blocks"]["moe"], x, mcfg, mesh=None)
+
+    fq = engine.fake_quantize(params, cfg=scfg, baseline_int8=False)
+    y_fq, aux_fq = moe_apply(fq["blocks"]["moe"], x, mcfg, mesh=None)
+
+    np.testing.assert_allclose(np.asarray(y_pk), np.asarray(y_fq),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(aux_pk), float(aux_fq), rtol=1e-5)
+
+
+# --------------------------------------------------- plan.apply() layouts --
+
+def test_apply_stacked_serve_and_folded_layouts():
+    cfg = StruMConfig(method="mip2q", p=0.5, L=5, w=16)
+    wt = jnp.asarray(RNG.normal(size=(3, 32, 64)).astype(np.float32))
+
+    # folded: 3-D original shape cannot be served as a matmul — clear error
+    plan_f = engine.build_plan({"stk": wt}, cfg=cfg, scope="tree")
+    assert plan_f.entries["stk"].layout == "folded"
+    with pytest.raises(ValueError, match="column-folded"):
+        plan_f.apply("stk", jnp.zeros((2, 32)))
+
+    # serve: stacked entries dispatch through the grouped path
+    plan_s = engine.build_plan({"blocks": {"moe": {"wi": wt}}}, cfg=cfg,
+                               backend="interpret")
+    entry = plan_s.entries["blocks/moe/wi"]
+    assert entry.layout == "serve" and entry.variant == "pallas:grouped"
+    xg = jnp.asarray(RNG.normal(size=(3, 4, 32)).astype(np.float32))
+    y = plan_s.apply("blocks/moe/wi", xg)
+    leaf = plan_s.params["blocks"]["moe"]["wi"]
+    want = jnp.matmul(xg, _ref_dense(leaf, cfg, 32))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    # 2-D x against a stacked serve leaf is a shape error, not silent output
+    with pytest.raises(ValueError, match="lead dims"):
+        plan_s.apply("blocks/moe/wi", jnp.zeros((2, 32)))
+
+
+# ------------------------------------------------- distributed validation --
+
+def test_moe_apply_mesh_validation():
+    """Bad meshes fail fast with shapes in the message, before shard_map."""
+    mcfg = get_smoke_config("qwen3_moe_235b_a22b")   # 4 experts
+    params = init_params({"m": moe_def(mcfg)}, seed=1,
+                         dtype_override="float32")["m"]
+    x = jnp.zeros((2, 8, mcfg.d_model), jnp.float32)
+
+    class Mesh:                       # validation runs before any collective
+        def __init__(self, data, model):
+            self.axis_names = ("data", "model")
+            self.shape = {"data": data, "model": model}
+
+    with pytest.raises(ValueError, match=r"n_experts=4.*'model'"):
+        moe_apply(params, x, mcfg, mesh=Mesh(data=1, model=3))
+    with pytest.raises(ValueError, match=r"wi.*K axis.*divisible"):
+        moe_apply(params, x, mcfg, mesh=Mesh(data=7, model=2))
+    # packed stacks validate their block axis (nb = ceil(K/w)) instead
+    scfg = StruMConfig(method="mip2q", p=0.5, L=5, w=16)
+    plan = engine.build_plan({"blocks": {"moe": params}}, cfg=scfg)
+    with pytest.raises(ValueError, match=r"wi.*block axis nb.*divisible"):
+        moe_apply(plan.params["blocks"]["moe"], x,
+                  dataclasses.replace(mcfg, strum=scfg),
+                  mesh=Mesh(data=3, model=2))
+
+
+def test_moe_packed_shard_map_matches_local():
+    """EP shard_map with packed expert stacks (compressed FSDP gather +
+    grouped contraction inside the body) == single-device packed MoE."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import engine
+        from repro.configs import get_smoke_config
+        from repro.core.policy import StruMConfig
+        from repro.launch.mesh import make_host_mesh
+        from repro.models.moe import moe_apply, moe_def
+        from repro.models.params import init_params
+
+        cfg = get_smoke_config("qwen3_moe_235b_a22b")   # 4 experts top-2
+        import dataclasses
+        scfg = StruMConfig(method="mip2q", p=0.5, L=5, w=16)
+        cfg = dataclasses.replace(cfg, strum=scfg)
+        p = init_params({"blocks": {"moe": moe_def(cfg)}}, seed=1,
+                        dtype_override="float32")
+        plan = engine.build_plan(p, cfg=scfg)
+        pk = plan.params["blocks"]["moe"]
+        assert isinstance(pk["wi"], dict), "expert stacks must be packed"
+        x = jnp.asarray(np.random.default_rng(2).normal(
+            size=(2, 16, cfg.d_model)).astype(np.float32))
+        y_local, aux_local = moe_apply(pk, x, cfg, mesh=None)
+
+        mesh = make_host_mesh(data=2, model=2)
+        with mesh:
+            y_dist, aux_dist = jax.jit(
+                lambda p, x: moe_apply(p, x, cfg, mesh=mesh))(pk, x)
+        err = float(jnp.max(jnp.abs(y_local - y_dist)))
+        print("PACKED_MOE_ERR", err)
+        assert err < 1e-4
+        assert abs(float(aux_local) - float(aux_dist)) < 1e-4
+        """)
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": "src"}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=560, env=env,
+                       cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "PACKED_MOE_ERR" in r.stdout
+
+
+# --------------------------------------------------------- acceptance e2e --
+
+def test_moe_heterogeneous_schedule_selects_grouped():
+    """Acceptance: an MoE model packed under a heterogeneous schedule selects
+    pallas:grouped* (not xla:dequant) for its expert stacks, the plan summary
+    shows it, and grouped serving matches the dequant path to kernel-parity
+    tolerance — including a K % w != 0 stack (wo: K = d_ff = 40, w = 16)
+    that previously hit the dequant_leaf padding bug."""
+    from repro.autotune.schedule import StruMSchedule
+
+    mcfg = dataclasses.replace(get_smoke_config("qwen3_moe_235b_a22b"),
+                               d_ff=40, strum=None)
+    params = init_params({"blocks": {"moe": moe_def(mcfg)}}, seed=1,
+                         dtype_override="float32")
+    sched = StruMSchedule(assignments={
+        "blocks/moe/wi": StruMConfig(method="mip2q", p=0.5, L=5, w=16),
+        "blocks/moe/wg": StruMConfig(method="dliq", p=1.0, q=4, w=8),
+        "blocks/moe/wo": StruMConfig(method="dliq", p=0.5, q=4, w=16),
+    })
+
+    plan = engine.build_plan(params, schedule=sched, backend="interpret")
+    dist = plan.summary()["variant_distribution"]
+    assert dist == {"pallas:grouped": 2, "pallas:grouped_maskfree": 1}, dist
+    assert "xla:dequant" not in dist
+
+    x = jnp.asarray(RNG.normal(size=(2, 8, mcfg.d_model)).astype(np.float32))
+    run_cfg = dataclasses.replace(mcfg, strum=None)
+    y_g, aux_g = moe_apply(plan.params["blocks"]["moe"], x, run_cfg,
+                           mesh=None)
+
+    plan_x = engine.build_plan(params, schedule=sched, backend="xla")
+    assert set(plan_x.variants().values()) == {"xla:dequant"}
+    y_x, aux_x = moe_apply(plan_x.params["blocks"]["moe"], x, run_cfg,
+                           mesh=None)
+
+    np.testing.assert_allclose(np.asarray(y_g), np.asarray(y_x),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(aux_g), float(aux_x), rtol=1e-5)
