@@ -16,6 +16,12 @@ regression fails fast without a TPU.  The grouped section additionally
 benchmarks expert-stack tokens/s through the two served dispatch paths
 (compressed grouped kernel vs dequant + batched dot).
 
+``--sharded`` forces an 8-host-device FSDP×TP mesh and benchmarks the
+engine's ``sharded:*`` family: per-variant tokens/s plus the *measured*
+all-gather bytes (packed payload vs the dense-gather equivalent — the
+Eq. 1/2 wire ratio).  With ``--smoke`` it also asserts a packed FSDP leaf
+selects ``sharded:gather_pallas`` under a pallas-family backend.
+
 Output: ``name,us_per_call,derived`` CSV rows + results/kernel_bench.json.
 """
 from __future__ import annotations
@@ -250,14 +256,109 @@ def run(smoke: bool = False):
     return rows
 
 
+# sharded-mode shapes: (K, N, pattern) — block axis must divide the FSDP
+# axis (4) and K the TP axis for 'row'
+SHARDED_SHAPES = [(2048, 4096, "col"), (4096, 2048, "row")]
+SMOKE_SHARDED_SHAPES = [(256, 512, "col"), (512, 256, "row")]
+
+
+def run_sharded(smoke: bool = False):
+    """Benchmark the sharded:* family on a forced 8-device host mesh."""
+    n_dev = len(jax.devices())
+    assert n_dev >= 8, (
+        f"--sharded needs 8 host devices, found {n_dev}; run with "
+        f"XLA_FLAGS=--xla_force_host_platform_device_count=8 (the __main__ "
+        f"block sets it, so jax was initialized before main() ran)")
+    from repro.engine.dispatch import dequant_leaf, dispatch
+    from repro.models.quantize import _pack_leaf
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    rng = np.random.default_rng(0)
+    shapes = SMOKE_SHARDED_SHAPES if smoke else SHARDED_SHAPES
+    smoke_labels = ("mip2q_p0.5", "dliq_p1.0", "dliq_p0.0")
+    configs = [c for c in CONFIGS if c[0] in smoke_labels] if smoke \
+        else CONFIGS
+    rows = []
+    for label, cfg in configs:
+        for (k, n, pattern) in shapes:
+            if k % cfg.w:
+                continue
+            wt = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+            leaf = dict(_pack_leaf(wt, cfg))
+            leaf["cfg"] = cfg
+            info = engine.LeafInfo(k_dim=k, n_out=n, fsdp=("data",),
+                                   tp_pattern=pattern)
+            x = jnp.asarray(rng.normal(size=(8, k)).astype(np.float32))
+            sel = engine.select_variant(cfg, info, backend="interpret").name
+            if smoke:
+                # acceptance: a packed FSDP leaf under a pallas-family
+                # backend selects the compressed-gather pallas path
+                assert sel == "sharded:gather_pallas", (label, sel)
+            want = x @ dequant_leaf(leaf, jnp.float32, cfg=cfg, k_dim=k)
+            tol = 1e-4 * max(1.0, float(jnp.max(jnp.abs(want))))
+            payload = int(sum(leaf[key].size for key in ("mask", "hi", "lo")))
+            dense_bytes = engine.dense_gather_bytes(k, n, jnp.bfloat16)
+            for backend, name in (("interpret", sel),
+                                  ("xla", "sharded:gather_dequant")):
+                fn = lambda l, xx: dispatch(  # noqa: E731
+                    l, xx, mesh=mesh, tp_pattern=pattern, backend=backend)
+                with mesh:
+                    stats = engine.all_gather_stats(fn, leaf, x, mesh=mesh)
+                    reps = 1 if backend == "interpret" and not smoke else 3
+                    t_call, y = _bench_call(fn, leaf, x, reps=reps)
+                err = float(jnp.max(jnp.abs(y - want)))
+                assert err < tol, (label, name, pattern, err, tol)
+                rows.append({
+                    "config": f"sharded_{label}", "variant": name,
+                    "pattern": pattern, "m": 8, "k": k, "n": n,
+                    "packed_bytes": payload,
+                    "gathered_bytes": stats["global_operand_bytes"],
+                    "dense_gather_bytes": dense_bytes,
+                    "gather_ratio_vs_bf16":
+                        stats["global_operand_bytes"] / dense_bytes,
+                    "sec_per_call": t_call,
+                    "tokens_per_s": 8 / t_call,
+                    "max_abs_err": err,
+                })
+    os.makedirs(os.path.join(os.path.dirname(__file__), "results"),
+                exist_ok=True)
+    with open(os.path.join(os.path.dirname(__file__), "results",
+                           "kernel_bench_sharded.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"kernel/{r['config']}/{r['variant']}_{r['pattern']}_"
+              f"{r['m']}x{r['k']}x{r['n']},"
+              f"{r['sec_per_call']*1e6:.0f},"
+              f"tok_s={r['tokens_per_s']:.1f};"
+              f"gathered={r['gathered_bytes']};"
+              f"vs_dense_gather=x{r['gather_ratio_vs_bf16']:.4f};"
+              f"err={r['max_abs_err']:.2e}")
+    # the whole point: the wire moves the packed payload, not dense bytes
+    bad = [r for r in rows if r["gathered_bytes"] >= r["dense_gather_bytes"]]
+    assert not bad, f"sharded gather moved dense-scale bytes: {bad[:3]}"
+    return rows
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small shapes + config subset (CI interpret mode)")
     ap.add_argument("--check-only", action="store_true",
                     help="only assert plan/variant selection, no timing")
+    ap.add_argument("--sharded", action="store_true",
+                    help="benchmark the sharded:* family on a forced "
+                         "8-device host mesh")
     args = ap.parse_args()
+    if args.sharded and "host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        # must land before jax initializes its backend (lazy: nothing above
+        # touches devices at import time)
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   " --xla_force_host_platform_device_count=8"
+                                   ).strip()
     if args.check_only:
         check_selection()
+    elif args.sharded:
+        run_sharded(smoke=args.smoke)
     else:
         run(smoke=args.smoke)

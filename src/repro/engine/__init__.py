@@ -20,23 +20,33 @@ Typical flow (profile → search → schedule → **plan** → serve):
     y = engine.apply(plan, "blocks/pos0/attn/wq/w", x)
     scheduler = BatchScheduler(cfg, params, plan=plan)
 
+Distributed execution is engine-native: ``build_plan(..., mesh=, rules=)``
+records per-leaf shardings (:class:`ShardSpec`) and selects from the
+``sharded:*`` variant family (:mod:`repro.engine.sharded`) — compressed
+FSDP gathers with the per-call ``backend=`` reaching the post-gather
+kernel.
+
 The legacy entrypoints (``core.apply.pack_tree`` / ``fake_quantize_tree``,
-``models.quantize.strum_serve_params``) remain as thin deprecated shims over
-plan construction.
+``models.quantize.strum_serve_params``, ``models.quantize.gather_dequant``)
+remain as thin deprecated shims over plan construction / the registry.
 """
 from repro.engine.dispatch import (apply, dequant_leaf, dispatch,
                                    dispatch_grouped, leaf_spec)
 from repro.engine.plan import (ExecutionPlan, PlanEntry, build_plan,
                                fake_quantize)
 from repro.engine.registry import (BACKENDS, ExecSpec, KernelVariant,
-                                   LeafInfo, get_variant, list_variants,
-                                   register_kernel, resolve_backend,
-                                   select_variant, unregister_kernel)
+                                   LeafInfo, ShardSpec, get_variant,
+                                   list_variants, register_kernel,
+                                   resolve_backend, select_variant,
+                                   unregister_kernel)
+from repro.engine.sharded import (all_gather_stats, dense_gather_bytes,
+                                  tp_pattern_for)
 
 __all__ = [
     "apply", "dispatch", "dispatch_grouped", "dequant_leaf", "leaf_spec",
     "ExecutionPlan", "PlanEntry", "build_plan", "fake_quantize",
-    "BACKENDS", "ExecSpec", "KernelVariant", "LeafInfo",
+    "BACKENDS", "ExecSpec", "KernelVariant", "LeafInfo", "ShardSpec",
     "register_kernel", "unregister_kernel", "get_variant", "list_variants",
     "select_variant", "resolve_backend",
+    "all_gather_stats", "dense_gather_bytes", "tp_pattern_for",
 ]

@@ -58,16 +58,42 @@ def _check_k(spec: Optional[ExecSpec], k_dim: int) -> None:
                          f"reduction dim K={spec.k_dim}")
 
 
+def _sharded_call(wleaf: dict, x: jnp.ndarray, cfg: StruMConfig,
+                  spec: Optional[ExecSpec], info: LeafInfo, *, mesh,
+                  pattern: Optional[str], backend: Optional[str],
+                  accum_dtype, out_dtype) -> jnp.ndarray:
+    """Select + invoke a ``sharded:*`` variant (the 11-kwarg convention).
+
+    The one implementation behind both the 2-D mesh branch of
+    :func:`dispatch` and the ``fsdp_axes`` branch of
+    :func:`dispatch_grouped` — the sharded fn contract changes in exactly
+    one place.
+    """
+    variant, interpret = _pick(cfg, info, spec, backend)
+    eff_backend = backend if backend is not None else (
+        spec.backend if spec is not None else None)
+    return variant.fn(
+        wleaf, x, cfg=cfg, mesh=mesh, fsdp=tuple(info.fsdp), pattern=pattern,
+        k_dim=x.shape[-1], backend=eff_backend, interpret=interpret,
+        accum_dtype=accum_dtype, out_dtype=out_dtype)
+
+
 def _pick(cfg: StruMConfig, info: LeafInfo, spec: Optional[ExecSpec],
           backend: Optional[str]):
     """(variant, interpret-flag) for this call.
 
     A per-call ``backend`` overrides the plan's recorded selection; without
     one, the spec's variant is authoritative (that is the point of a plan).
+    A recorded variant whose sharded-ness disagrees with the *call's* mesh
+    context (``info.fsdp``) is re-selected: a mesh-aware plan still serves
+    single-device, and a mesh-less plan still serves distributed.
     """
     if backend is None and spec is not None:
         _, interpret = resolve_backend(spec.backend)
-        return get_variant(spec.variant), interpret
+        variant = get_variant(spec.variant)
+        if variant.sharded == bool(info.fsdp):
+            return variant, interpret
+        backend = spec.backend
     _, interpret = resolve_backend(backend)
     return select_variant(cfg, info, backend=backend), interpret
 
@@ -76,32 +102,63 @@ def dispatch(wleaf: dict, x: jnp.ndarray, *,
              strum: Optional[StruMConfig] = None,
              backend: Optional[str] = None,
              accum_dtype=jnp.float32, out_dtype=None,
-             tp_mesh=None, tp_pattern: Optional[str] = None) -> jnp.ndarray:
+             mesh=None, tp_mesh=None,
+             tp_pattern: Optional[str] = None) -> jnp.ndarray:
     """y = x @ dequant(leaf) through the leaf's selected kernel variant.
 
     ``x``: (..., K); returns (..., N) in ``out_dtype`` (default x.dtype).
     Stacked leaves (lead dims, e.g. MoE expert stacks) delegate to
     :func:`dispatch_grouped` — ``x`` must then carry matching lead dims.
-    With ``tp_mesh``/``tp_pattern`` the leaf is FSDP-gathered *compressed*
-    and dequantized locally (models.quantize.gather_dequant) — the
-    distributed serving path, where the collective itself is the win.
+
+    With ``mesh`` (``tp_mesh`` is the legacy alias the model forwards
+    thread) the leaf executes through the registry's ``sharded:*`` family:
+    the FSDP all-gather moves the *packed* payloads and the per-call
+    ``backend=`` still reaches the post-gather kernel.  The TP layout comes
+    from ``tp_pattern`` or, for mesh-aware plan leaves, from the recorded
+    ``spec.shard``.
     """
     cfg, spec = leaf_spec(wleaf, strum)
     k_dim = x.shape[-1]
     _check_k(spec, k_dim)
     out_dtype = out_dtype or x.dtype
-
-    if tp_mesh is not None and tp_pattern is not None:
-        from repro.models.quantize import gather_dequant
-        wd = gather_dequant(wleaf, cfg, tp_mesh, tp_pattern, k_dim,
-                            dtype=x.dtype)
-        return jnp.dot(x, wd, preferred_element_type=accum_dtype
-                       ).astype(out_dtype)
+    mesh = mesh if mesh is not None else tp_mesh
+    shard = getattr(spec, "shard", None)
+    pattern = tp_pattern or (shard.tp_pattern if shard is not None else None)
 
     lead_dims = wleaf["mask"].ndim - 3          # stacked (expert/scan) leaves
     if lead_dims > 0:
+        if mesh is not None:
+            # stack collectives run by axis name inside an already-entered
+            # shard_map body (models.moe) — a mesh object here cannot be
+            # honored, and silently going local would all-gather the
+            # DEQUANTIZED stack, the regression sharded:* exists to prevent
+            raise ValueError(
+                "stacked (expert) leaves take the distributed path inside "
+                "a shard_map body: use models.moe.moe_apply(..., mesh=...) "
+                "or dispatch_grouped(..., fsdp_axes=...) from within the "
+                "body, not dispatch(mesh=...)")
         return dispatch_grouped(wleaf, x, strum=strum, backend=backend,
                                 accum_dtype=accum_dtype, out_dtype=out_dtype)
+
+    if mesh is not None:
+        if pattern is None:
+            # silently going local would let XLA hoist the dequant above
+            # the FSDP gather and move DEQUANTIZED bytes over ICI — the
+            # regression the sharded:* family exists to prevent
+            raise ValueError(
+                "dispatch(mesh=...) on a 2-D leaf needs a TP layout: pass "
+                "tp_pattern='col'|'row', or build the plan mesh-aware "
+                "(build_plan(..., mesh=...)) so the leaf's spec records it")
+        from repro.models.sharding import fsdp_axes as _fsdp_axes
+        fsdp = (shard.fsdp_axes if shard is not None and shard.fsdp_axes
+                else _fsdp_axes(mesh))
+        if fsdp:  # a mesh with no FSDP axis (TP-only) serves the local path
+            info = LeafInfo(k_dim=k_dim, n_out=wleaf["scale"].shape[-1],
+                            fsdp=tuple(fsdp), tp_pattern=pattern)
+            return _sharded_call(wleaf, x, cfg, spec, info, mesh=mesh,
+                                 pattern=pattern, backend=backend,
+                                 accum_dtype=accum_dtype,
+                                 out_dtype=out_dtype)
 
     info = LeafInfo(k_dim=k_dim, n_out=wleaf["scale"].shape[-1],
                     lead=(), name="")
@@ -117,7 +174,7 @@ def dispatch_grouped(wleaf: dict, x: jnp.ndarray, *,
                      strum: Optional[StruMConfig] = None,
                      backend: Optional[str] = None,
                      accum_dtype=jnp.float32,
-                     out_dtype=None) -> jnp.ndarray:
+                     out_dtype=None, fsdp_axes=None) -> jnp.ndarray:
     """Batched y[..., c, n] = x[..., c, :] @ dequant(leaf[...]) for stacks.
 
     ``x``: (lead..., C, K) where ``lead`` matches the leaf's stack dims —
@@ -127,6 +184,12 @@ def dispatch_grouped(wleaf: dict, x: jnp.ndarray, *,
     through a lead-axis Pallas grid; any non-grouped selection (the
     ``xla:dequant`` fallback) decompresses the stack at its *true* K and
     contracts with a batched XLA dot.
+
+    ``fsdp_axes`` marks a call from inside an already-entered shard_map
+    body whose payload block axis is still FSDP-sharded over those mesh
+    axes (the MoE expert path): selection then goes to the ``sharded:*``
+    family — ``sharded:grouped_gather`` all-gathers the *packed* stack and
+    re-dispatches here on the gathered form with the same ``backend``.
     """
     cfg, spec = leaf_spec(wleaf, strum)
     lead_dims = wleaf["mask"].ndim - 3
@@ -139,9 +202,18 @@ def dispatch_grouped(wleaf: dict, x: jnp.ndarray, *,
             f"stacked leaf with lead dims {tuple(lead)} needs x of shape "
             f"(*lead, C, K); got {tuple(x.shape)}")
     k_dim = x.shape[-1]
-    _check_k(spec, k_dim)
     out_dtype = out_dtype or x.dtype
 
+    if fsdp_axes:
+        # the leaf is a local shard (block axis nb still FSDP-split), so the
+        # recorded k_dim does not apply until after the gather
+        info = LeafInfo(k_dim=k_dim, n_out=wleaf["scale"].shape[-1],
+                        lead=tuple(lead), fsdp=tuple(fsdp_axes))
+        return _sharded_call(wleaf, x, cfg, spec, info, mesh=None,
+                             pattern=None, backend=backend,
+                             accum_dtype=accum_dtype, out_dtype=out_dtype)
+
+    _check_k(spec, k_dim)
     info = LeafInfo(k_dim=k_dim, n_out=wleaf["scale"].shape[-1],
                     lead=tuple(lead), name="")
     variant, interpret = _pick(cfg, info, spec, backend)

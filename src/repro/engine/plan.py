@@ -45,7 +45,9 @@ from repro.core import packing
 from repro.core.apply import _named_leaves, path_name as _path_name
 from repro.core.policy import LayerPolicy, StruMConfig, default_policy
 from repro.engine import variants as _variants  # noqa: F401  (registration)
-from repro.engine.registry import ExecSpec, LeafInfo, select_variant
+from repro.engine import sharded as _sharded    # noqa: F401  (registration)
+from repro.engine.registry import (ExecSpec, LeafInfo, ShardSpec,
+                                   select_variant)
 
 __all__ = ["PlanEntry", "ExecutionPlan", "build_plan", "fake_quantize"]
 
@@ -71,6 +73,7 @@ class PlanEntry:
     backend: Optional[str] = None     # plan-level backend at selection time
     layout: str = "serve"             # "serve" (lead dims kept) | "folded"
     leaf: Optional[dict] = None       # packed arrays + spec; None if pack=False
+    shard: Optional[ShardSpec] = None  # distributed layout (mesh-aware plans)
 
     @property
     def spec(self) -> ExecSpec:
@@ -78,7 +81,8 @@ class PlanEntry:
         # columns); recording it lets stacked dequant slice off block
         # padding, which decodes to junk rather than zeros
         return ExecSpec(cfg=self.cfg, variant=self.variant,
-                        backend=self.backend, k_dim=self.shape[-2])
+                        backend=self.backend, k_dim=self.shape[-2],
+                        shard=self.shard)
 
     def as_packed(self) -> packing.PackedStruM:
         """The 2-D :class:`PackedStruM` view (folded, or lead-free serve)."""
@@ -153,6 +157,8 @@ class ExecutionPlan:
             dist[e.variant] = dist.get(e.variant, 0) + 1
         out = {"n_entries": len(self.entries), "backend": self.backend or
                "auto", "scope": self.scope, "variant_distribution": dist}
+        if self.meta.get("fsdp_axes"):
+            out["fsdp_axes"] = tuple(self.meta["fsdp_axes"])
         payload = [e.payload_bytes() for e in self.entries.values()]
         if payload and None not in payload:
             out["packed_payload_bytes"] = int(sum(payload))
@@ -195,17 +201,38 @@ def build_plan(params: Any, *, schedule: Any = None,
                policy: Optional[LayerPolicy] = None,
                cfg: Optional[StruMConfig] = None,
                backend: Optional[str] = None, scope: str = "model",
-               float_only: bool = False, pack: bool = True) -> ExecutionPlan:
+               float_only: bool = False, pack: bool = True,
+               mesh=None, rules=None) -> ExecutionPlan:
     """Build an :class:`ExecutionPlan` from ``(params, schedule)``.
 
     Precedence: ``schedule`` (per-tensor table) > ``policy`` > uniform
     ``cfg`` > repo default.  ``backend`` pins the selection family for every
     entry (``"interpret"`` also forces interpret-mode execution); ``None``
     selects pallas on TPU and the XLA dequant path elsewhere.
+
+    ``mesh`` (+ optional sharding ``rules``) makes the plan *mesh-aware*:
+    every entry records its distributed layout (FSDP gather axes from the
+    rules' ``embed`` mapping, col/row TP pattern, expert lead axis) in
+    ``ExecSpec.shard``, and selection goes to the registry's ``sharded:*``
+    family — the compressed-gather datapaths.  Only axis *names* are
+    recorded, so the plan stays serializable/jit-static and also serves
+    single-device (dispatch re-selects when no mesh arrives at call time).
     """
     if scope not in ("model", "tree"):
         raise ValueError(f"scope={scope!r}")
+    if mesh is not None and scope != "model":
+        raise ValueError("mesh-aware plans need scope='model' — folded "
+                         "(scope='tree') leaves have no TP layout")
     pol = _resolve_policy(schedule, policy, cfg)
+
+    fsdp: tuple = ()
+    if mesh is not None:
+        from repro.models.sharding import fsdp_axes, rules_for_mesh
+        rules = rules or rules_for_mesh(mesh)
+        emb = rules.table.get("embed")
+        fsdp = (tuple(emb) if isinstance(emb, tuple) else (emb,)) if emb \
+            else fsdp_axes(mesh)
+    tp = "model" if mesh is not None and "model" in mesh.axis_names else None
 
     entries: dict[str, PlanEntry] = {}
 
@@ -218,12 +245,19 @@ def build_plan(params: Any, *, schedule: Any = None,
         # family (pallas:grouped* on a pallas backend, xla:dequant where no
         # grouped variant expresses the config).
         shape = tuple(leaf.shape)
+        shard = None
+        if fsdp:
+            from repro.engine.sharded import tp_pattern_for
+            shard = ShardSpec(fsdp_axes=fsdp, lead_axis=tp) if exec_lead \
+                else ShardSpec(fsdp_axes=fsdp,
+                               tp_pattern=tp_pattern_for(name))
         info = LeafInfo(k_dim=shape[-2], n_out=shape[-1], lead=exec_lead,
-                        name=name)
+                        name=name, fsdp=fsdp,
+                        tp_pattern=shard.tp_pattern if shard else None)
         variant = select_variant(leaf_cfg, info, backend=backend)
         e = PlanEntry(name=name, cfg=leaf_cfg, variant=variant.name,
                       shape=shape, backend=backend, layout=layout,
-                      leaf=packed_leaf)
+                      leaf=packed_leaf, shard=shard)
         if packed_leaf is not None:
             packed_leaf["cfg"] = leaf_cfg      # back-compat static metadata
             packed_leaf["spec"] = e.spec       # selection, static pytree node
@@ -255,7 +289,8 @@ def build_plan(params: Any, *, schedule: Any = None,
 
         out = jax.tree_util.tree_map_with_path(visit, params)
         return ExecutionPlan(entries=entries, params=out, backend=backend,
-                             scope="model", schedule=schedule)
+                             scope="model", schedule=schedule,
+                             meta={"fsdp_axes": fsdp} if fsdp else {})
 
     # scope == "tree": flat manifest, column-folded packing
     from repro.core.apply import pack_array

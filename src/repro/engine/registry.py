@@ -33,7 +33,7 @@ import jax
 from repro.core.policy import StruMConfig
 
 __all__ = [
-    "LeafInfo", "KernelVariant", "ExecSpec", "BACKENDS",
+    "LeafInfo", "KernelVariant", "ExecSpec", "ShardSpec", "BACKENDS",
     "register_kernel", "unregister_kernel", "get_variant", "list_variants",
     "select_variant", "resolve_backend",
 ]
@@ -48,6 +48,10 @@ class LeafInfo(NamedTuple):
     n_out: int                 # output channels
     lead: tuple = ()           # leading stack dims (experts / scan groups)
     name: str = ""             # parameter path name, for diagnostics
+    fsdp: tuple = ()           # mesh axes the reduction/block dim is
+                               # FSDP-sharded over; non-empty selects from
+                               # the ``sharded:*`` variant family
+    tp_pattern: Optional[str] = None  # 'col' | 'row' TP layout (2-D leaves)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -64,6 +68,16 @@ class KernelVariant:
     fields carry the same lead dims, and returns ``(lead..., M, N)``.  Its
     ``supports`` predicate should require ``info.lead`` — the two shapes are
     disjoint, so grouped and 2-D variants never compete for the same leaf.
+
+    ``sharded=True`` marks a distributed variant (the ``sharded:*`` family):
+    its ``fn`` takes the raw payload dict + activations plus mesh context
+    (``fn(wleaf, x, *, cfg, mesh, fsdp, pattern, k_dim, backend, interpret,
+    accum_dtype, out_dtype)``) and owns its collectives.  Selection only
+    considers sharded variants when ``info.fsdp`` is non-empty, so sharded
+    and single-device variants never compete either.  ``redispatch=True``
+    marks a sharded wrapper that re-enters variant selection *after* its
+    gather with the caller's backend — cross-family fallback onto such a
+    variant is not a datapath substitution and emits no warning.
     """
 
     name: str
@@ -73,6 +87,26 @@ class KernelVariant:
     priority: int = 0
     description: str = ""
     grouped: bool = False
+    sharded: bool = False
+    redispatch: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardSpec:
+    """Static per-leaf distributed layout recorded by a mesh-aware plan.
+
+    Axis *names* only (hashable, mesh-object-free): the runtime mesh still
+    arrives per call — a plan built for an 8-device FSDP×TP layout serves on
+    any mesh with the same axis names.
+    """
+
+    fsdp_axes: tuple = ()             # mesh axes the reduction (2-D leaves)
+                                      # or packed-block (stacks) dim shards
+                                      # over; the compressed-gather axes
+    tp_pattern: Optional[str] = None  # 'col' (K FSDP / N TP) or 'row'
+                                      # (K TP / N FSDP) for 2-D leaves
+    lead_axis: Optional[str] = None   # mesh axis an expert stack's lead dim
+                                      # shards over (EP == TP axis)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +127,7 @@ class ExecSpec:
                                     # stacked dequant needs this to slice off
                                     # block-padding rows (which decode to
                                     # junk, not zero, under MIP2Q)
+    shard: Optional[ShardSpec] = None  # distributed layout (mesh-aware plans)
 
 
 try:
@@ -106,7 +141,8 @@ _REGISTRY: dict[str, KernelVariant] = {}
 
 def register_kernel(name: str, *, supports: Callable, family: str = "pallas",
                     priority: int = 0, description: str = "",
-                    grouped: bool = False):
+                    grouped: bool = False, sharded: bool = False,
+                    redispatch: bool = False):
     """Decorator: register ``fn`` as kernel variant ``name``.
 
     Re-registering a name replaces the previous entry (latest wins), so a
@@ -118,7 +154,8 @@ def register_kernel(name: str, *, supports: Callable, family: str = "pallas",
     def deco(fn):
         _REGISTRY[name] = KernelVariant(
             name=name, fn=fn, supports=supports, family=family,
-            priority=priority, description=description, grouped=grouped)
+            priority=priority, description=description, grouped=grouped,
+            sharded=sharded, redispatch=redispatch)
         return fn
     return deco
 
@@ -168,23 +205,34 @@ def select_variant(cfg: StruMConfig, info: LeafInfo,
     variant (e.g. a stacked expert leaf under ``backend="pallas"``), fall
     back to the ``xla`` family rather than failing — the dequant path can
     express everything.
+
+    Mesh context partitions the candidate set: a non-empty ``info.fsdp``
+    restricts selection to ``sharded=True`` variants (which own their
+    collectives), an empty one excludes them — distributed and local
+    lowerings never compete for the same leaf.
     """
     fam, _ = resolve_backend(backend)
+    sharded = bool(info.fsdp)
     for family in dict.fromkeys((fam, "xla")):
         cands = [v for v in _REGISTRY.values()
-                 if v.family == family and v.supports(cfg, info)]
+                 if v.family == family and v.sharded == sharded
+                 and v.supports(cfg, info)]
         if cands:
-            if family != fam and backend not in (None, "auto"):
+            best = max(cands, key=lambda v: (v.priority, v.name))
+            if family != fam and backend not in (None, "auto") \
+                    and not best.redispatch:
                 # an explicitly requested family had no supporting variant
                 # — substitution should be visible (stacked leaves now have
                 # the pallas:grouped* family, so they warn like 2-D leaves
-                # when, e.g., w % 8 != 0 forces the dequant fallback)
+                # when, e.g., w % 8 != 0 forces the dequant fallback).
+                # redispatch=True wrappers re-select post-gather with the
+                # same backend, so landing on one is not a substitution.
                 warnings.warn(
                     f"backend={backend!r} has no variant supporting "
                     f"{cfg.method} w={cfg.w} n_low={cfg.n_low} "
                     f"({info.name or 'leaf'}); falling back to {family!r}",
                     stacklevel=2)
-            return max(cands, key=lambda v: (v.priority, v.name))
+            return best
     raise LookupError(
         f"no registered kernel variant supports cfg={cfg} info={info} "
         f"backend={backend!r} (registered: {sorted(_REGISTRY)})")

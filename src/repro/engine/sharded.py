@@ -1,0 +1,278 @@
+"""The ``sharded:*`` kernel-variant family: distributed execution as
+registry entries instead of call-site special cases.
+
+StruM's economics (paper Eq. 1/2) come from moving *compressed* weight
+bytes; on a mesh the bytes that matter are the FSDP all-gather over ICI.
+Every variant here therefore gathers the packed payloads — mask/hi/lo at
+~r × int8 — and only then materializes math:
+
+``sharded:gather_dequant``  gather packed inside shard_map, dequantize
+                            locally, XLA dot outside (SPMD places the
+                            contraction) — the portable fallback.
+``sharded:gather_pallas``   gather packed inside shard_map and run the
+                            registry-selected *Pallas decode kernel* on the
+                            gathered compressed form, still inside the
+                            body; decode happens post-gather, so both wire
+                            and HBM traffic stay at the Eq.-1/2 ratio.
+``sharded:grouped_gather``  the same for expert stacks: called from inside
+                            an already-entered shard_map body (MoE), it
+                            all-gathers the packed stack along the FSDP
+                            axes and re-dispatches to the grouped family.
+
+Selection is capability-predicated like every other variant: a non-empty
+``LeafInfo.fsdp`` switches :func:`repro.engine.registry.select_variant`
+onto this family, and the ``backend=`` override resolves which member wins
+(pallas/interpret → gather_pallas, xla/auto-off-TPU → gather_dequant) —
+the per-call override then *also* reaches the post-gather kernel, fixing
+the old path where the gather branch returned before variant selection.
+
+TP layout conventions (unchanged from the historical
+``models.quantize.gather_dequant``):
+
+'col' (wq/wk/wv, mlp wi/wg, ssm in_proj): K FSDP-sharded (block axis 0),
+    N TP-sharded — gather payload axis 0; result keeps N on ``model``.
+'row' (attn wo, mlp wo, ssm out_proj): K TP-sharded, N FSDP-sharded
+    (payload axis 2) — gather axis 2 (and the per-N scales); the contraction
+    over the model-sharded K psums, the Megatron row-parallel schedule.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import packing
+from repro.core.policy import StruMConfig
+from repro.engine.registry import (LeafInfo, list_variants, register_kernel,
+                                   select_variant)
+from repro.models.sharding import fsdp_axes as _fsdp_axes
+from repro.models.sharding import shard_map
+
+__all__ = ["gather_dequant_leaf", "tp_pattern_for", "all_gather_stats",
+           "dense_gather_bytes"]
+
+_ROW_NAMES = ("wo", "out_proj")
+
+
+def tp_pattern_for(name: str) -> str:
+    """TP layout of a 2-D linear from its parameter path name.
+
+    Mirrors what the model call sites pass at runtime: ``wo`` / ``out_proj``
+    linears contract a model-sharded K ('row'); everything else produces a
+    model-sharded N ('col').
+    """
+    parts = name.split("/")
+    owner = parts[-2] if len(parts) >= 2 and parts[-1] == "w" else parts[-1]
+    return "row" if owner in _ROW_NAMES else "col"
+
+
+def _tp_axis(mesh) -> Optional[str]:
+    """The TP mesh axis, or None on an FSDP-only (pure data-parallel) mesh
+    — weights are then replicated on their non-gathered dim and the row
+    pattern needs no psum."""
+    return "model" if "model" in getattr(mesh, "axis_names", ()) else None
+
+
+def _gather_specs(pattern: str, fsdp: tuple, tp: Optional[str]):
+    col = pattern == "col"
+    gather_axis = 0 if col else 2
+    in_spec = P(fsdp, None, tp) if col else P(tp, None, fsdp)
+    scale_spec = P(None, tp) if col else P(None, fsdp)
+    return col, gather_axis, in_spec, scale_spec
+
+
+def gather_dequant_leaf(wleaf: dict, scfg: StruMConfig, mesh, pattern: str,
+                        k_dim: int, dtype=jnp.bfloat16,
+                        fsdp: Optional[tuple] = None) -> jnp.ndarray:
+    """FSDP-gather *compressed* payloads, then dequantize locally.
+
+    Without this, XLA hoists the (elementwise) dequant above the FSDP
+    all-gather and moves f32 weights over ICI; wrapping the gather in
+    shard_map pins it to the packed uint8/int8 payloads, so the wire cost
+    is the paper's r × int8 (§Perf knob 3).  The registry entry
+    ``sharded:gather_dequant`` wraps this with the trailing dot; the
+    deprecated ``models.quantize.gather_dequant`` shim calls it directly.
+    """
+    fsdp = tuple(fsdp) if fsdp else _fsdp_axes(mesh)
+    tp = _tp_axis(mesh)
+    col, gather_axis, in_spec, scale_spec = _gather_specs(pattern, fsdp, tp)
+    out_spec = P(None, tp) if col else P(tp, None)
+
+    def body(mask, hi, lo, scale):
+        g = lambda a: jax.lax.all_gather(a, fsdp, axis=gather_axis,  # noqa: E731
+                                         tiled=True)
+        mask_g, hi_g, lo_g = g(mask), g(hi), g(lo)
+        if not col:  # row: per-output-channel scales follow the N gather
+            scale = jax.lax.all_gather(scale, fsdp, axis=1, tiled=True)
+        k_local = mask_g.shape[0] * scfg.w  # K divisible by w for all archs
+        p = packing.PackedStruM(
+            method=scfg.method, w=scfg.w, n_low=scfg.n_low, q=scfg.q,
+            L=scfg.L, k_dim=k_local, scale=scale,
+            mask=mask_g, hi=hi_g, lo=lo_g)
+        return packing.dequantize(p, dtype)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(in_spec, in_spec, in_spec, scale_spec),
+                   out_specs=out_spec, check_vma=False)
+    return fn(wleaf["mask"], wleaf["hi"], wleaf["lo"], wleaf["scale"])
+
+
+@register_kernel(
+    "sharded:gather_dequant", family="xla", priority=0, sharded=True,
+    supports=lambda cfg, info: not info.lead,
+    description="shard_map-gather packed payloads along the FSDP axes, "
+                "dequantize locally, SPMD dot (portable distributed path)")
+def _gather_dequant(wleaf, x, *, cfg, mesh, fsdp, pattern, k_dim,
+                    backend=None, interpret=None, accum_dtype=jnp.float32,
+                    out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    wd = gather_dequant_leaf(wleaf, cfg, mesh, pattern, k_dim, dtype=x.dtype,
+                             fsdp=fsdp)
+    return jnp.dot(x, wd, preferred_element_type=accum_dtype or jnp.float32
+                   ).astype(out_dtype)
+
+
+def _post_gather_expressible(cfg: StruMConfig, info: LeafInfo) -> bool:
+    """Does some 2-D pallas variant decode this config after the gather?"""
+    inner = LeafInfo(k_dim=info.k_dim, n_out=info.n_out, name=info.name)
+    return any(v.family == "pallas" and not v.grouped and not v.sharded
+               and v.supports(cfg, inner)
+               for v in list_variants().values())
+
+
+@register_kernel(
+    "sharded:gather_pallas", family="pallas", priority=10, sharded=True,
+    redispatch=True,
+    supports=lambda cfg, info: (not info.lead
+                                and _post_gather_expressible(cfg, info)),
+    description="all-gather the packed payloads along the FSDP axes, then "
+                "run the registry-selected Pallas decode kernel on the "
+                "gathered compressed form inside the shard_map body")
+def _gather_pallas(wleaf, x, *, cfg, mesh, fsdp, pattern, k_dim,
+                   backend=None, interpret=None, accum_dtype=jnp.float32,
+                   out_dtype=None):
+    tp = _tp_axis(mesh)
+    col, gather_axis, in_spec, scale_spec = _gather_specs(pattern, fsdp, tp)
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, k_dim)
+    m = x2.shape[0]
+    n_global = wleaf["scale"].shape[-1]
+    # post-gather kernel: same registry, same backend override — this is
+    # where the per-call backend=/STRUM_INTERPRET controls land
+    inner = select_variant(
+        cfg, LeafInfo(k_dim=k_dim, n_out=n_global), backend=backend)
+    # M (token) dim shards over the FSDP axes when it divides; otherwise it
+    # stays replicated (shard_map reshards the global value either way)
+    n_fsdp = math.prod(mesh.shape[a] for a in fsdp) if fsdp else 1
+    m_ax = fsdp if (n_fsdp > 1 and m % n_fsdp == 0) else None
+    x_spec = P(m_ax, None) if col else P(m_ax, tp)
+    y_spec = P(m_ax, tp) if col else P(m_ax, None)
+
+    def body(x_l, mask, hi, lo, scale):
+        g = lambda a: jax.lax.all_gather(a, fsdp, axis=gather_axis,  # noqa: E731
+                                         tiled=True)
+        mask_g, hi_g, lo_g = g(mask), g(hi), g(lo)
+        if not col:  # row: per-output-channel scales follow the N gather
+            scale = jax.lax.all_gather(scale, fsdp, axis=1, tiled=True)
+        # col: full K locally; row: the model-shard of K (blocks stay
+        # aligned — K % (w · n_model) == 0, as the dense TP layout requires)
+        k_local = x_l.shape[-1]
+        p = packing.PackedStruM(
+            method=cfg.method, w=cfg.w, n_low=cfg.n_low, q=cfg.q, L=cfg.L,
+            k_dim=k_local, scale=scale, mask=mask_g, hi=hi_g, lo=lo_g)
+        y = inner.fn(x_l, p, out_dtype=jnp.float32, interpret=interpret,
+                     accum_dtype=accum_dtype)
+        if not col and tp is not None:  # row-parallel: psum K-partials
+            y = jax.lax.psum(y, tp)
+        return y.astype(out_dtype)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(x_spec, in_spec, in_spec, in_spec, scale_spec),
+                   out_specs=y_spec, check_vma=False)
+    y = fn(x2, wleaf["mask"], wleaf["hi"], wleaf["lo"], wleaf["scale"])
+    return y.reshape(lead + (n_global,))
+
+
+@register_kernel(
+    "sharded:grouped_gather", family="xla", priority=0, sharded=True,
+    grouped=True, redispatch=True,
+    supports=lambda cfg, info: bool(info.lead),
+    description="inside an entered shard_map body: all-gather the packed "
+                "expert stack along the FSDP axes, then re-dispatch to the "
+                "grouped kernel family on the gathered compressed form")
+def _grouped_gather(wleaf, x, *, cfg, mesh=None, fsdp, pattern=None, k_dim,
+                    backend=None, interpret=None, accum_dtype=jnp.float32,
+                    out_dtype=None):
+    # the FSDP shard dim is the packed block axis nb = ceil(K/w) — always
+    # ndim-3 of a payload field (lead..., nb, rows, N), whatever the number
+    # of lead dims; scales are per-output-channel and stay local
+    g = lambda a: jax.lax.all_gather(a, fsdp, axis=a.ndim - 3,  # noqa: E731
+                                     tiled=True)
+    gathered = {k: (g(v) if k != "scale" else v)
+                for k, v in wleaf.items()
+                if k in ("mask", "hi", "lo", "scale")}
+    from repro.engine.dispatch import dispatch_grouped
+    return dispatch_grouped(gathered, x, strum=cfg, backend=backend,
+                            accum_dtype=accum_dtype, out_dtype=out_dtype)
+
+
+# --------------------------------------------------- collective accounting --
+
+def _sub_jaxprs(val):
+    """Yield every jaxpr nested in an eqn param value."""
+    vals = val if isinstance(val, (list, tuple)) else (val,)
+    for v in vals:
+        if hasattr(v, "jaxpr"):        # ClosedJaxpr
+            yield v.jaxpr
+        elif hasattr(v, "eqns"):       # raw Jaxpr
+            yield v
+
+
+def all_gather_stats(fn, *args, mesh=None, **kwargs) -> dict:
+    """Trace ``fn`` and account every ``all_gather``'s moved bytes.
+
+    Returns ``{"ops": [...], "operand_bytes": one device's input bytes,
+    "gathered_bytes": operand bytes × gather width (one device's receive
+    volume)}`` — the wire-cost view of a sharded dispatch.  With ``mesh``,
+    adds ``"global_operand_bytes"``: operand bytes × mesh size — for an
+    operand partitioned across the whole mesh (the ``sharded:*`` payload
+    gathers) this is exactly the *global* packed mask+hi+lo payload, the
+    Eq.-1/2 fraction of a dense gather, which the tests and ``kernel_bench
+    --sharded`` assert/report.  (An operand *replicated* along a mesh axis,
+    e.g. the row-pattern scale gather, is counted once per replica.)
+    """
+    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs)
+    ops = []
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "all_gather":
+                aval = eqn.invars[0].aval
+                nbytes = int(np.prod(aval.shape)) * aval.dtype.itemsize
+                width = int(eqn.params.get("axis_size", 1))
+                ops.append({"shape": tuple(aval.shape),
+                            "dtype": str(aval.dtype),
+                            "operand_bytes": nbytes,
+                            "gathered_bytes": nbytes * width})
+            for v in eqn.params.values():
+                for sub in _sub_jaxprs(v):
+                    walk(sub)
+
+    walk(jaxpr.jaxpr)
+    out = {"ops": ops,
+           "operand_bytes": int(sum(o["operand_bytes"] for o in ops)),
+           "gathered_bytes": int(sum(o["gathered_bytes"] for o in ops))}
+    if mesh is not None:
+        n_dev = math.prod(dict(mesh.shape).values())
+        out["global_operand_bytes"] = out["operand_bytes"] * n_dev
+    return out
+
+
+def dense_gather_bytes(k_dim: int, n_out: int, dtype=jnp.bfloat16) -> int:
+    """Bytes the naive path would move: all-gather the *dequantized* weight."""
+    return int(k_dim) * int(n_out) * jnp.dtype(dtype).itemsize

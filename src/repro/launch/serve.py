@@ -25,7 +25,6 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import engine
 from repro.configs.base import get_config, get_smoke_config
 from repro.core.policy import StruMConfig
 from repro.launch.steps import make_decode_step, make_prefill_step
@@ -46,10 +45,19 @@ def pad_caches(caches, extra: int):
     return jax.tree_util.tree_map_with_path(f, caches)
 
 
-def serve(cfg, params, prompt: jnp.ndarray, gen: int, strum_kw: dict):
-    prefill_fn = jax.jit(lambda p, b: make_prefill_step(cfg)(p, b))
+def serve(cfg, params, prompt: jnp.ndarray, gen: int, strum_kw: dict,
+          mesh=None, rules=None):
+    import contextlib
+    ctx = mesh if mesh is not None else contextlib.nullcontext()
+    with ctx:
+        return _serve(cfg, params, prompt, gen, mesh, rules)
+
+
+def _serve(cfg, params, prompt: jnp.ndarray, gen: int, mesh, rules):
+    prefill_fn = jax.jit(
+        lambda p, b: make_prefill_step(cfg, mesh, rules)(p, b))
     decode_fn = jax.jit(
-        lambda p, t, c, n: make_decode_step(cfg)(p, t, c, n))
+        lambda p, t, c, n: make_decode_step(cfg, mesh, rules)(p, t, c, n))
 
     t0 = time.time()
     lg, caches = prefill_fn(params, {"tokens": prompt})
@@ -86,6 +94,10 @@ def main(argv=None):
     ap.add_argument("--backend", default=None,
                     choices=["auto", "pallas", "interpret", "xla"],
                     help="pin the engine's kernel-variant selection")
+    ap.add_argument("--mesh", default=None, metavar="FSDPxTP",
+                    help="serve on a host mesh, e.g. 4x2 (needs "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count="
+                         "N); plans then select sharded:* variants")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -93,18 +105,30 @@ def main(argv=None):
                          dtype_override="float32")
     dense_bytes = serve_tree_bytes(params)
 
+    mesh = rules = None
+    if args.mesh is not None:
+        from repro.launch.mesh import make_host_mesh
+        from repro.models.sharding import rules_for_mesh
+        data, model = (int(v) for v in args.mesh.lower().split("x"))
+        mesh = make_host_mesh(data=data, model=model)
+        rules = rules_for_mesh(mesh)
+
     if args.schedule is not None or args.strum != "none":
+        from repro.launch.steps import build_serving_plan
         if args.schedule is not None:
             from repro.autotune.schedule import StruMSchedule
             sched = StruMSchedule.load(args.schedule)
-            plan = engine.build_plan(params, schedule=sched,
-                                     backend=args.backend)
+            plan = build_serving_plan(params, schedule=sched,
+                                      backend=args.backend, mesh=mesh,
+                                      rules=rules)
             note = f"schedule {args.schedule}"
         else:
             scfg = StruMConfig(method=args.strum, p=args.p, q=args.q,
                                L=args.L)
             cfg = dataclasses.replace(cfg, strum=scfg)
-            plan = engine.build_plan(params, cfg=scfg, backend=args.backend)
+            plan = build_serving_plan(params, cfg=scfg,
+                                      backend=args.backend, mesh=mesh,
+                                      rules=rules)
             note = f"theoretical vs int8 r={scfg.compression_ratio:.4f}"
         comp_bytes = plan.serve_bytes()
         summ = plan.summary()
@@ -120,7 +144,8 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                 cfg.vocab_size, dtype=jnp.int32)
-    toks, t_p, t_d = serve(cfg, params, prompt, args.gen, {})
+    toks, t_p, t_d = serve(cfg, params, prompt, args.gen, {}, mesh=mesh,
+                           rules=rules)
     print(f"prefill {t_p*1e3:.1f} ms; decode {t_d*1e3:.1f} ms "
           f"({args.gen} steps, {t_d/args.gen*1e3:.2f} ms/tok)")
     print("sample:", toks[0, :16].tolist())

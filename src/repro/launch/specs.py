@@ -13,7 +13,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.models import cache_defs, model_defs
 from repro.models.params import abstract_params, param_shardings
-from repro.models.sharding import Rules, rules_for_mesh, spec_for_axes
+from repro.models.sharding import (Rules, fsdp_axes, rules_for_mesh,
+                                   spec_for_axes)
 from repro.optim.adamw import OptState
 
 __all__ = ["input_specs", "input_shardings", "batch_axes", "padded_cache_len"]
@@ -26,7 +27,7 @@ def padded_cache_len(seq_len: int) -> int:
 
 
 def batch_axes(mesh: Mesh, global_batch: int | None = None):
-    axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    axes = fsdp_axes(mesh)
     if global_batch is not None:
         import math
         n = math.prod(mesh.shape[a] for a in axes)

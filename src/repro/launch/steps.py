@@ -17,7 +17,27 @@ from repro.models.sharding import Rules, rules_for_mesh
 from repro.optim import adamw
 from repro.runtime import compression as gcomp
 
-__all__ = ["make_train_step", "make_prefill_step", "make_decode_step"]
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "build_serving_plan"]
+
+
+def build_serving_plan(params, *, schedule=None, cfg=None, policy=None,
+                       backend: Optional[str] = None, mesh=None,
+                       rules: Optional[Rules] = None):
+    """Serving-side plan construction with mesh context threaded through.
+
+    The one place ``launch/serve``, ``serving.scheduler`` and callers of the
+    step builders turn ``(params, schedule | cfg)`` into an
+    :class:`repro.engine.ExecutionPlan`: with a ``mesh`` (and optional
+    ``rules``) every entry records its distributed layout and selects from
+    the registry's ``sharded:*`` family, so the same plan that serves one
+    device serves the FSDP×TP mesh with compressed gathers.
+    """
+    from repro import engine
+    rules = rules or (rules_for_mesh(mesh) if mesh is not None else None)
+    return engine.build_plan(params, schedule=schedule, cfg=cfg,
+                             policy=policy, backend=backend, mesh=mesh,
+                             rules=rules)
 
 
 def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, mesh=None,

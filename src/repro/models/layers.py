@@ -10,8 +10,10 @@ replaced by its compressed form — a dict of arrays
 variant) or by the legacy ``strum_serve_params`` shim.  Static metadata
 (method, w, p, q, L) rides the leaf (``spec``/``cfg``) or falls back to
 ``cfg.strum``.  Execution goes through :func:`repro.engine.dispatch` — the
-registry-selected Pallas variant, the XLA dequant fallback, or the
-TP-sharded gather-dequant path; this module imports no kernels directly.
+registry-selected Pallas variant, the XLA dequant fallback, or (when mesh
+context rides along as ``tp_mesh``/``tp_pattern``) the registry's
+``sharded:*`` compressed-gather family; this module passes the mesh
+through and never branches on it, and imports no kernels directly.
 """
 from __future__ import annotations
 

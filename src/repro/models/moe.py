@@ -13,6 +13,12 @@ static shapes): per local expert ``C = ceil(T·k / E · capacity_factor)``
 slots; overflow tokens drop (standard).  A switch-style load-balance aux
 loss keeps the router near-uniform so drops stay rare.
 
+StruM-packed expert stacks keep their FSDP shard inside the body: the
+engine's ``sharded:grouped_gather`` registry variant (selected by
+``dispatch_grouped(..., fsdp_axes=...)`` at the contraction site) gathers
+the *compressed* payloads and re-dispatches to the grouped kernel family —
+this module hand-rolls no packed collectives.
+
 Single-device path (mesh=None, smoke tests) runs the same local math with
 all experts and no collectives.
 """
@@ -47,7 +53,7 @@ def moe_def(cfg, lead=()) -> dict:
     return out
 
 
-def _expert_contract(wstack, xbuf, scfg):
+def _expert_contract(wstack, xbuf, scfg, fsdp=(), backend=None):
     """(E, C, K) ⊗ (E, K, N) -> (E, C, N), keeping packed stacks compressed.
 
     Dense stacks use the plain batched einsum; packed stacks
@@ -55,11 +61,17 @@ def _expert_contract(wstack, xbuf, scfg):
     registry path — ``pallas:grouped*`` streams the compressed payload
     through a lead-axis grid (the paper's Eq.-1/2 bandwidth win applied to
     the expert decode bill), ``xla:dequant`` decompresses at the true K and
-    contracts with a batched dot everywhere else."""
+    contracts with a batched dot everywhere else.
+
+    Inside the distributed body, ``fsdp`` names the mesh axes the packed
+    block axis is still sharded over: dispatch then selects the engine's
+    ``sharded:grouped_gather`` variant, which all-gathers the *compressed*
+    payloads (r× fewer wire bytes) before the grouped contraction."""
     if isinstance(wstack, dict):
         from repro.engine.dispatch import dispatch_grouped
-        return dispatch_grouped(wstack, xbuf, strum=scfg,
-                                out_dtype=xbuf.dtype)
+        return dispatch_grouped(wstack, xbuf, strum=scfg, backend=backend,
+                                out_dtype=xbuf.dtype,
+                                fsdp_axes=tuple(fsdp) or None)
     return jnp.einsum("eck,ekn->ecn", xbuf, wstack.astype(xbuf.dtype),
                       preferred_element_type=jnp.float32).astype(xbuf.dtype)
 
@@ -75,13 +87,17 @@ def _capacity(tokens: int, cfg) -> int:
 
 
 def _moe_local(x2, router_w, wi, wg, wo, cfg, e_offset: int, capacity: int,
-               scfgs=(None, None, None)):
+               scfgs=(None, None, None), fsdp=(),
+               backends=(None, None, None)):
     """Token-local, expert-local MoE.  x2: (T, D); wi/wo: (E_local, D, F)/(E_local, F, D).
 
     Stacks may arrive StruM-packed (dicts) — the three expert contractions
     then stay compressed through :func:`_expert_contract`.  ``scfgs`` are
     fallback StruMConfigs per stack (wi, wg, wo) for payload dicts whose
-    static metadata was stripped (the shard_map body)."""
+    static metadata was stripped (the shard_map body).  ``fsdp`` (set only
+    inside the distributed body) marks packed stacks as still FSDP-sharded
+    on their block axis — the engine gathers them compressed at the
+    contraction site."""
     t, d = x2.shape
     e_local = _stack_len(wi)
     e_global, k = cfg.n_experts, cfg.top_k
@@ -120,13 +136,15 @@ def _moe_local(x2, router_w, wi, wg, wo, cfg, e_offset: int, capacity: int,
     buf = buf.at[a_exp, a_pos].add(jnp.where(keep[:, None], x2[a_tok], 0))
     buf = buf[:, :capacity]
 
-    h = _expert_contract(wi, buf, scfgs[0])
+    h = _expert_contract(wi, buf, scfgs[0], fsdp=fsdp, backend=backends[0])
     if wg is not None:
-        g = _expert_contract(wg, buf, scfgs[1])
+        g = _expert_contract(wg, buf, scfgs[1], fsdp=fsdp,
+                             backend=backends[1])
         h = jax.nn.silu(g) * h
     else:
         h = jax.nn.gelu(h)
-    out_buf = _expert_contract(wo, h, scfgs[2])
+    out_buf = _expert_contract(wo, h, scfgs[2], fsdp=fsdp,
+                               backend=backends[2])
 
     # combine
     gathered = out_buf[a_exp, jnp.minimum(a_pos, capacity - 1)]  # (T*k, D)
@@ -158,7 +176,8 @@ def moe_apply(p: dict, x: jnp.ndarray, cfg, mesh=None, **_kw):
                                  scfgs=(scfg, scfg, scfg))
         return y.reshape(b, s, d), cfg.n_experts * jnp.sum(df * pf)
 
-    data_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    from repro.models.sharding import fsdp_axes
+    data_axes = fsdp_axes(mesh)
     n_data = math.prod(mesh.shape[a] for a in data_axes)
     n_model = mesh.shape["model"]
     if cfg.n_experts % n_model:
@@ -188,17 +207,17 @@ def moe_apply(p: dict, x: jnp.ndarray, cfg, mesh=None, **_kw):
 
     def body(x_l, router_w, *ws):
         # expert weights arrive FSDP-sharded on their reduction dim; gather
-        # (ZeRO-3 style) before use — roofline-visible.  Packed stacks
-        # gather their COMPRESSED payloads and stay compressed through the
-        # grouped contraction in _moe_local (r× fewer wire + HBM bytes).
-        def gather_one(w):
+        # (ZeRO-3 style) before use — roofline-visible.  Dense stacks gather
+        # here; packed stacks stay local and the engine's
+        # sharded:grouped_gather variant all-gathers their COMPRESSED
+        # payloads at the contraction site (_expert_contract), so they stay
+        # compressed end-to-end (r× fewer wire + HBM bytes).
+        def gather_dense(w):
             if isinstance(w, dict):
-                return {k: (jax.lax.all_gather(v, data_axes, axis=1,
-                                               tiled=True)
-                            if k != "scale" else v) for k, v in w.items()}
+                return w
             return jax.lax.all_gather(w, data_axes, axis=1, tiled=True)
 
-        ws = [gather_one(w) for w in ws]
+        ws = [gather_dense(w) for w in ws]
         wi_l, wo_l = ws[0], ws[-1]
         wg_l = ws[1] if gated else None
         midx = jax.lax.axis_index("model")
@@ -206,7 +225,11 @@ def moe_apply(p: dict, x: jnp.ndarray, cfg, mesh=None, **_kw):
                                  wo_l, cfg, midx * e_local, cap,
                                  scfgs=(ws_cfgs[0],
                                         ws_cfgs[1] if gated else None,
-                                        ws_cfgs[-1]))
+                                        ws_cfgs[-1]),
+                                 fsdp=data_axes,
+                                 backends=(ws_backends[0],
+                                           ws_backends[1] if gated else None,
+                                           ws_backends[-1]))
         y = jax.lax.psum(y, "model")           # combine expert shards
         # global fractions BEFORE the product (aux is nonlinear in them)
         df = jax.lax.pmean(df, data_axes + ("model",))
@@ -233,14 +256,21 @@ def moe_apply(p: dict, x: jnp.ndarray, cfg, mesh=None, **_kw):
                     ("mask", "hi", "lo", "scale")}
         return w
 
-    def stack_cfg(w):
+    def stack_meta(w):
+        """(cfg, plan backend) of a packed stack — the spec cannot cross the
+        shard_map boundary, so the body's re-dispatch gets both from the
+        closure (keeping the recorded backend override reaching the
+        post-gather grouped kernel, like the 2-D sharded path)."""
         if not isinstance(w, dict):
-            return None
+            return None, None
         from repro.engine.dispatch import leaf_spec
-        return leaf_spec(w, scfg)[0]
+        cfg_w, spec_w = leaf_spec(w, scfg)
+        return cfg_w, getattr(spec_w, "backend", None)
 
     stacks = [p["wi"]] + ([wg] if gated else []) + [p["wo"]]
-    ws_cfgs = [stack_cfg(w) for w in stacks]
+    ws_meta = [stack_meta(w) for w in stacks]
+    ws_cfgs = [m[0] for m in ws_meta]
+    ws_backends = [m[1] for m in ws_meta]
     args = [x, p["router"]["w"]] + [strip_cfg(w) for w in stacks]
     in_specs = (dspec, P(None, None)) + tuple(spec_of(w) for w in args[2:])
     out_specs = (dspec, P())

@@ -7,8 +7,9 @@ pieces the engine builds on:
 ``_pack_leaf``        (..., K, N) kernel -> compressed serving-layout arrays
                       (lead dims preserved so ``lax.scan`` / expert indexing
                       slice them exactly like dense params).
-``gather_dequant``    the TP/FSDP distributed path: gather *compressed*
-                      payloads inside shard_map, dequantize locally.
+``gather_dequant``    deprecated shim — the TP/FSDP compressed-gather path
+                      lives in the engine's ``sharded:*`` registry family
+                      (:mod:`repro.engine.sharded`).
 ``packed_model_defs`` dry-run ParamDefs with exact packed shapes/shardings.
 
 The model's ``linear`` recognizes compressed leaves and dispatches through
@@ -92,50 +93,28 @@ def strum_serve_params(params, cfg, policy: Optional[LayerPolicy] = None,
 
 def gather_dequant(wleaf: dict, scfg: StruMConfig, mesh, pattern: str,
                    k_dim: int, dtype=jnp.bfloat16):
-    """FSDP-gather *compressed* payloads, then dequantize locally.
+    """Deprecated shim over the registry's ``sharded:gather_dequant`` entry.
 
-    Without this, XLA hoists the (elementwise) dequant above the FSDP
-    all-gather and moves f32 weights over ICI; wrapping the gather in
-    shard_map pins it to the packed uint8/int8 payloads, so the wire cost
-    is the paper's r × int8 (§Perf knob 3; measured in EXPERIMENTS.md).
-
-    The FSDP gather is ALWAYS over the data(+pod) axes; patterns differ in
-    which payload axis they gather and which TP sharding the result keeps:
-
-    'col' (wq/wk/wv, mlp wi/wg, ssm in_proj): K FSDP-sharded (block axis 0),
-        N TP-sharded — gather axis 0, result (K, N_local), spec (None, model).
-    'row' (attn wo, mlp wo, ssm out_proj): K TP-sharded, N FSDP-sharded
-        (axis 2) — gather axis 2, result (K_local, N), spec (model, None);
-        the following dot contracts the model-sharded K and psums, exactly
-        the Megatron row-parallel schedule.
+    The compressed FSDP gather is now an engine-native kernel family
+    (:mod:`repro.engine.sharded`): ``engine.dispatch(leaf, x, mesh=mesh,
+    tp_pattern=...)`` selects ``sharded:gather_dequant`` /
+    ``sharded:gather_pallas`` by capability predicate, and mesh-aware plans
+    (``build_plan(..., mesh=mesh)``) record the layout per leaf.  This shim
+    keeps the historical weight-returning signature: it runs the registry
+    entry's gather+dequant (without the trailing dot) and returns the dense
+    local weight.
     """
-    from jax.sharding import PartitionSpec as P
+    import warnings
 
-    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
-    col = pattern == "col"
-    gather_axis = 0 if col else 2
-    in_spec = P(baxes, None, "model") if col else P("model", None, baxes)
-    out_spec = P(None, "model") if col else P("model", None)
-    scale_spec = P(None, "model") if col else P(None, baxes)
-
-    def body(mask, hi, lo, scale):
-        g = lambda a: jax.lax.all_gather(a, baxes, axis=gather_axis,  # noqa: E731
-                                         tiled=True)
-        mask_g, hi_g, lo_g = g(mask), g(hi), g(lo)
-        if not col:  # row: per-output-channel scales follow the N gather
-            scale = jax.lax.all_gather(scale, baxes, axis=1, tiled=True)
-        k_local = mask_g.shape[0] * scfg.w  # K divisible by w for all archs
-        p = packing.PackedStruM(
-            method=scfg.method, w=scfg.w, n_low=scfg.n_low, q=scfg.q,
-            L=scfg.L, k_dim=k_local, scale=scale,
-            mask=mask_g, hi=hi_g, lo=lo_g)
-        return packing.dequantize(p, dtype)
-
-    from repro.models.sharding import shard_map
-    fn = shard_map(body, mesh=mesh,
-                   in_specs=(in_spec, in_spec, in_spec, scale_spec),
-                   out_specs=out_spec, check_vma=False)
-    return fn(wleaf["mask"], wleaf["hi"], wleaf["lo"], wleaf["scale"])
+    warnings.warn(
+        "models.quantize.gather_dequant is deprecated; dispatch through "
+        "repro.engine (mesh=/tp_pattern=) — the registry's sharded:* "
+        "variants own the compressed FSDP gather",
+        DeprecationWarning, stacklevel=2)
+    from repro.engine.registry import get_variant
+    get_variant("sharded:gather_dequant")   # the registry owns this path now
+    from repro.engine.sharded import gather_dequant_leaf
+    return gather_dequant_leaf(wleaf, scfg, mesh, pattern, k_dim, dtype=dtype)
 
 
 def packed_model_defs(cfg, policy: Optional[LayerPolicy] = None):

@@ -21,9 +21,24 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
-    "Rules", "TRAIN_RULES", "POD_TRAIN_RULES", "rules_for_mesh",
+    "Rules", "TRAIN_RULES", "POD_TRAIN_RULES", "rules_for_mesh", "fsdp_axes",
     "spec_for_axes", "shard_leaf", "constrain", "batch_spec", "shard_map",
 ]
+
+
+def fsdp_axes(mesh) -> tuple:
+    """Mesh axes weights FSDP-shard (and all-gather) over: ``("data",)``, or
+    ``("pod", "data")`` when FSDP spans pods.
+
+    The single source of truth for the gather/batch axis derivation —
+    ``engine.sharded`` (compressed FSDP gathers), ``models.moe`` (expert
+    gathers + pmean), and ``launch.specs`` (batch sharding) all consume it.
+    Works with any mesh-like object exposing ``axis_names``; returns ``()``
+    for ``mesh=None``.
+    """
+    names = getattr(mesh, "axis_names", ()) if mesh is not None else ()
+    cand = ("pod", "data") if "pod" in names else ("data",)
+    return tuple(a for a in cand if a in names)
 
 
 def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = False):

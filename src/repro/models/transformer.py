@@ -136,7 +136,10 @@ def forward_train(params: dict, batch: dict, cfg, mesh=None,
     """Full forward; returns (logits_f32, total_aux)."""
     kw.setdefault("strum", cfg.strum)
     kw.setdefault("accum_dtype", cfg.accum_dtype)
-    if cfg.strum is not None and mesh is not None:
+    if mesh is not None:
+        # thread mesh context unconditionally: packed leaves (from cfg.strum
+        # OR a schedule-built plan, where cfg.strum is None) need it for the
+        # sharded:* gather path; dense leaves ignore tp_mesh entirely
         kw.setdefault("tp_mesh", mesh)
     x = _embed_in(params, batch, cfg)
     b, s, _ = x.shape
@@ -204,7 +207,10 @@ def prefill(params: dict, batch: dict, cfg, mesh=None, rules=None, **kw):
     """
     kw.setdefault("strum", cfg.strum)
     kw.setdefault("accum_dtype", cfg.accum_dtype)
-    if cfg.strum is not None and mesh is not None:
+    if mesh is not None:
+        # thread mesh context unconditionally: packed leaves (from cfg.strum
+        # OR a schedule-built plan, where cfg.strum is None) need it for the
+        # sharded:* gather path; dense leaves ignore tp_mesh entirely
         kw.setdefault("tp_mesh", mesh)
     x = _embed_in(params, batch, cfg)
     b, s, _ = x.shape
@@ -255,7 +261,10 @@ def decode_step(params: dict, token: jnp.ndarray, caches: dict,
     """
     kw.setdefault("strum", cfg.strum)
     kw.setdefault("accum_dtype", cfg.accum_dtype)
-    if cfg.strum is not None and mesh is not None:
+    if mesh is not None:
+        # thread mesh context unconditionally: packed leaves (from cfg.strum
+        # OR a schedule-built plan, where cfg.strum is None) need it for the
+        # sharded:* gather path; dense leaves ignore tp_mesh entirely
         kw.setdefault("tp_mesh", mesh)
     if token.ndim == 3:
         x = token.astype(cfg.activation_dtype)

@@ -66,7 +66,10 @@ class BatchScheduler:
     variant the plan selected per leaf — directly.  The deployment end of
     the profile → search → schedule → plan → serve flow.  ``backend``
     (e.g. ``"interpret"``, ``"xla"``) pins the engine's variant selection
-    when the scheduler builds the plan itself.
+    when the scheduler builds the plan itself; ``mesh``/``rules`` thread
+    into both the jitted steps *and* plan construction, so a distributed
+    scheduler's plan records per-leaf shardings and serves through the
+    engine's ``sharded:*`` compressed-gather variants.
     """
 
     def __init__(self, cfg, params, n_slots: int = 4, max_len: int = 256,
@@ -79,12 +82,13 @@ class BatchScheduler:
                              "builds the plan (schedule=...); a prebuilt "
                              "plan already recorded its variant selection")
         if schedule is not None:
-            from repro import engine
             from repro.autotune.schedule import StruMSchedule
+            from repro.launch.steps import build_serving_plan
             if isinstance(schedule, (str, bytes)) or hasattr(schedule, "__fspath__"):
                 schedule = StruMSchedule.load(schedule)
-            plan = engine.build_plan(params, schedule=schedule,
-                                     backend=backend)
+            plan = build_serving_plan(params, schedule=schedule,
+                                      backend=backend, mesh=mesh,
+                                      rules=rules)
         if plan is not None:
             params = plan.params
             schedule = schedule if schedule is not None else plan.schedule
