@@ -178,7 +178,11 @@ def run(smoke: bool = False):
             # to the output scale (the tests' rtol-style check)
             tol = 1e-4 * max(1.0, float(jnp.max(jnp.abs(y_ref))))
             for name, var in sorted(engine.list_variants().items()):
-                if var.family == "reference" or not var.supports(cfg, info):
+                # sharded variants need mesh context (run_sharded covers
+                # them) and cache:* codecs take page payloads, not (x, W) —
+                # neither fits the 2-D matmul sweep's calling convention
+                if (var.family == "reference" or var.sharded or var.cache
+                        or not var.supports(cfg, info)):
                     continue
                 interpret = True if var.family == "pallas" else None
                 reps = 1 if (var.family == "pallas" and not smoke) else 3

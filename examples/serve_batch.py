@@ -1,7 +1,8 @@
 """Continuous-batching serving demo: a request queue drained through the
-slot scheduler with StruM-compressed weights.
+paged scheduler with StruM-compressed weights AND StruM-packed KV pages.
 
 Run:  PYTHONPATH=src python examples/serve_batch.py --arch olmo_1b --requests 6
+      PYTHONPATH=src python examples/serve_batch.py --kv-cache dliq --page-size 16
 """
 import argparse
 import dataclasses
@@ -30,6 +31,12 @@ def main():
     ap.add_argument("--schedule", default=None,
                     help="autotuned StruMSchedule JSON (overrides --strum; "
                          "the scheduler compresses the weights from it)")
+    ap.add_argument("--kv-cache", default="none",
+                    choices=["none", "sparsity", "dliq", "mip2q"],
+                    help="pack sealed KV pages with this codec (q=4 / L=7)")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill", default="chunked",
+                    choices=["chunked", "serial"])
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -50,8 +57,11 @@ def main():
               f"{dense/1e6:.2f} -> {serve_tree_bytes(params)/1e6:.2f} MB "
               f"(variants {plan.summary()['variant_distribution']})")
 
+    kv_cache = None if args.kv_cache == "none" else \
+        StruMConfig(method=args.kv_cache, p=0.5, q=4, L=7)
     sched = BatchScheduler(cfg, params, n_slots=args.slots, max_len=64,
-                           schedule=schedule)
+                           schedule=schedule, kv_cache=kv_cache,
+                           page_size=args.page_size, prefill=args.prefill)
     if schedule is not None:
         print(f"  scheduler compressed to "
               f"{serve_tree_bytes(sched.params)/1e6:.2f} MB")
@@ -60,16 +70,23 @@ def main():
         key, k = jax.random.split(key)
         plen = int(6 + i % 5)
         prompt = jax.random.randint(k, (plen,), 0, cfg.vocab_size, jnp.int32)
-        sched.submit(Request(uid=i, prompt=prompt, max_new_tokens=args.gen))
-
+        sched.submit(Request(uid=i, prompt=prompt, max_new_tokens=args.gen,
+                             priority=i % 2))
     t0 = time.time()
     done = sched.run_to_completion(max_steps=500)
     dt = time.time() - t0
     for r in sorted(done, key=lambda r: r.uid):
         print(f"req {r.uid}: {r.output}")
     total_toks = sum(len(r.output) for r in done)
+    st = sched.cache_stats()
     print(f"{len(done)} requests, {total_toks} tokens in {dt:.1f}s "
-          f"({sched._steps} decode steps on {args.slots} slots)")
+          f"({st['steps']} scheduler ticks on {args.slots} slots, "
+          f"{args.prefill} prefill)")
+    print(f"cache: {st['codec']} pages, resident "
+          f"{st['resident_page_bytes']/1e3:.1f} kB "
+          f"(x{st['ratio_vs_int8']:.3f} vs int8 pages; "
+          f"dense monolithic cache would be "
+          f"{st['dense_cache_bytes']/1e3:.1f} kB)")
 
 
 if __name__ == "__main__":

@@ -26,10 +26,19 @@ records per-leaf shardings (:class:`ShardSpec`) and selects from the
 FSDP gathers with the per-call ``backend=`` reaching the post-gather
 kernel.
 
+KV-cache page codecs are engine-native too: the ``cache:*`` family
+(:mod:`repro.engine.cache`) packs/decodes the paged serving runtime's
+sealed cache pages through the same registry — ``build_cache_spec``
+selects a decoder per ``(codec, page geometry)`` and records it in a
+static :class:`CacheSpec`.
+
 The legacy entrypoints (``core.apply.pack_tree`` / ``fake_quantize_tree``,
 ``models.quantize.strum_serve_params``, ``models.quantize.gather_dequant``)
 remain as thin deprecated shims over plan construction / the registry.
 """
+from repro.engine.cache import (CacheSpec, build_cache_spec, decode_pages,
+                                encode_page, gather_decode_pages,
+                                select_cache_variant)
 from repro.engine.dispatch import (apply, dequant_leaf, dispatch,
                                    dispatch_grouped, leaf_spec)
 from repro.engine.plan import (ExecutionPlan, PlanEntry, build_plan,
@@ -49,4 +58,6 @@ __all__ = [
     "register_kernel", "unregister_kernel", "get_variant", "list_variants",
     "select_variant", "resolve_backend",
     "all_gather_stats", "dense_gather_bytes", "tp_pattern_for",
+    "CacheSpec", "build_cache_spec", "select_cache_variant",
+    "encode_page", "decode_pages", "gather_decode_pages",
 ]

@@ -52,6 +52,9 @@ class LeafInfo(NamedTuple):
                                # FSDP-sharded over; non-empty selects from
                                # the ``sharded:*`` variant family
     tp_pattern: Optional[str] = None  # 'col' | 'row' TP layout (2-D leaves)
+    cache: bool = False        # True selects from the ``cache:*`` family
+                               # (paged KV-page codecs: k_dim is the page
+                               # size, n_out the per-token feature dim)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +71,13 @@ class KernelVariant:
     fields carry the same lead dims, and returns ``(lead..., M, N)``.  Its
     ``supports`` predicate should require ``info.lead`` — the two shapes are
     disjoint, so grouped and 2-D variants never compete for the same leaf.
+
+    ``cache=True`` marks a KV-page codec (the ``cache:*`` family): its ``fn``
+    decodes a batch of packed cache pages back to values —
+    ``fn(leaf, *, cfg, page_size, out_dtype, interpret) -> pages`` — rather
+    than contracting activations.  Selection only considers cache variants
+    when ``info.cache`` is set, so page codecs and matmul lowerings never
+    compete for the same leaf.
 
     ``sharded=True`` marks a distributed variant (the ``sharded:*`` family):
     its ``fn`` takes the raw payload dict + activations plus mesh context
@@ -89,6 +99,7 @@ class KernelVariant:
     grouped: bool = False
     sharded: bool = False
     redispatch: bool = False
+    cache: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,7 +153,7 @@ _REGISTRY: dict[str, KernelVariant] = {}
 def register_kernel(name: str, *, supports: Callable, family: str = "pallas",
                     priority: int = 0, description: str = "",
                     grouped: bool = False, sharded: bool = False,
-                    redispatch: bool = False):
+                    redispatch: bool = False, cache: bool = False):
     """Decorator: register ``fn`` as kernel variant ``name``.
 
     Re-registering a name replaces the previous entry (latest wins), so a
@@ -155,7 +166,7 @@ def register_kernel(name: str, *, supports: Callable, family: str = "pallas",
         _REGISTRY[name] = KernelVariant(
             name=name, fn=fn, supports=supports, family=family,
             priority=priority, description=description, grouped=grouped,
-            sharded=sharded, redispatch=redispatch)
+            sharded=sharded, redispatch=redispatch, cache=cache)
         return fn
     return deco
 
@@ -209,14 +220,16 @@ def select_variant(cfg: StruMConfig, info: LeafInfo,
     Mesh context partitions the candidate set: a non-empty ``info.fsdp``
     restricts selection to ``sharded=True`` variants (which own their
     collectives), an empty one excludes them — distributed and local
-    lowerings never compete for the same leaf.
+    lowerings never compete for the same leaf.  ``info.cache`` partitions
+    the same way: page codecs (``cache:*``) only compete with each other.
     """
     fam, _ = resolve_backend(backend)
     sharded = bool(info.fsdp)
+    cache = bool(getattr(info, "cache", False))
     for family in dict.fromkeys((fam, "xla")):
         cands = [v for v in _REGISTRY.values()
                  if v.family == family and v.sharded == sharded
-                 and v.supports(cfg, info)]
+                 and v.cache == cache and v.supports(cfg, info)]
         if cands:
             best = max(cands, key=lambda v: (v.priority, v.name))
             if family != fam and backend not in (None, "auto") \

@@ -77,6 +77,21 @@ def _tp_axis(mesh) -> Optional[str]:
     return "model" if "model" in getattr(mesh, "axis_names", ()) else None
 
 
+def _pick_m_pad(m: int, n_fsdp: int) -> int:
+    """Rows to append so the token dim divides the FSDP width.
+
+    The M-sharding twin of :func:`repro.kernels.ops._pick_block`: instead
+    of demanding plain divisibility (and silently replicating the whole
+    batch otherwise), pad M up to the alignment so every M — including
+    non-power-of-two serving batches — shards.  Padded rows are zeros;
+    their outputs are zeros (row-pattern psums included) and are sliced
+    off after the shard_map.
+    """
+    if n_fsdp <= 1:
+        return 0
+    return (-m) % n_fsdp
+
+
 def _gather_specs(pattern: str, fsdp: tuple, tp: Optional[str]):
     col = pattern == "col"
     gather_axis = 0 if col else 2
@@ -166,10 +181,15 @@ def _gather_pallas(wleaf, x, *, cfg, mesh, fsdp, pattern, k_dim,
     # where the per-call backend=/STRUM_INTERPRET controls land
     inner = select_variant(
         cfg, LeafInfo(k_dim=k_dim, n_out=n_global), backend=backend)
-    # M (token) dim shards over the FSDP axes when it divides; otherwise it
-    # stays replicated (shard_map reshards the global value either way)
+    # M (token) dim always shards over the FSDP axes: a ragged M is padded
+    # up to the FSDP width (mirroring ops._pick_block's pad-to-align — the
+    # zero rows produce zero outputs, sliced off below) instead of the old
+    # plain-divisibility rule that replicated the whole batch
     n_fsdp = math.prod(mesh.shape[a] for a in fsdp) if fsdp else 1
-    m_ax = fsdp if (n_fsdp > 1 and m % n_fsdp == 0) else None
+    m_pad = _pick_m_pad(m, n_fsdp)
+    if m_pad:
+        x2 = jnp.pad(x2, ((0, m_pad), (0, 0)))
+    m_ax = fsdp if n_fsdp > 1 else None
     x_spec = P(m_ax, None) if col else P(m_ax, tp)
     y_spec = P(m_ax, tp) if col else P(m_ax, None)
 
@@ -195,6 +215,8 @@ def _gather_pallas(wleaf, x, *, cfg, mesh, fsdp, pattern, k_dim,
                    in_specs=(x_spec, in_spec, in_spec, in_spec, scale_spec),
                    out_specs=y_spec, check_vma=False)
     y = fn(x2, wleaf["mask"], wleaf["hi"], wleaf["lo"], wleaf["scale"])
+    if m_pad:
+        y = y[:m]
     return y.reshape(lead + (n_global,))
 
 

@@ -98,6 +98,16 @@ def main(argv=None):
                     help="serve on a host mesh, e.g. 4x2 (needs "
                          "XLA_FLAGS=--xla_force_host_platform_device_count="
                          "N); plans then select sharded:* variants")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the paged continuous-batching "
+                         "runtime (BatchScheduler) instead of the "
+                         "single-stream dense-cache loop")
+    ap.add_argument("--kv-cache", default="none",
+                    choices=["none", "sparsity", "dliq", "mip2q"],
+                    help="(--paged) pack sealed KV pages with this codec")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--prefill", default="chunked",
+                    choices=["chunked", "serial"])
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -144,6 +154,28 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
                                 cfg.vocab_size, dtype=jnp.int32)
+    if args.paged:
+        from repro.core.policy import StruMConfig as _SC
+        from repro.serving import BatchScheduler, Request
+        kv = None if args.kv_cache == "none" else \
+            _SC(method=args.kv_cache, p=0.5, q=4, L=7)
+        max_len = args.prompt_len + args.gen + args.page_size
+        sched = BatchScheduler(cfg, params, n_slots=args.batch,
+                               max_len=max_len, mesh=mesh, rules=rules,
+                               kv_cache=kv, page_size=args.page_size,
+                               prefill=args.prefill)
+        for i in range(args.batch):
+            sched.submit(Request(uid=i, prompt=prompt[i],
+                                 max_new_tokens=args.gen + 1))
+        t0 = time.time()
+        done = sched.run_to_completion()
+        dt = time.time() - t0
+        st = sched.cache_stats()
+        print(f"paged serve: {len(done)} requests in {dt*1e3:.1f} ms "
+              f"({st['steps']} ticks, {args.prefill} prefill); cache "
+              f"{st['codec']} x{st['ratio_vs_int8']:.3f} vs int8 pages")
+        print("sample:", done[0].output[:16])
+        return 0
     toks, t_p, t_d = serve(cfg, params, prompt, args.gen, {}, mesh=mesh,
                            rules=rules)
     print(f"prefill {t_p*1e3:.1f} ms; decode {t_d*1e3:.1f} ms "

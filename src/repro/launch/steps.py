@@ -18,6 +18,7 @@ from repro.optim import adamw
 from repro.runtime import compression as gcomp
 
 __all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
+           "make_paged_decode_step", "make_chunked_prefill_step",
            "build_serving_plan"]
 
 
@@ -84,4 +85,36 @@ def make_decode_step(cfg, mesh=None, rules: Optional[Rules] = None):
     def step(params, token, caches, cache_len):
         return tfm.decode_step(params, token, caches, cache_len, cfg,
                                mesh=mesh, rules=rules)
+    return step
+
+
+def make_paged_decode_step(cfg, spec, mesh=None,
+                           rules: Optional[Rules] = None,
+                           cache_backend: Optional[str] = None):
+    """Decode lane of the paged serving runtime: one (n_slots, 1) step over
+    page-table caches.  ``spec`` (a :class:`repro.engine.cache.CacheSpec`)
+    rides the closure as static codec metadata."""
+    rules = rules or (rules_for_mesh(mesh) if mesh is not None else None)
+
+    def step(params, token, pools, hot, cache_len, page_table, active):
+        return tfm.decode_step_paged(params, token, pools, hot, cache_len,
+                                     page_table, active, spec, cfg,
+                                     mesh=mesh, rules=rules,
+                                     cache_backend=cache_backend)
+    return step
+
+
+def make_chunked_prefill_step(cfg, spec, mesh=None,
+                              rules: Optional[Rules] = None,
+                              cache_backend: Optional[str] = None):
+    """Prefill lane: one fixed-shape (1, chunk) step that any slot's prompt
+    advances through — the single prefill executable that replaces the old
+    compile-per-prompt-length path."""
+    rules = rules or (rules_for_mesh(mesh) if mesh is not None else None)
+
+    def step(params, tokens, pools, hot, page_table, slot, start, valid_len):
+        return tfm.prefill_chunk_step(params, tokens, pools, hot, page_table,
+                                      slot, start, valid_len, spec, cfg,
+                                      mesh=mesh, rules=rules,
+                                      cache_backend=cache_backend)
     return step

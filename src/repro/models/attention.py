@@ -23,7 +23,8 @@ import jax.numpy as jnp
 from repro.models.layers import apply_rope, linear, linear_def
 from repro.models.params import ParamDef
 
-__all__ = ["attn_def", "attention", "decode_attention", "init_cache_spec"]
+__all__ = ["attn_def", "attention", "decode_attention", "init_cache_spec",
+           "decode_attention_paged", "prefill_attention_paged"]
 
 NEG_INF = -1e30
 
@@ -177,3 +178,122 @@ def init_cache_spec(cfg, batch: int, max_len: int):
     shape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
     axes = ("batch", "cache_seq", "kv_heads", "head_dim")
     return shape, axes
+
+
+# ----------------------------------------------------------- paged caches --
+#
+# The serving runtime stores KV in fixed-size pages (repro.serving.pages):
+# sealed pages live in per-layer pools — packed via the engine's ``cache:*``
+# codecs or as raw fp — and each slot keeps one hot tail page it is writing.
+# The attention functions below gather-and-decode a request's pages instead
+# of slicing a monolithic (B, max_len, ...) buffer; positions beyond the
+# sequence length (unsealed pool slots, recycled pages of retired requests)
+# are masked to NEG_INF exactly like the dense path masks its zero padding,
+# so junk pages never reach the softmax and retired requests cannot leak
+# into their slot's successor.
+
+def _assemble_pages(pool: dict, page_ids: jnp.ndarray, spec, nkv: int,
+                    hd: int, cache_backend=None):
+    """Gather + decode sealed pages -> (*ids_lead, pp*page_size, KV, hd) f32."""
+    from repro.engine.cache import gather_decode_pages
+    lead = page_ids.shape[:-1]
+    pp = page_ids.shape[-1]
+
+    def one(name):
+        d = gather_decode_pages(pool[name], page_ids, spec,
+                                backend=cache_backend)
+        return d.reshape(lead + (pp * spec.page_size, nkv, hd))
+    return one("k"), one("v")
+
+
+def decode_attention_paged(p: dict, x: jnp.ndarray, cfg, pool: dict,
+                           tails: tuple, spec, page_table: jnp.ndarray,
+                           cache_len: jnp.ndarray, cache_backend=None, **kw):
+    """Single-token decode over a paged (possibly packed) KV cache.
+
+    x: (B, 1, D); ``pool`` is this layer's page pool (page axis leading —
+    the layer scan already sliced the group dim); ``tails`` the slot-hot
+    ``(k_tail, v_tail)`` of shape (B, page_size, KV, hd); ``page_table``
+    (B, pages_per_seq) int32 page ids (-1 = unassigned); ``cache_len`` (B,).
+
+    Functionally updates only the tails (the new token is appended at
+    ``cache_len % page_size``); sealing a full tail into the pool is the
+    scheduler's job, between steps.  Returns (y, (new_k_tail, new_v_tail)).
+    """
+    b = x.shape[0]
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    rep = nh // nkv
+    kt, vt = tails
+    ps = spec.page_size
+    smax = page_table.shape[1] * ps
+    positions = cache_len[:, None].astype(jnp.int32)
+    q, k, v = _qkv(p, x, cfg, positions, **kw)
+
+    k_seq, v_seq = _assemble_pages(pool, page_table, spec, nkv, hd,
+                                   cache_backend)
+    # overlay the hot tail at its page slot (the page currently filling)
+    pos = jnp.arange(smax)
+    in_tail = (pos[None, :] // ps) == (cache_len // ps)[:, None]
+    sel = in_tail[..., None, None]
+    k_seq = jnp.where(sel, kt[:, pos % ps].astype(jnp.float32), k_seq)
+    v_seq = jnp.where(sel, vt[:, pos % ps].astype(jnp.float32), v_seq)
+    # append the fresh token at cache_len (tail + assembled view)
+    rows = jnp.arange(b)
+    k_new = k[:, 0].astype(kt.dtype)
+    v_new = v[:, 0].astype(vt.dtype)
+    new_kt = kt.at[rows, cache_len % ps].set(k_new)
+    new_vt = vt.at[rows, cache_len % ps].set(v_new)
+    k_seq = k_seq.at[rows, cache_len].set(k_new.astype(jnp.float32))
+    v_seq = v_seq.at[rows, cache_len].set(v_new.astype(jnp.float32))
+
+    qf = (q.astype(jnp.float32) / math.sqrt(hd)).reshape(b, nkv, rep, hd)
+    sc = jnp.einsum("bgrd,bsgd->bgrs", qf, k_seq)
+    valid = jnp.arange(smax)[None, None, None, :] \
+        <= cache_len[:, None, None, None]
+    sc = jnp.where(valid, sc, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bgrs,bsgd->bgrd", w, v_seq)
+    o = o.reshape(b, 1, nh * hd).astype(x.dtype)
+    y = linear(p["wo"], o, **dict(kw, tp_pattern="row"))
+    return y, (new_kt, new_vt)
+
+
+def prefill_attention_paged(p: dict, x: jnp.ndarray, cfg, pool: dict,
+                            spec, table_row: jnp.ndarray,
+                            start: jnp.ndarray, cache_backend=None, **kw):
+    """Chunked-prefill attention for ONE request.  x: (1, C, D).
+
+    The chunk's tokens sit at absolute positions ``start + [0, C)``; all
+    earlier content is in sealed pages (chunk starts are page-aligned, so
+    there is never a partially-hot prefix).  Causality within the chunk and
+    against the cached pages is one ``k_pos <= q_pos`` mask; padded rows of
+    a ragged final chunk land at positions beyond the prompt, which every
+    valid query masks causally.  Returns ``(y, (k, v))`` with k/v
+    (1, C, KV, hd) — writing them into pages/tail is the caller's job.
+    """
+    b, c, _ = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    rep = nh // nkv
+    ps = spec.page_size
+    smax = table_row.shape[0] * ps
+    positions = (start + jnp.arange(c, dtype=jnp.int32))[None, :]
+    positions = jnp.broadcast_to(positions, (b, c))
+    q, k, v = _qkv(p, x, cfg, positions, **kw)
+
+    k_seq, v_seq = _assemble_pages(pool, table_row[None, :], spec, nkv, hd,
+                                   cache_backend)
+    k_seq = jax.lax.dynamic_update_slice(
+        k_seq, k.astype(jnp.float32), (0, start, 0, 0))
+    v_seq = jax.lax.dynamic_update_slice(
+        v_seq, v.astype(jnp.float32), (0, start, 0, 0))
+
+    q_pos = start + jnp.arange(c)
+    causal = jnp.arange(smax)[None, :] <= q_pos[:, None]        # (C, smax)
+    qf = (q.astype(jnp.float32) / math.sqrt(hd)).reshape(b, c, nkv, rep, hd)
+    sc = jnp.einsum("bqgrd,bsgd->bgrqs", qf, k_seq)
+    sc = jnp.where(causal[None, None, None], sc, NEG_INF)
+    w = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bgrqs,bsgd->bgrqd", w, v_seq)
+    o = o.transpose(0, 3, 1, 2, 4).reshape(b, c, nh * hd).astype(x.dtype)
+    y = linear(p["wo"], o, **dict(kw, tp_pattern="row"))
+    return y, (k, v)

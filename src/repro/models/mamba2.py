@@ -21,7 +21,8 @@ import jax.numpy as jnp
 from repro.models.layers import linear, linear_def, rms_norm
 from repro.models.params import ParamDef
 
-__all__ = ["ssm_def", "ssm_apply", "ssm_decode", "ssm_cache_spec"]
+__all__ = ["ssm_def", "ssm_apply", "ssm_decode", "ssm_prefill_chunk",
+           "ssm_cache_spec"]
 
 
 def _dims(cfg):
@@ -182,6 +183,54 @@ def ssm_apply(p: dict, x: jnp.ndarray, cfg, chunk: int = 256,
     if return_state:
         return out, (conv_tail, hT)
     return out
+
+
+def ssm_prefill_chunk(p: dict, x: jnp.ndarray, cfg, cache: tuple,
+                      valid_len: jnp.ndarray, chunk: int = 256, **kw):
+    """Process one prefill chunk as a *continuation*: carried (conv, state)
+    in, updated (conv, state) out — the chunked-prefill twin of
+    :func:`ssm_apply`.
+
+    x: (1, C, D); ``cache = (conv_state (1, W-1, conv_dim), h0)``;
+    ``valid_len`` (traced scalar) is the number of real tokens in the chunk
+    — padded rows of a ragged final chunk get ``dt = 0`` which makes them
+    exact no-ops in the SSD recurrence (decay 1, input 0), and the conv
+    tail is sliced at the valid boundary, so the carried state after the
+    chunk equals the state after ``valid_len`` tokens.
+    """
+    b, s, d = x.shape
+    di, nh, hp, ns, conv_dim = _dims(cfg)
+    conv_state, h0 = cache
+    z, xs, bb, cc, dt = _project_in(p, x, cfg, kw)
+
+    xbc_raw = jnp.concatenate([xs, bb, cc], axis=-1)          # (1, C, cd)
+    width = cfg.ssm_conv
+    padded = jnp.concatenate([conv_state.astype(xbc_raw.dtype), xbc_raw],
+                             axis=1)                          # (1, W-1+C, cd)
+    w = p["conv_w"].astype(jnp.float32)
+    out = sum(padded[:, i:i + s, :].astype(jnp.float32) * w[i][None, None, :]
+              for i in range(width))
+    xbc = jax.nn.silu(out + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    # conv tail for the next chunk: the W-1 inputs ending at the valid
+    # boundary — rows [valid_len, valid_len + W - 1) of the padded window
+    new_conv = jax.lax.dynamic_slice(
+        padded, (0, valid_len, 0), (b, width - 1, conv_dim))
+    xs, bb, cc = xbc[..., :di], xbc[..., di:di + ns], xbc[..., di + ns:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    dt = jnp.where(jnp.arange(s)[None, :, None] < valid_len, dt, 0.0)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xs.reshape(b, s, nh, hp)
+    y, hT = _ssd_chunked(xh, dt, a, bb, cc, chunk,
+                         h0=h0.astype(jnp.float32))
+    y = y + xh.astype(jnp.float32) \
+        * p["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["norm_scale"])
+    out = linear(p["out_proj"], y, **dict(kw, tp_pattern="row"))
+    return out, (new_conv.astype(conv_state.dtype), hT)
 
 
 def ssm_decode(p: dict, x: jnp.ndarray, cfg, cache: tuple, **kw):

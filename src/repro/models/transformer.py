@@ -25,7 +25,8 @@ from repro.models.params import ParamDef
 from repro.models.sharding import Rules, constrain
 
 __all__ = ["period", "n_groups", "model_defs", "forward_train",
-           "prefill", "decode_step", "cache_defs", "loss_fn"]
+           "prefill", "decode_step", "cache_defs", "loss_fn",
+           "decode_step_paged", "prefill_chunk_step"]
 
 
 def period(cfg) -> int:
@@ -303,3 +304,167 @@ def decode_step(params: dict, token: jnp.ndarray, caches: dict,
     x = apply_norm(params["final_norm"], x, cfg)
     lg = logits(params.get("lm_head"), params["embed"], x)
     return lg, new_caches
+
+
+# -------------------------------------------------------- paged serving --
+#
+# The serving runtime's two lanes (repro.serving.scheduler) — a decode step
+# over every slot and a chunked-prefill step over one slot — both read KV
+# through the page table instead of slicing a monolithic cache buffer.
+# ``pools`` holds sealed pages per layer position (packed via the engine's
+# ``cache:*`` codecs or raw fp; see repro.serving.pages), ``hot`` the
+# per-slot mutable state (attention tail pages, SSM conv/state).  Only
+# ``hot`` is functionally updated here; sealing full pages into the pools
+# happens between steps, on the host, through one jitted sealer.
+
+def _common_kw(cfg, mesh, kw):
+    kw.setdefault("strum", cfg.strum)
+    kw.setdefault("accum_dtype", cfg.accum_dtype)
+    if mesh is not None:
+        # packed leaves (cfg.strum OR a schedule-built plan) need the mesh
+        # context for the sharded:* gather path; dense leaves ignore it
+        kw.setdefault("tp_mesh", mesh)
+    return kw
+
+
+def decode_step_paged(params: dict, token: jnp.ndarray, pools: dict,
+                      hot: dict, cache_len: jnp.ndarray,
+                      page_table: jnp.ndarray, active: jnp.ndarray,
+                      spec, cfg, mesh=None, rules=None,
+                      cache_backend=None, **kw):
+    """One decode step over paged caches.  token: (B, 1) int32.
+
+    ``active`` (B,) bool masks the hot-state updates: parked slots and
+    slots mid-prefill still ride the (static-shape) batch but must not
+    corrupt their tail/SSM state — the paged twin of the seed scheduler's
+    "a free slot keeps decoding garbage into a parked position".
+    Returns (logits (B, 1, V), new_hot).
+    """
+    kw = _common_kw(cfg, mesh, kw)
+    if token.ndim == 3:
+        x = token.astype(cfg.activation_dtype)
+    else:
+        x = embed_lookup(params["embed"], token, cfg.activation_dtype)
+    x = constrain(x, ("batch", None, None), rules)
+    p = period(cfg)
+    a_tail = active[:, None, None, None]
+
+    def group(carry, xs):
+        x = carry
+        gp, pool_g, hot_g = xs
+        new_hot = {}
+        for i in range(p):
+            bp, pool_i, hot_i = (gp[f"pos{i}"], pool_g[f"pos{i}"],
+                                 hot_g[f"pos{i}"])
+            h = apply_norm(bp["norm1"], x, cfg)
+            if "attn" in bp:
+                h, (nkt, nvt) = attn_mod.decode_attention_paged(
+                    bp["attn"], h, cfg, pool_i,
+                    (hot_i["k_tail"], hot_i["v_tail"]), spec, page_table,
+                    cache_len, cache_backend=cache_backend, **kw)
+                new_hot[f"pos{i}"] = {
+                    "k_tail": jnp.where(a_tail, nkt, hot_i["k_tail"]),
+                    "v_tail": jnp.where(a_tail, nvt, hot_i["v_tail"])}
+            else:
+                h, (ncv, nst) = mamba2.ssm_decode(
+                    bp["ssm"], h, cfg, (hot_i["conv"], hot_i["state"]), **kw)
+                new_hot[f"pos{i}"] = {
+                    "conv": jnp.where(active[:, None, None], ncv,
+                                      hot_i["conv"]),
+                    "state": jnp.where(a_tail, nst, hot_i["state"])}
+            x = x + h
+            if cfg.d_ff > 0:
+                h = apply_norm(bp["norm2"], x, cfg)
+                if "moe" in bp:
+                    h, _ = moe.moe_apply(bp["moe"], h, cfg, mesh=mesh, **kw)
+                else:
+                    h = mlp(bp["mlp"], h, cfg, **kw)
+                x = x + h
+            x = constrain(x, ("batch", None, None), rules)
+        return x, new_hot
+
+    x, new_hot = _scan_groups(group, x, (params["blocks"], pools, hot), cfg)
+    x = apply_norm(params["final_norm"], x, cfg)
+    lg = logits(params.get("lm_head"), params["embed"], x)
+    return lg, new_hot
+
+
+def prefill_chunk_step(params: dict, tokens: jnp.ndarray, pools: dict,
+                       hot: dict, page_table: jnp.ndarray, slot: jnp.ndarray,
+                       start: jnp.ndarray, valid_len: jnp.ndarray,
+                       spec, cfg, mesh=None, rules=None,
+                       cache_backend=None, **kw):
+    """One fixed-shape prefill chunk for ONE slot.  tokens: (1, C) int32.
+
+    ``slot`` / ``start`` / ``valid_len`` are traced scalars — every prompt
+    of every slot runs through this single executable, which is the
+    no-recompile-storm fix for the old per-prompt-length prefill.  Returns
+    ``(logits (1, C, V), new_hot, chunk_kv)``: the first generated token is
+    ``argmax(logits[0, valid_len - 1])`` on the final chunk, and
+    ``chunk_kv`` (per attention position, the chunk's (k, v), group-
+    stacked) is what the host seals into full pages.
+    """
+    kw = _common_kw(cfg, mesh, kw)
+    ps = spec.page_size
+    if tokens.ndim == 3:
+        x = tokens.astype(cfg.activation_dtype)
+    else:
+        x = embed_lookup(params["embed"], tokens, cfg.activation_dtype)
+    c = x.shape[1]
+    p = period(cfg)
+    # relative offset of the new tail content inside the chunk: chunk starts
+    # are page-aligned, so the ragged remainder [floor(v/ps)*ps, v) is the
+    # tail page; clamp keeps the slice in-bounds when the chunk is full
+    # (the tail is then logically empty and masked by length anyway)
+    tail_rel = jnp.clip((valid_len // ps) * ps, 0, c - ps)
+
+    def group(carry, xs):
+        x = carry
+        gp, pool_g, hot_g = xs
+        new_hot = {}
+        chunk_kv = {}
+        for i in range(p):
+            bp, pool_i, hot_i = (gp[f"pos{i}"], pool_g[f"pos{i}"],
+                                 hot_g[f"pos{i}"])
+            h = apply_norm(bp["norm1"], x, cfg)
+            if "attn" in bp:
+                h, (ck, cv) = attn_mod.prefill_attention_paged(
+                    bp["attn"], h, cfg, pool_i, spec, page_table[slot],
+                    start, cache_backend=cache_backend, **kw)
+                ck = ck.astype(hot_i["k_tail"].dtype)
+                cv = cv.astype(hot_i["v_tail"].dtype)
+                chunk_kv[f"pos{i}"] = {"k": ck, "v": cv}
+                nkv_, hd_ = ck.shape[2], ck.shape[3]
+                tk = jax.lax.dynamic_slice(ck, (0, tail_rel, 0, 0),
+                                           (1, ps, nkv_, hd_))[0]
+                tv = jax.lax.dynamic_slice(cv, (0, tail_rel, 0, 0),
+                                           (1, ps, nkv_, hd_))[0]
+                new_hot[f"pos{i}"] = {
+                    "k_tail": hot_i["k_tail"].at[slot].set(tk),
+                    "v_tail": hot_i["v_tail"].at[slot].set(tv)}
+            else:
+                h, (ncv, nst) = mamba2.ssm_prefill_chunk(
+                    bp["ssm"], h, cfg,
+                    (hot_i["conv"][slot][None], hot_i["state"][slot][None]),
+                    valid_len, **kw)
+                chunk_kv[f"pos{i}"] = {}
+                new_hot[f"pos{i}"] = {
+                    "conv": hot_i["conv"].at[slot].set(
+                        ncv[0].astype(hot_i["conv"].dtype)),
+                    "state": hot_i["state"].at[slot].set(nst[0])}
+            x = x + h
+            if cfg.d_ff > 0:
+                h = apply_norm(bp["norm2"], x, cfg)
+                if "moe" in bp:
+                    h, _ = moe.moe_apply(bp["moe"], h, cfg, mesh=mesh, **kw)
+                else:
+                    h = mlp(bp["mlp"], h, cfg, **kw)
+                x = x + h
+            x = constrain(x, ("batch", None, None), rules)
+        return x, (new_hot, chunk_kv)
+
+    x, (new_hot, chunk_kv) = _scan_groups(
+        group, x, (params["blocks"], pools, hot), cfg)
+    x = apply_norm(params["final_norm"], x, cfg)
+    lg = logits(params.get("lm_head"), params["embed"], x)
+    return lg, new_hot, chunk_kv

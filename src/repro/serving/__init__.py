@@ -1,3 +1,5 @@
+from repro.serving.pages import PageAllocator, PagesExhausted, cache_stats
 from repro.serving.scheduler import BatchScheduler, Request
 
-__all__ = ["BatchScheduler", "Request"]
+__all__ = ["BatchScheduler", "Request", "PageAllocator", "PagesExhausted",
+           "cache_stats"]

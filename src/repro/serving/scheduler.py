@@ -1,38 +1,55 @@
-"""Batched serving scheduler: continuous-batching-lite over the jitted
-prefill/decode steps.
+"""Continuous-batching scheduler over paged, StruM-compressible KV caches.
 
-The paper's deployment scenario is vendor-side inference serving; this is
-the substrate above the (optionally StruM-compressed) model: a request
-queue, slot-based batching with one shared jit'd decode step, per-slot
-cache management, and EOS/length-based retirement.  Design points that
-matter at fleet scale:
+The serving runtime: a priority request queue, slot-based batching, a page
+allocator, and two fixed-shape lanes —
 
-  * **static shapes** — the decode step is compiled once for (n_slots, 1);
-    joining/leaving requests swap cache *contents*, never shapes, so there
-    is exactly one executable per model (no recompile storms).
-  * **slot recycling via masks** — a free slot keeps decoding garbage into
-    a parked position; its logits are ignored.  With StruM's fixed
-    per-block structure the step time is data-independent, so stragglers
-    cannot arise from content (the paper's balance argument, again).
-  * **prefill/decode separation** — prefills run one request at a time on
-    the prefill executable and splice their caches into a slot;
-    production would run a second prefill batch lane, same mechanism.
+  * **decode lane** — one compiled step for (n_slots, 1): every decoding
+    slot advances one token per tick; parked / mid-prefill slots ride the
+    batch masked (their hot state is protected by an ``active`` mask).
+  * **prefill lane** — one compiled step for (1, prefill_chunk): every
+    prompt of every slot runs through the same executable, chunk by chunk,
+    with ``slot``/``start``/``valid_len`` as traced scalars.  This replaces
+    the old compile-per-prompt-length prefill, so the no-recompile-storm
+    invariant now covers prefill too; ``prefill="serial"`` keeps the
+    monolithic one-shot prefill (and charges the decode lane the
+    head-of-line stall the monolithic executable implies) as the
+    comparison baseline ``benchmarks/serving_bench.py`` measures against.
+
+Cache storage is a page table (:mod:`repro.serving.pages`): fixed-size
+pages, allocated at admission, sealed — optionally *packed* through the
+engine's ``cache:*`` codec family (``kv_cache=StruMConfig(...)``) — when
+they fill, and freed (allocator defrag) at retirement.  With a packed codec
+the resident cache sits at the paper's Eq.-1/2 ratio and decode reads
+stream packed pages through the registry-selected decoder
+(``cache:pallas_decode`` / ``cache:xla_dequant``), mirroring what the
+weight path already does; ``kv_cache=None`` stores raw fp pages
+(``cache:fp_passthrough``) and is value-identical to the old monolithic
+cache.
+
+Weights compress exactly as before: ``plan=`` (a prebuilt
+:class:`repro.engine.ExecutionPlan`) or ``schedule=`` (+ ``backend=``,
+``mesh=``/``rules=``) — the deployment end of the
+profile → search → schedule → plan → serve flow.
 
 CPU-scale but structurally the real thing; exercised by
-tests/test_scheduler.py and examples/serve_batch.py.
+tests/test_scheduler.py, tests/test_serving_runtime.py and
+examples/serve_batch.py.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.launch.steps import (make_chunked_prefill_step,
+                                make_paged_decode_step, make_prefill_step)
+from repro.serving import pages as pages_mod
+from repro.serving.pages import PageAllocator, PagesExhausted
 
-__all__ = ["Request", "BatchScheduler"]
+__all__ = ["Request", "BatchScheduler", "PagesExhausted"]
 
 
 @dataclasses.dataclass
@@ -41,46 +58,65 @@ class Request:
     prompt: jnp.ndarray            # (prompt_len,) int32
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
+    priority: int = 0              # higher admits first (FIFO within a tier)
+    # teacher forcing: feed these tokens back instead of the argmax — the
+    # scheduler still *records* its own predictions in ``output``, so two
+    # runtimes can be compared per-position on an identical trajectory
+    force_tokens: Optional[list] = None
     # filled by the scheduler:
     output: list = dataclasses.field(default_factory=list)
     done: bool = False
 
+    def _feed(self, k: int, predicted: int) -> int:
+        if self.force_tokens is not None and k < len(self.force_tokens):
+            return int(self.force_tokens[k])
+        return predicted
 
-def _splice(batched, single, slot: int):
-    """Copy single-request (B=1) cache leaves into slot of the batched tree.
 
-    Cache leaves are (g, B, ...) — batch is axis 1.
-    """
-    def f(b, s):
-        return b.at[:, slot].set(s[:, 0].astype(b.dtype))
-    return jax.tree.map(f, batched, single)
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    pages: list                    # reserved page ids (sealed in order)
+    len: int = 0                   # committed cache positions
+    n_sealed: int = 0
+    state: str = "prefill"         # "prefill" -> "decode"
+    pf_start: int = 0              # next chunk's absolute start position
 
 
 class BatchScheduler:
-    """n_slots-way continuous decoding over one compiled step.
+    """n_slots-way continuous batching over paged caches.
 
-    ``plan`` (a prebuilt :class:`repro.engine.ExecutionPlan`) or ``schedule``
-    (a :class:`repro.autotune.schedule.StruMSchedule` instance or a path to
-    its JSON) compresses the weights at construction time: the serving
-    loader consumes the searched per-layer config table — and the kernel
-    variant the plan selected per leaf — directly.  The deployment end of
-    the profile → search → schedule → plan → serve flow.  ``backend``
-    (e.g. ``"interpret"``, ``"xla"``) pins the engine's variant selection
-    when the scheduler builds the plan itself; ``mesh``/``rules`` thread
-    into both the jitted steps *and* plan construction, so a distributed
-    scheduler's plan records per-leaf shardings and serves through the
-    engine's ``sharded:*`` compressed-gather variants.
+    Cache knobs: ``kv_cache`` (None/"fp" for raw pages, or a
+    :class:`repro.core.policy.StruMConfig` — e.g.
+    ``StruMConfig(method="dliq", q=4)`` — to store sealed pages packed),
+    ``page_size`` (must be a multiple of the codec's block width ``w``),
+    ``n_pages`` (pool size; default fits every slot's full window),
+    ``cache_backend`` (pins the ``cache:*`` decoder selection, same strings
+    as the weight engine's ``backend=``).
+
+    Prefill knobs: ``prefill="chunked"`` (default — chunks of
+    ``prefill_chunk`` tokens interleave with the decode lane, one chunk per
+    tick) or ``"serial"`` (monolithic prefill; the decode lane stalls
+    ``ceil(prompt/chunk)`` ticks — the head-of-line blocking the chunked
+    lane exists to remove).
+
+    Weight knobs are unchanged from the monolithic scheduler: ``plan=`` /
+    ``schedule=`` / ``backend=`` / ``mesh=`` / ``rules=``.
     """
 
     def __init__(self, cfg, params, n_slots: int = 4, max_len: int = 256,
                  mesh=None, rules=None, schedule=None, plan=None,
-                 backend=None):
+                 backend=None, kv_cache=None, page_size: int = 16,
+                 n_pages: Optional[int] = None, prefill: str = "chunked",
+                 prefill_chunk: Optional[int] = None, cache_backend=None):
         if plan is not None and schedule is not None:
             raise ValueError("pass plan= or schedule=, not both")
         if plan is not None and backend is not None:
             raise ValueError("backend= only applies when the scheduler "
                              "builds the plan (schedule=...); a prebuilt "
                              "plan already recorded its variant selection")
+        if prefill not in ("chunked", "serial"):
+            raise ValueError(f"prefill={prefill!r}; want 'chunked'|'serial'")
         if schedule is not None:
             from repro.autotune.schedule import StruMSchedule
             from repro.launch.steps import build_serving_plan
@@ -98,81 +134,293 @@ class BatchScheduler:
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
+
+        # ---- paged cache geometry -------------------------------------
+        self.spec = pages_mod.make_cache_spec(cfg, kv_cache, page_size,
+                                              backend=cache_backend)
+        ps = self.spec.page_size
+        self.page_size = ps
+        self.pages_per_seq = pages_mod.pages_per_seq(max_len, ps)
+        self.prefill_mode = prefill
+        self.prefill_chunk = prefill_chunk or ps
+        if self.prefill_chunk % ps:
+            raise ValueError(f"prefill_chunk={self.prefill_chunk} must be a "
+                             f"multiple of page_size={ps}")
+        if (self.pages_per_seq * ps) % self.prefill_chunk:
+            raise ValueError(
+                f"prefill_chunk={self.prefill_chunk} must divide the padded "
+                f"window {self.pages_per_seq * ps} "
+                f"(= pages_per_seq * page_size)")
+        self.n_pages = n_pages or n_slots * self.pages_per_seq
+        self.allocator = PageAllocator(self.n_pages)
+        self.pools = pages_mod.init_pools(cfg, self.n_pages, self.spec)
+        self.hot = pages_mod.init_hot(cfg, n_slots, ps)
+        self._seal = pages_mod.make_sealer(self.spec)
+        self._attn_pos = [k for k, v in self.pools.items() if v]
+
+        # ---- lanes -----------------------------------------------------
+        self._decode = jax.jit(make_paged_decode_step(
+            cfg, self.spec, mesh, rules, cache_backend=cache_backend))
+        self._chunk_prefill = jax.jit(make_chunked_prefill_step(
+            cfg, self.spec, mesh, rules, cache_backend=cache_backend))
         self._prefill = jax.jit(make_prefill_step(cfg, mesh, rules))
-        self._decode = jax.jit(make_decode_step(cfg, mesh, rules))
-        self.queue: deque[Request] = deque()
-        self.slots: list[Optional[Request]] = [None] * n_slots
-        self._caches = None            # batched cache tree, B = n_slots
-        self._tokens = jnp.zeros((n_slots, 1), jnp.int32)
-        self._lens = [0] * n_slots     # per-slot current length
+
+        # ---- queue / slots --------------------------------------------
+        self.queue: list[Request] = []
+        self._seq = 0
+        self._order: dict[int, int] = {}   # id(req) -> arrival index
+        self.slots: list[Optional[_Slot]] = [None] * n_slots
+        self._tokens = np.zeros((n_slots,), np.int64)
+        self._table = np.full((n_slots, self.pages_per_seq), -1, np.int32)
+        self._finished: list[Request] = []
         self._steps = 0
+        self._stall = 0                    # serial-mode head-of-line ticks
 
     # ------------------------------------------------------------- intake --
     def submit(self, req: Request) -> None:
+        """Validate + enqueue.  Impossible requests fail HERE, where the
+        caller can handle them — not mid-run from inside step()."""
+        plen = int(req.prompt.shape[0])
+        if req.max_new_tokens > 0 and plen > self.max_len - 3:
+            raise ValueError(
+                f"request {req.uid}: prompt length {plen} does not fit the "
+                f"serving window (max_len={self.max_len} leaves room for "
+                f"{self.max_len - 3} prompt + 1 decode positions)")
+        if self._pages_needed(req) > self.allocator.n_pages:
+            raise PagesExhausted(
+                f"request {req.uid}: needs {self._pages_needed(req)} pages "
+                f"but the pool only holds {self.allocator.n_pages} — no "
+                f"amount of retirement can admit it (raise n_pages=)")
+        self._order[id(req)] = self._seq
+        self._seq += 1
         self.queue.append(req)
 
-    def _admit(self) -> None:
-        from repro.models import cache_defs
-        from repro.models.params import init_params
-        for slot in range(self.n_slots):
-            if self.slots[slot] is not None or not self.queue:
-                continue
-            req = self.queue.popleft()
-            lg, cache = self._prefill(
-                self.params, {"tokens": req.prompt[None, :]})
-            if self._caches is None:
-                defs = cache_defs(self.cfg, self.n_slots, self.max_len)
-                self._caches = init_params(defs, seed=0)
-            # pad the fresh cache's seq dim up to max_len, then splice
-            plen = req.prompt.shape[0]
+    def _pages_needed(self, req: Request) -> int:
+        plen = int(req.prompt.shape[0])
+        return min(self.pages_per_seq,
+                   -(-(plen + req.max_new_tokens) // self.page_size))
 
-            def pad(x):
-                if x.ndim == 5:  # (g, 1, S, KV, hd) attention cache
-                    return jnp.pad(
-                        x, [(0, 0), (0, 0), (0, self.max_len - x.shape[2]),
-                            (0, 0), (0, 0)])
-                return x
-            cache = jax.tree.map(pad, cache)
-            self._caches = _splice(self._caches, cache, slot)
-            tok = jnp.argmax(lg[0, -1, :self.cfg.vocab_size]).astype(jnp.int32)
-            req.output.append(int(tok))
-            self._tokens = self._tokens.at[slot, 0].set(tok)
-            self._lens[slot] = plen
-            self.slots[slot] = req
+    def _admit(self) -> None:
+        while self.queue:
+            free = [s for s in range(self.n_slots) if self.slots[s] is None]
+            if not free:
+                return
+            nxt = max(self.queue,
+                      key=lambda r: (r.priority, -self._order[id(r)]))
+            if nxt.max_new_tokens <= 0:
+                # nothing to generate: complete at admission
+                self.queue.remove(nxt)
+                self._order.pop(id(nxt), None)
+                nxt.done = True
+                self._finished.append(nxt)
+                continue
+            if self.allocator.available < self._pages_needed(nxt):
+                return                      # wait for retirements
+            self.queue.remove(nxt)
+            self._order.pop(id(nxt), None)
+            slot = free[0]
+            self.slots[slot] = _Slot(req=nxt,
+                                     pages=self.allocator.alloc(
+                                         self._pages_needed(nxt)))
+            self._table[slot] = -1
+            if self.prefill_mode == "serial":
+                self._serial_prefill(slot)
+
+    # ------------------------------------------------------------ sealing --
+    def _seal_into(self, slot: int, page_idx: int, kv_pages: dict) -> None:
+        """Write one full page per attention position into the pools.
+
+        ``kv_pages[pos]`` is ``(k_page, v_page)`` of shape
+        (g, page_size, KV, hd).
+        """
+        sl = self.slots[slot]
+        pid = sl.pages[page_idx]
+        pid_dev = jnp.int32(pid)
+        for pos in self._attn_pos:
+            k_page, v_page = kv_pages[pos]
+            self.pools[pos] = self._seal(self.pools[pos], k_page, v_page,
+                                         pid_dev)
+        self._table[slot, page_idx] = pid
+        sl.n_sealed = page_idx + 1
+
+    def _seal_tails(self, slot: int) -> None:
+        """Seal the (now full) tail page of ``slot``."""
+        sl = self.slots[slot]
+        page_idx = sl.len // self.page_size - 1
+        kv_pages = {pos: (self.hot[pos]["k_tail"][:, slot],
+                          self.hot[pos]["v_tail"][:, slot])
+                    for pos in self._attn_pos}
+        self._seal_into(slot, page_idx, kv_pages)
+
+    # ------------------------------------------------------------ prefill --
+    def _finish_prefill(self, slot: int, tok: int) -> None:
+        """Record the prefill-produced first token; EOS / budget may retire
+        the request before it ever decodes."""
+        sl = self.slots[slot]
+        req = sl.req
+        req.output.append(int(tok))
+        sl.state = "decode"
+        if ((req.eos_id is not None and int(tok) == req.eos_id)
+                or len(req.output) >= req.max_new_tokens):
+            self._retire(slot)
+            return
+        self._tokens[slot] = req._feed(0, int(tok))
+
+    def _serial_prefill(self, slot: int) -> None:
+        """Monolithic one-shot prefill (compiles per prompt length) +
+        head-of-line stall on the decode lane."""
+        sl = self.slots[slot]
+        plen = int(sl.req.prompt.shape[0])
+        ps = self.page_size
+        lg, caches = self._prefill(self.params,
+                                   {"tokens": sl.req.prompt[None, :]})
+        n_full = plen // ps
+        for j in range(n_full):
+            kv_pages = {pos: (caches[pos]["k"][:, 0, j * ps:(j + 1) * ps],
+                              caches[pos]["v"][:, 0, j * ps:(j + 1) * ps])
+                        for pos in self._attn_pos}
+            self._seal_into(slot, j, kv_pages)
+        r = plen - n_full * ps
+        for pos in self.hot:
+            hp = self.hot[pos]
+            if "k_tail" in hp:
+                if r:
+                    ck = caches[pos]["k"][:, 0, n_full * ps:plen]
+                    cv = caches[pos]["v"][:, 0, n_full * ps:plen]
+                    hp["k_tail"] = hp["k_tail"].at[:, slot, :r].set(
+                        ck.astype(hp["k_tail"].dtype))
+                    hp["v_tail"] = hp["v_tail"].at[:, slot, :r].set(
+                        cv.astype(hp["v_tail"].dtype))
+            else:
+                hp["conv"] = hp["conv"].at[:, slot].set(
+                    caches[pos]["conv"][:, 0].astype(hp["conv"].dtype))
+                hp["state"] = hp["state"].at[:, slot].set(
+                    caches[pos]["state"][:, 0])
+        sl.len = plen
+        # the monolithic executable owns the device for the whole prompt —
+        # charge the decode lane one stall tick per chunk-equivalent.  (The
+        # chunked lane pays the same per-chunk ticks but folds each into a
+        # tick the decode batch also runs in; that asymmetry IS the
+        # head-of-line blocking serving_bench measures.)
+        self._stall += -(-plen // self.prefill_chunk)
+        tok = jnp.argmax(lg[0, -1, :self.cfg.vocab_size])
+        self._finish_prefill(slot, int(tok))
+
+    def _prefill_slots(self) -> list:
+        return [s for s in range(self.n_slots)
+                if self.slots[s] is not None
+                and self.slots[s].state == "prefill"]
+
+    def _advance_prefill(self, slot: int) -> None:
+        """Run one fixed-shape chunk of ``slot``'s prompt."""
+        sl = self.slots[slot]
+        prompt = np.asarray(sl.req.prompt)
+        plen = int(prompt.shape[0])
+        c = self.prefill_chunk
+        start = sl.pf_start
+        valid = min(c, plen - start)
+        toks = np.zeros((1, c), np.int32)
+        toks[0, :valid] = prompt[start:start + valid]
+        lg, self.hot, chunk_kv = self._chunk_prefill(
+            self.params, jnp.asarray(toks), self.pools, self.hot,
+            jnp.asarray(self._table), jnp.int32(slot), jnp.int32(start),
+            jnp.int32(valid))
+        new_len = start + valid
+        ps = self.page_size
+        for j in range(sl.n_sealed, new_len // ps):
+            rel = j * ps - start
+            kv_pages = {pos: (chunk_kv[pos]["k"][:, 0, rel:rel + ps],
+                              chunk_kv[pos]["v"][:, 0, rel:rel + ps])
+                        for pos in self._attn_pos}
+            self._seal_into(slot, j, kv_pages)
+        sl.pf_start = start + valid
+        sl.len = new_len
+        if sl.pf_start >= plen:
+            tok = jnp.argmax(lg[0, valid - 1, :self.cfg.vocab_size])
+            self._finish_prefill(slot, int(tok))
+
+    # ------------------------------------------------------------- decode --
+    def _retire(self, slot: int) -> None:
+        sl = self.slots[slot]
+        sl.req.done = True
+        self._finished.append(sl.req)
+        self.allocator.free(sl.pages)      # defrags the free list
+        self._table[slot] = -1
+        self.slots[slot] = None
+
+    def _decode_slots(self) -> list:
+        return [s for s in range(self.n_slots)
+                if self.slots[s] is not None
+                and self.slots[s].state == "decode"]
+
+    def _run_decode(self, active: list) -> None:
+        cache_len = np.zeros((self.n_slots,), np.int32)
+        for s in range(self.n_slots):
+            if self.slots[s] is not None:
+                cache_len[s] = self.slots[s].len
+        mask = np.zeros((self.n_slots,), bool)
+        mask[active] = True
+        lg, self.hot = self._decode(
+            self.params, jnp.asarray(self._tokens, jnp.int32)[:, None],
+            self.pools, self.hot, jnp.asarray(cache_len),
+            jnp.asarray(self._table), jnp.asarray(mask))
+        nxt = np.asarray(
+            jnp.argmax(lg[:, -1, :self.cfg.vocab_size], axis=-1))
+        for s in active:
+            sl = self.slots[s]
+            req = sl.req
+            tok = int(nxt[s])
+            req.output.append(tok)
+            sl.len += 1
+            if sl.len % self.page_size == 0 \
+                    and sl.len // self.page_size <= len(sl.pages):
+                self._seal_tails(s)
+            if ((req.eos_id is not None and tok == req.eos_id)
+                    or len(req.output) >= req.max_new_tokens
+                    or sl.len >= self.max_len - 2):
+                self._retire(s)
+                continue
+            self._tokens[s] = req._feed(len(req.output) - 1, tok)
 
     # -------------------------------------------------------------- drive --
     def step(self) -> int:
-        """One decode step for every occupied slot; returns #active."""
+        """One scheduler tick: admit, advance one prefill chunk, decode all
+        decoding slots.  Returns the number of requests that progressed."""
         self._admit()
-        active = [s for s in range(self.n_slots) if self.slots[s] is not None]
-        if not active:
-            return 0
-        # single shared compiled step; per-slot lengths ride in a (B,)
-        # cache_len vector (decode_attention masks/updates per batch row)
-        cache_len = jnp.asarray(self._lens, jnp.int32)
-        lg, self._caches = self._decode(self.params, self._tokens,
-                                        self._caches, cache_len)
-        nxt = jnp.argmax(lg[:, -1, :self.cfg.vocab_size], axis=-1)\
-            .astype(jnp.int32)
+        progressed = 0
+        if self.prefill_mode == "chunked":
+            pf = self._prefill_slots()
+            if pf:
+                # round-robin by progress: least-advanced first
+                slot = min(pf, key=lambda s: (self.slots[s].pf_start, s))
+                self._advance_prefill(slot)
+                progressed += 1
+        if self._stall > 0:
+            # serial mode: the monolithic prefill still occupies the device
+            self._stall -= 1
+            self._steps += 1
+            return progressed + len(self._decode_slots())
+        active = self._decode_slots()
+        if active:
+            self._run_decode(active)
+            progressed += len(active)
         self._steps += 1
-        for s in active:
-            req = self.slots[s]
-            tok = int(nxt[s])
-            req.output.append(tok)
-            self._lens[s] += 1
-            if ((req.eos_id is not None and tok == req.eos_id)
-                    or len(req.output) >= req.max_new_tokens
-                    or self._lens[s] >= self.max_len - 2):
-                req.done = True
-                self.slots[s] = None   # slot freed; next _admit refills it
-        self._tokens = self._tokens.at[:, 0].set(nxt)
-        return len(active)
+        return progressed
 
-    def run_to_completion(self, max_steps: int = 10_000) -> list[Request]:
-        finished: list[Request] = []
-        while (self.queue or any(self.slots)) and max_steps:
-            before = [r for r in self.slots if r is not None]
+    def run_to_completion(self, max_steps: int = 10_000) -> list:
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and max_steps:
             self.step()
-            finished.extend(r for r in before if r.done)
             max_steps -= 1
-        return finished
+        out, self._finished = self._finished, []
+        return out
+
+    # -------------------------------------------------------------- stats --
+    def cache_stats(self) -> dict:
+        """Resident cache bytes vs the codec's Eq.-1/2 expectation (see
+        :func:`repro.serving.pages.cache_stats`), plus allocator state."""
+        out = pages_mod.cache_stats(self.pools, self.hot, self.spec,
+                                    self.cfg, self.n_slots, self.max_len)
+        out["allocator"] = self.allocator.defrag()
+        out["steps"] = self._steps
+        return out

@@ -193,12 +193,15 @@ def test_dynamic_policy_wrapper_parity_with_legacy():
 # ------------------------------------------------------- pack/serve wiring --
 
 def test_pack_tree_consumes_schedule():
+    """Dedicated shim test: the deprecated ``pack_tree`` still produces the
+    plan manifest (and warns)."""
     params = _params()
     sched = StruMSchedule(assignments={
         "friendly/w": StruMConfig(method="mip2q", p=0.75, L=7),
         "hard/w": None,
         "blk0/w": StruMConfig(method="dliq", p=0.5, q=4)})
-    packed = pack_tree(params, schedule=sched)
+    with pytest.deprecated_call():
+        packed = pack_tree(params, schedule=sched)
     pk, shape = packed["friendly/w"]
     assert pk.method == "mip2q" and pk.n_low == 12 and shape == (64, 32)
     assert not isinstance(packed["hard/w"], tuple)        # pinned to INT8/dense
@@ -226,7 +229,8 @@ def test_compression_report_realized_bytes():
 
 
 def test_schedule_served_linear_uses_embedded_cfg():
-    """Heterogeneous per-layer configs serve without a global cfg.strum."""
+    """Heterogeneous per-layer configs serve without a global cfg.strum.
+    (Exercises the deprecated ``strum_serve_params`` shim on purpose.)"""
     from repro.models.layers import linear
     from repro.models.quantize import strum_serve_params
 
@@ -238,7 +242,8 @@ def test_schedule_served_linear_uses_embedded_cfg():
         "a/w": StruMConfig(method="mip2q", p=0.25, L=7),
         "b/w": StruMConfig(method="dliq", p=0.75, q=4)})
     cfg = dataclasses.make_dataclass("C", [("strum", object, None)])()
-    served = strum_serve_params(params, cfg, schedule=sched)
+    with pytest.deprecated_call():
+        served = strum_serve_params(params, cfg, schedule=sched)
     assert served["a"]["w"]["cfg"].method == "mip2q"
     assert served["b"]["w"]["cfg"].method == "dliq"
     for name in ("a", "b"):

@@ -94,3 +94,19 @@ def test_perf_iterations_recorded():
     opt = [r for r in rows if r.get("variant") == "packed_experts"
            and r["arch"] == "jamba_1_5_large_398b" and r["shape"] == "decode_32k"][0]
     assert opt["roofline"]["collective_s"] < 0.3 * base["roofline"]["collective_s"]
+
+
+def test_serving_bench_invariants():
+    """Regenerated serving_bench artifacts: packed codecs sit at the exact
+    Eq.-1/2 resident ratio and chunked prefill drains in fewer ticks."""
+    rows = _load("serving_bench.json")
+    codec = {r["config"]: r for r in rows if r["section"] == "codec"}
+    assert codec["dliq_q4_p0.5"]["ratio_vs_int8"] == pytest.approx(0.875)
+    assert codec["mip2q_L7_p0.5"]["ratio_vs_int8"] == pytest.approx(0.875)
+    assert codec["sparsity_p0.5"]["ratio_vs_int8"] == pytest.approx(0.625)
+    for name in ("dliq_q4_p0.5", "mip2q_L7_p0.5", "sparsity_p0.5"):
+        assert codec[name]["variant"] != "cache:fp_passthrough"
+        assert codec[name]["resident_page_bytes"] \
+            < codec["fp"]["resident_page_bytes"]
+    hol = {r["config"]: r for r in rows if r["section"] == "head_of_line"}
+    assert hol["prefill_chunked"]["steps"] < hol["prefill_serial"]["steps"]

@@ -2,8 +2,8 @@
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.apply import fake_quantize_tree
 from repro.core.dynamic_p import achieved_ratio, choose_layer_p, dynamic_policy
+from repro.engine import fake_quantize
 from repro.core.metrics import sqnr_db
 
 
@@ -42,7 +42,7 @@ def test_dynamic_policy_applies_per_tensor():
     params = _params()
     chosen = choose_layer_p(params, sqnr_floor_db=28.0)
     pol = dynamic_policy(chosen)
-    qp = fake_quantize_tree(params, pol, baseline_int8=False)
+    qp = fake_quantize(params, policy=pol, baseline_int8=False)
     # friendly tensor quantized at its chosen config, SQNR above floor
     s = float(sqnr_db(params["friendly"]["w"], qp["friendly"]["w"]))
     assert s >= 28.0

@@ -55,10 +55,9 @@ def test_packed_decode_matches_dense_decode_distributed():
         from repro.configs import get_smoke_config
         from repro.core.policy import StruMConfig
         from repro.launch.mesh import make_host_mesh
+        from repro import engine
         from repro.models import model_defs, prefill, decode_step
         from repro.models.params import init_params
-        from repro.models.quantize import strum_serve_params
-        from repro.core.apply import fake_quantize_tree
         from repro.core.policy import default_policy
         from repro.models.sharding import rules_for_mesh
 
@@ -69,9 +68,9 @@ def test_packed_decode_matches_dense_decode_distributed():
                                    dtype="float32")
         cfg = dataclasses.replace(base, strum=scfg)
         params = init_params(model_defs(base), seed=0, dtype_override="float32")
-        served = strum_serve_params(params, cfg)
-        fakeq = fake_quantize_tree(params, default_policy(scfg),
-                                   baseline_int8=False)
+        served = engine.build_plan(params, cfg=scfg).params
+        fakeq = engine.fake_quantize(params, policy=default_policy(scfg),
+                                     baseline_int8=False)
 
         toks = jnp.ones((2, 8), jnp.int32)
         _, caches = prefill(fakeq, {"tokens": toks}, base)

@@ -1,0 +1,160 @@
+"""Unit tests: page allocator, cache:* codec family, paged-pool accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.apply import fake_quantize_array
+from repro.core.policy import StruMConfig
+from repro.engine import cache as ec
+from repro.serving.pages import PageAllocator, PagesExhausted
+
+RNG = np.random.default_rng(0)
+
+CODECS = [
+    ("dliq_p0.5", StruMConfig(method="dliq", p=0.5, q=4)),
+    ("mip2q_p0.5", StruMConfig(method="mip2q", p=0.5, L=7)),
+    ("sparsity_p0.5", StruMConfig(method="sparsity", p=0.5)),
+    ("dliq_p1.0", StruMConfig(method="dliq", p=1.0, q=4)),
+    ("dliq_p0.0", StruMConfig(method="dliq", p=0.0, q=4)),
+]
+
+
+# ---------------------------------------------------------------- allocator --
+
+def test_allocator_alloc_free_defrag():
+    al = PageAllocator(8)
+    a = al.alloc(3)
+    b = al.alloc(2)
+    assert a == [0, 1, 2] and b == [3, 4] and al.available == 3
+    al.free(a)
+    assert al.available == 6
+    # lowest ids first after free (defrag re-sorts)
+    assert al.alloc(1) == [0]
+    stats = al.defrag()
+    assert stats["n_pages"] == 8 and stats["free"] == 5
+
+
+def test_allocator_exhaustion_and_double_free():
+    al = PageAllocator(2)
+    ids = al.alloc(2)
+    with pytest.raises(PagesExhausted):
+        al.alloc(1)
+    al.free(ids)
+    with pytest.raises(ValueError, match="double free"):
+        al.free(ids)
+
+
+# ------------------------------------------------------------------- codecs --
+
+@pytest.mark.parametrize("label,cfg", CODECS)
+def test_page_roundtrip_matches_fake_quantize(label, cfg):
+    """encode_page → decode == the canonical per-array fake-quant: the cache
+    codec IS the weight codec applied to (page_size, F) pages."""
+    page = jnp.asarray(RNG.normal(size=(32, 24)).astype(np.float32))
+    enc = ec.encode_page(page, cfg)
+    spec = ec.build_cache_spec(cfg, page_size=32, feat=24, backend="xla")
+    got = ec.decode_pages({k: v[None] for k, v in enc.items()}, spec)[0]
+    want = fake_quantize_array(page, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("label,cfg", CODECS)
+def test_pallas_decode_matches_xla(label, cfg):
+    """cache:pallas_decode (interpret) is bit-compatible with the jnp
+    decoder for every method, including the p=1.0 / p=0.0 extremes."""
+    ps, f = 32, 40
+    pages = jnp.asarray(RNG.normal(size=(3, ps, f)).astype(np.float32))
+    enc = jax.vmap(lambda p: ec.encode_page(p, cfg))(pages)
+    spec_p = ec.build_cache_spec(cfg, page_size=ps, feat=f,
+                                 backend="interpret")
+    spec_x = ec.build_cache_spec(cfg, page_size=ps, feat=f, backend="xla")
+    assert spec_p.variant == "cache:pallas_decode"
+    assert spec_x.variant == "cache:xla_dequant"
+    y_p = ec.decode_pages(enc, spec_p)
+    y_x = ec.decode_pages(enc, spec_x)
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y_x),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_selection_partitioning():
+    """Cache codecs and matmul lowerings never compete; fp / q>=8 lowers to
+    passthrough; off-TPU auto stays on the portable decoder."""
+    from repro import engine
+    cfg = StruMConfig(method="dliq", p=0.5, q=4)
+    # a cache leaf never selects a matmul variant and vice versa
+    info = engine.LeafInfo(k_dim=32, n_out=16, cache=True)
+    assert engine.select_variant(cfg, info,
+                                 backend="interpret").name.startswith("cache:")
+    plain = engine.LeafInfo(k_dim=32, n_out=16)
+    assert not engine.select_variant(
+        cfg, plain, backend="interpret").name.startswith("cache:")
+    if jax.default_backend() != "tpu":
+        assert engine.select_variant(cfg, info).name == "cache:xla_dequant"
+    # identity configs
+    assert ec.build_cache_spec(None, page_size=16, feat=8).variant \
+        == "cache:fp_passthrough"
+    q8 = ec.build_cache_spec(StruMConfig(method="dliq", p=0.5, q=8),
+                             page_size=16, feat=8)
+    assert q8.variant == "cache:fp_passthrough" and not q8.packed
+    # w without byte-aligned mask rows: pallas backend falls back (visibly)
+    w12 = StruMConfig(method="dliq", p=0.5, q=4, w=12)
+    with pytest.warns(UserWarning, match="falling back"):
+        spec = ec.build_cache_spec(w12, page_size=24, feat=8,
+                                   backend="interpret")
+    assert spec.variant == "cache:xla_dequant"
+
+
+def test_page_size_must_match_block_width():
+    with pytest.raises(ValueError, match="multiple of"):
+        ec.build_cache_spec(StruMConfig(method="dliq", p=0.5, q=4),
+                            page_size=20, feat=8)
+
+
+def test_gather_decode_clips_unassigned():
+    cfg = StruMConfig(method="dliq", p=0.5, q=4)
+    ps, f = 16, 8
+    pages = jnp.asarray(RNG.normal(size=(4, ps, f)).astype(np.float32))
+    pool = jax.vmap(lambda p: ec.encode_page(p, cfg))(pages)
+    spec = ec.build_cache_spec(cfg, page_size=ps, feat=f, backend="xla")
+    ids = jnp.asarray([[2, -1, 0]], jnp.int32)
+    out = ec.decode_pages(pool, spec)        # reference decode of the pool
+    got = ec.gather_decode_pages(pool, ids, spec)
+    np.testing.assert_allclose(np.asarray(got[0, 0]), np.asarray(out[2]))
+    # -1 clips to page 0 — junk by contract, but well-defined and finite
+    np.testing.assert_allclose(np.asarray(got[0, 1]), np.asarray(out[0]))
+    assert np.isfinite(np.asarray(got)).all()
+
+
+def test_payload_bytes_match_eq1_ratio():
+    """Packed page bytes == Eq.-1 × int8 page bytes for the byte-aligned
+    paper points (w=16, q=4, p ∈ {0.25, 0.5, 0.75})."""
+    for p in (0.25, 0.5, 0.75):
+        cfg = StruMConfig(method="dliq", w=16, p=p, q=4)
+        ps, f = 32, 24
+        got = ec.page_payload_bytes(ps, f, cfg)
+        assert got == int(ps * f * cfg.compression_ratio)
+        # and the arrays realize exactly those bytes
+        enc = ec.encode_page(jnp.asarray(
+            RNG.normal(size=(ps, f)).astype(np.float32)), cfg)
+        realized = sum(int(enc[k].size) for k in ("mask", "hi", "lo"))
+        assert realized == got
+
+
+def test_cache_stats_eq1():
+    """Scheduler-level accounting: resident packed-page bytes match the
+    mask+hi+lo expectation and the Eq.-1 ratio vs int8 pages."""
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.serving import pages as pages_mod
+    cfg = dataclasses.replace(get_smoke_config("qwen2_7b"), dtype="float32")
+    codec = StruMConfig(method="mip2q", w=16, p=0.5, L=7)
+    spec = pages_mod.make_cache_spec(cfg, codec, page_size=16)
+    pools = pages_mod.init_pools(cfg, n_pages=6, spec=spec)
+    hot = pages_mod.init_hot(cfg, n_slots=2, page_size=16)
+    st = pages_mod.cache_stats(pools, hot, spec, cfg, n_slots=2, max_len=48)
+    assert st["resident_page_bytes"] == st["expected_page_bytes"]
+    assert st["ratio_vs_int8"] == pytest.approx(codec.compression_ratio)
+    assert st["ratio_vs_int8"] == pytest.approx((0.5 * (4 - 8) + 9) / 8)

@@ -1,9 +1,15 @@
-"""Model-level StruM: compressed serving params == fake-quant reference."""
+"""Model-level StruM: compressed serving params == fake-quant reference.
+
+This file doubles as the dedicated shim-test for the deprecated
+``strum_serve_params`` entrypoint (``_served`` captures its
+DeprecationWarning); new code builds plans via ``repro.engine``.
+"""
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_smoke_config
 from repro.core.policy import StruMConfig
@@ -16,6 +22,11 @@ from repro.models.quantize import serve_tree_bytes, strum_serve_params
 def _cfg(method="mip2q", **kw):
     base = get_smoke_config("qwen2_7b")
     return dataclasses.replace(base, strum=StruMConfig(method=method, **kw))
+
+
+def _served(params, cfg, **kw):
+    with pytest.deprecated_call():
+        return strum_serve_params(params, cfg, **kw)
 
 
 def test_compressed_linear_matches_dequant():
@@ -49,7 +60,7 @@ def test_serve_params_forward_close_to_dense():
     """<small logit drift for p=0.5 MIP2Q — the 'no retraining' claim."""
     cfg = _cfg(L=7, p=0.5)
     params = init_params(model_defs(cfg), seed=0, dtype_override="float32")
-    served = strum_serve_params(params, cfg)
+    served = _served(params, cfg)
     batch = {"tokens": jnp.ones((1, 16), jnp.int32)}
     lg_d, _ = forward_train(params, batch, dataclasses.replace(cfg, strum=None))
     lg_q, _ = forward_train(served, batch, cfg)
@@ -63,14 +74,14 @@ def test_serve_params_forward_close_to_dense():
 def test_serve_bytes_shrink():
     cfg = _cfg()
     params = init_params(model_defs(cfg), seed=0, dtype_override="float32")
-    served = strum_serve_params(params, cfg)
+    served = _served(params, cfg)
     assert serve_tree_bytes(served) < 0.5 * serve_tree_bytes(params)
 
 
 def test_excluded_layers_stay_dense():
     cfg = _cfg()
     params = init_params(model_defs(cfg), seed=0, dtype_override="float32")
-    served = strum_serve_params(params, cfg)
+    served = _served(params, cfg)
     # embeddings + norms + biases untouched
     assert isinstance(served["embed"]["table"], jnp.ndarray)
     blk = served["blocks"]["pos0"]

@@ -6,12 +6,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import engine
 from repro.configs import get_smoke_config
 from repro.core.policy import StruMConfig
 from repro.launch.serve import pad_caches, serve
 from repro.models import model_defs
 from repro.models.params import init_params
-from repro.models.quantize import strum_serve_params
 from repro.serving import BatchScheduler, Request
 
 
@@ -28,12 +28,20 @@ def _reference_tokens(cfg, params, prompt, n):
 
 
 def test_batched_matches_sequential(setup):
-    """Interleaved slot decoding == one-at-a-time serving, per request."""
+    """Interleaved slot decoding == one-at-a-time serving, per request.
+
+    ``prefill="serial"`` pins the monolithic prefill executable (identical
+    math to :func:`repro.launch.serve.serve`), so the paged fp cache must
+    reproduce the dense-cache token stream *exactly*; the chunked lane is
+    compared teacher-forced in tests/test_serving_runtime.py (its online
+    prefill attention is a different float reduction).
+    """
     cfg, params = setup
     rng = np.random.default_rng(0)
     prompts = [jnp.asarray(rng.integers(0, cfg.vocab_size, size=(8 + i,)),
                            jnp.int32) for i in range(3)]
-    sched = BatchScheduler(cfg, params, n_slots=2, max_len=64)
+    sched = BatchScheduler(cfg, params, n_slots=2, max_len=64,
+                           prefill="serial")
     for i, pr in enumerate(prompts):
         sched.submit(Request(uid=i, prompt=pr, max_new_tokens=6))
     done = sched.run_to_completion(max_steps=200)
@@ -62,7 +70,7 @@ def test_scheduler_with_strum_compressed_weights(setup):
     cfg, params = setup
     scfg = StruMConfig(method="mip2q", p=0.5, L=7)
     qcfg = dataclasses.replace(cfg, strum=scfg)
-    served = strum_serve_params(params, qcfg)
+    served = engine.build_plan(params, cfg=scfg).params
     rng = np.random.default_rng(2)
     pr = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(8,)), jnp.int32)
 

@@ -141,6 +141,52 @@ def test_mesh_plan_dispatches_sharded_variants_with_parity():
     assert "GROUPED_ERR" in out
 
 
+def test_gather_pallas_shards_non_power_of_two_m():
+    """ROADMAP PR-4 follow-up: the batched-M heuristic pads a ragged token
+    dim up to the FSDP width (mirroring ops._pick_block) instead of
+    replicating the batch — parity for non-power-of-two M on both TP
+    patterns, including the row-pattern psum over zero-padded rows."""
+    from repro.engine.sharded import _pick_m_pad
+    assert _pick_m_pad(8, 4) == 0
+    assert _pick_m_pad(6, 4) == 2         # non-power-of-two M
+    assert _pick_m_pad(1, 8) == 7         # decode gemv
+    assert _pick_m_pad(12, 1) == 0        # no FSDP axis: no pad, no shard
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro import engine
+        from repro.core.policy import StruMConfig
+        from repro.engine.dispatch import dequant_leaf, dispatch
+        from repro.launch.mesh import make_host_mesh
+
+        scfg = StruMConfig(method="mip2q", p=0.5, L=5)
+        mesh = make_host_mesh(data=4, model=2)
+        rng = np.random.default_rng(0)
+        K, N = 128, 256
+        params = {"mlp": {"wi": {"w": jnp.asarray(
+                      rng.normal(size=(K, N)).astype(np.float32))},
+                  "wo": {"w": jnp.asarray(
+                      rng.normal(size=(N, K)).astype(np.float32))}}}
+        plan = engine.build_plan(params, cfg=scfg, backend="interpret",
+                                 mesh=mesh)
+        for nm, k in (("wi", K), ("wo", N)):
+            leaf = plan.params["mlp"][nm]["w"]
+            assert leaf["spec"].variant == "sharded:gather_pallas"
+            for m in (6, 1, 13):          # none divide the 4-way FSDP axis
+                x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+                want = x @ dequant_leaf(leaf, jnp.float32)
+                with mesh:
+                    y = jax.jit(lambda l, x: dispatch(l, x, mesh=mesh))(
+                        leaf, x)
+                assert y.shape == want.shape, (nm, m, y.shape)
+                err = float(jnp.max(jnp.abs(y - want)))
+                tol = 1e-4 * max(1.0, float(jnp.max(jnp.abs(want))))
+                print(nm, m, "ERR", err)
+                assert err < tol, (nm, m, err, tol)
+        print("RAGGED_M_OK")
+        """)
+    assert "RAGGED_M_OK" in out
+
+
 def test_gather_pallas_moves_packed_bytes_not_dequantized():
     """Acceptance: the all-gather operands on the gather_pallas path are the
     packed payloads — global operand bytes == mask+hi+lo payload size (the

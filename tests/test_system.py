@@ -7,8 +7,8 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ModelConfig
-from repro.core.apply import fake_quantize_tree
 from repro.core.policy import StruMConfig, default_policy
+from repro.engine import fake_quantize
 from repro.data.pipeline import DataConfig, global_batch
 from repro.launch.steps import make_train_step
 from repro.models import model_defs
@@ -51,14 +51,15 @@ def test_ptq_quality_ordering(trained):
     sparsity(p=.5) clearly worse — all WITHOUT retraining."""
     params, _ = trained
     base = _eval_ce(params)
-    int8 = _eval_ce(fake_quantize_tree(params, default_policy(None)))
+    int8 = _eval_ce(fake_quantize(params, policy=default_policy(None)))
     assert abs(int8 - base) < 0.05
 
     ce = {}
     for method, kw in [("sparsity", {}), ("dliq", dict(q=4)),
                        ("mip2q", dict(L=7))]:
         scfg = StruMConfig(method=method, p=0.5, **kw)
-        ce[method] = _eval_ce(fake_quantize_tree(params, default_policy(scfg)))
+        ce[method] = _eval_ce(fake_quantize(params,
+                                            policy=default_policy(scfg)))
     # mixed precision stays near baseline; sparsity does not
     assert ce["dliq"] - int8 < 0.10
     assert ce["mip2q"] - int8 < 0.10
@@ -67,12 +68,12 @@ def test_ptq_quality_ordering(trained):
 
 def test_compressed_serving_generates_same_tokens(trained):
     params, _ = trained
+    from repro import engine
     from repro.launch.serve import serve
-    from repro.models.quantize import strum_serve_params
     scfg = StruMConfig(method="mip2q", p=0.5, L=7)
     mcfg = dataclasses.replace(CFG, strum=scfg)
     dcfg = dataclasses.replace(CFG, strum=None)
-    served = strum_serve_params(params, mcfg)
+    served = engine.build_plan(params, cfg=scfg).params
     prompt = global_batch(DATA, 50)["tokens"][:2, :24]
     # both serving paths must run end-to-end (prefill + cached decode)
     toks_d, _, _ = serve(dcfg, params, prompt, 8, {})
