@@ -15,11 +15,9 @@ search space.  ``dominates_default`` records the check.
 """
 from __future__ import annotations
 
-import json
-import os
 import time
 
-from benchmarks.common import RESULTS_DIR, eval_ce, trained_tiny_lm
+from benchmarks.common import eval_ce, trained_tiny_lm, write_report
 from repro.autotune import (Budget, DEFAULT_GRID, config_key, profile_tree,
                             search_schedule)
 from repro.engine import fake_quantize
@@ -93,9 +91,7 @@ def run():
         f"{at_budget['weighted_sqnr_db']:.2f} dB) vs uniform "
         f"(r={base['r']:.4f}, {base['weighted_sqnr_db']:.2f} dB)")
 
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    with open(os.path.join(RESULTS_DIR, "autotune_pareto.json"), "w") as f:
-        json.dump({"rows": rows, "dominates_default": dominates}, f, indent=1)
+    write_report("autotune_pareto", rows, dominates_default=dominates)
     print("name,us_per_call,derived")
     for r in rows:
         print(f"autotune_pareto/{r['kind']}_{r['config'].replace('/', '_')},"

@@ -1,9 +1,14 @@
-"""Shared benchmark helpers: tiny-LM training for PTQ quality experiments."""
+"""Shared benchmark helpers: tiny-LM training for PTQ quality experiments,
+plus the one JSON-report envelope every benchmark writes."""
 from __future__ import annotations
 
 import dataclasses
 import functools
+import json
 import os
+import subprocess
+import sys
+import time
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +21,59 @@ from repro.models.params import init_params
 from repro.optim.adamw import AdamWConfig, init_opt_state
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def git_rev() -> str:
+    """Current commit hash (+ '-dirty' when the tree has changes), or
+    'unknown' outside a git checkout."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        rev = subprocess.check_output(
+            ["git", "rev-parse", "HEAD"], cwd=root,
+            stderr=subprocess.DEVNULL).decode().strip()
+        dirty = subprocess.run(
+            ["git", "diff", "--quiet", "HEAD"], cwd=root,
+            stderr=subprocess.DEVNULL).returncode != 0
+        return rev + ("-dirty" if dirty else "")
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+def report_meta(benchmark: str, **extra) -> dict:
+    meta = {
+        "benchmark": benchmark,
+        "git_rev": git_rev(),
+        "jax_version": jax.__version__,
+        "jax_backend": jax.default_backend(),
+        "python": sys.version.split()[0],
+        "argv": sys.argv[1:],
+        "unix_time": time.time(),
+    }
+    meta.update(extra)
+    return meta
+
+
+def write_report(name: str, results, **extra_meta) -> str:
+    """Write ``results/<name>.json`` as the shared ``{meta, results}``
+    envelope (git rev, jax version, backend, argv, timestamp + any
+    benchmark-specific ``extra_meta``).  Returns the written path.
+    ``load_report``/tests unwrap ``results`` transparently."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump({"meta": report_meta(name, **extra_meta),
+                   "results": results}, f, indent=1)
+    return path
+
+
+def load_report(name: str):
+    """Read a results file; returns (meta, results).  Pre-envelope
+    artifacts (a bare list/dict) come back with ``meta={}``."""
+    with open(os.path.join(RESULTS_DIR, f"{name}.json")) as f:
+        data = json.load(f)
+    if isinstance(data, dict) and "results" in data and "meta" in data:
+        return data["meta"], data["results"]
+    return {}, data
 
 TINY = ModelConfig(
     name="tiny_lm", n_layers=4, d_model=128, n_heads=4, n_kv_heads=4,

@@ -27,7 +27,6 @@ Output: ``name,us_per_call,derived`` CSV rows + results/kernel_bench.json.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
@@ -35,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import engine
+from repro import engine, telemetry
 from repro.core.apply import pack_array
 from repro.core.policy import StruMConfig
 
@@ -242,11 +241,8 @@ def run(smoke: bool = False):
                     "tokens_per_s": e * c / t_call,
                     "max_abs_err": err,
                 })
-    os.makedirs(os.path.join(os.path.dirname(__file__), "results"),
-                exist_ok=True)
-    with open(os.path.join(os.path.dirname(__file__), "results",
-                           "kernel_bench.json"), "w") as f:
-        json.dump(rows, f, indent=1)
+    from benchmarks.common import write_report
+    write_report("kernel_bench", rows, smoke=smoke)
     print("name,us_per_call,derived")
     for r in rows:
         print(f"kernel/{r['config']}/{r['variant']}_"
@@ -306,7 +302,7 @@ def run_sharded(smoke: bool = False):
                 fn = lambda l, xx: dispatch(  # noqa: E731
                     l, xx, mesh=mesh, tp_pattern=pattern, backend=backend)
                 with mesh:
-                    stats = engine.all_gather_stats(fn, leaf, x, mesh=mesh)
+                    stats = telemetry.all_gather_stats(fn, leaf, x, mesh=mesh)
                     reps = 1 if backend == "interpret" and not smoke else 3
                     t_call, y = _bench_call(fn, leaf, x, reps=reps)
                 err = float(jnp.max(jnp.abs(y - want)))
@@ -323,11 +319,8 @@ def run_sharded(smoke: bool = False):
                     "tokens_per_s": 8 / t_call,
                     "max_abs_err": err,
                 })
-    os.makedirs(os.path.join(os.path.dirname(__file__), "results"),
-                exist_ok=True)
-    with open(os.path.join(os.path.dirname(__file__), "results",
-                           "kernel_bench_sharded.json"), "w") as f:
-        json.dump(rows, f, indent=1)
+    from benchmarks.common import write_report
+    write_report("kernel_bench_sharded", rows, smoke=smoke)
     print("name,us_per_call,derived")
     for r in rows:
         print(f"kernel/{r['config']}/{r['variant']}_{r['pattern']}_"

@@ -1,7 +1,8 @@
 """Paged-serving benchmark: cache codecs + chunked-prefill scheduling wins.
 
 Two sections, JSON output consistent with ``kernel_bench.py``
-(``name,us_per_call,derived`` CSV rows + ``results/serving_bench.json``):
+(``name,us_per_call,derived`` CSV rows + ``results/serving_bench.json``
+in the shared ``{meta, results}`` envelope):
 
 **Cache codecs** — for each KV-page codec (fp passthrough vs packed
 DLIQ / MIP2Q / sparsity), drain the same request queue through the paged
@@ -17,6 +18,14 @@ each) vs serial prefill (the monolithic executable stalls the decode lane
 for its chunk-equivalent ticks).  Chunked must strictly reduce ticks; the
 smoke run asserts it.
 
+Every drain runs inside a scoped telemetry recorder, so each row also
+reports the per-request serving metrics from the scheduler's lifecycle
+events: TTFT p50/p99, per-token decode latency p50/p99, and goodput
+(tokens/s of *retired* requests).  ``--trace <path>`` (or
+``STRUM_TRACE=<path>``) additionally writes the whole run's Chrome-trace
+JSON — scheduler spans, cache:* decode spans, page-pool occupancy — for
+Perfetto / ``chrome://tracing``.
+
 ``--smoke`` (CI, interpret mode) shrinks the model/queue and additionally
 asserts that a q=4 cache schedule actually selects a packed ``cache:*``
 variant — a codec-predicate regression fails fast without a TPU.
@@ -24,13 +33,12 @@ variant — a codec-predicate regression fails fast without a TPU.
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.core.policy import StruMConfig
 
 HBM_BW = 819e9
@@ -59,12 +67,31 @@ def _model(smoke: bool):
     return cfg, params
 
 
-def _queue(cfg, n: int, lens, max_new: int):
+def _queue(cfg, n: int, lens, max_new: int, uid0: int = 0):
+    # uid0 keeps uids globally unique across drains, so a process-wide
+    # STRUM_TRACE recorder sees one well-ordered stream per request
     from repro.serving import Request
     rng = np.random.default_rng(0)
-    return [Request(uid=i, prompt=jnp.asarray(
+    return [Request(uid=uid0 + i, prompt=jnp.asarray(
         rng.integers(0, cfg.vocab_size, size=(lens[i % len(lens)],)),
         jnp.int32), max_new_tokens=max_new) for i in range(n)]
+
+
+def _latency_fields(rec) -> dict:
+    """Serving metrics (ms / tok-s) from a scoped recorder's lifecycle log."""
+    s = rec.latency_summary()
+
+    def ms(v):
+        return None if v is None else v / 1e3
+
+    return {
+        "ttft_p50_ms": ms(s["ttft_p50_us"]),
+        "ttft_p99_ms": ms(s["ttft_p99_us"]),
+        "tok_p50_ms": ms(s["tok_p50_us"]),
+        "tok_p99_ms": ms(s["tok_p99_us"]),
+        "goodput_tok_s": s["goodput_tok_s"],
+        "n_retired": s["n_retired"],
+    }
 
 
 def run_codecs(cfg, params, smoke: bool) -> list:
@@ -74,7 +101,7 @@ def run_codecs(cfg, params, smoke: bool) -> list:
     lens = (6, 9) if smoke else (12, 24, 48)
     max_len = 48 if smoke else 128
     rows = []
-    for label, codec in CODECS:
+    for run_idx, (label, codec) in enumerate(CODECS):
         sched = BatchScheduler(cfg, params, n_slots=2 if smoke else 4,
                                max_len=max_len, kv_cache=codec,
                                page_size=16)
@@ -85,11 +112,12 @@ def run_codecs(cfg, params, smoke: bool) -> list:
                                           "cache:pallas_decode"), \
                 (label, sched.spec.variant)
             assert sched.spec.packed
-        for r in _queue(cfg, n_req, lens, max_new):
-            sched.submit(r)
-        t0 = time.time()
-        done = sched.run_to_completion(max_steps=2000)
-        dt = time.time() - t0
+        with telemetry.recording() as rec:
+            for r in _queue(cfg, n_req, lens, max_new, uid0=100 * run_idx):
+                sched.submit(r)
+            t0 = time.time()
+            done = sched.run_to_completion(max_steps=2000)
+            dt = time.time() - t0
         assert len(done) == n_req, (label, len(done))
         toks = sum(len(r.output) for r in done)
         st = sched.cache_stats()
@@ -109,6 +137,7 @@ def run_codecs(cfg, params, smoke: bool) -> list:
             "ratio_vs_dense": st["ratio_vs_dense"],
             "proj_cache_read_us_dense": st["dense_cache_bytes"] / HBM_BW * 1e6,
             "proj_cache_read_us": st["resident_page_bytes"] / HBM_BW * 1e6,
+            **_latency_fields(rec),
         })
     return rows
 
@@ -124,16 +153,18 @@ def run_hol(cfg, params, smoke: bool) -> list:
             [12, 12, 96, 12, 64, 12], [32, 32, 8, 32, 8, 32], 4, 128
     rows = []
     steps = {}
-    for mode in ("chunked", "serial"):
+    for run_idx, mode in enumerate(("chunked", "serial")):
         sched = BatchScheduler(cfg, params, n_slots=slots, max_len=max_len,
                                prefill=mode, prefill_chunk=16)
-        for i, (pl, mn) in enumerate(zip(lens, news)):
-            sched.submit(Request(uid=i, prompt=jnp.asarray(
-                rng.integers(0, cfg.vocab_size, size=(pl,)), jnp.int32),
-                max_new_tokens=mn))
-        t0 = time.time()
-        done = sched.run_to_completion(max_steps=4000)
-        dt = time.time() - t0
+        with telemetry.recording() as rec:
+            for i, (pl, mn) in enumerate(zip(lens, news)):
+                sched.submit(Request(uid=1000 + 100 * run_idx + i,
+                                     prompt=jnp.asarray(
+                    rng.integers(0, cfg.vocab_size, size=(pl,)), jnp.int32),
+                    max_new_tokens=mn))
+            t0 = time.time()
+            done = sched.run_to_completion(max_steps=4000)
+            dt = time.time() - t0
         assert len(done) == len(lens), (mode, len(done))
         steps[mode] = sched._steps
         rows.append({
@@ -141,6 +172,7 @@ def run_hol(cfg, params, smoke: bool) -> list:
             "variant": "chunked" if mode == "chunked" else "serial",
             "requests": len(lens), "steps": sched._steps, "sec_total": dt,
             "tokens": sum(len(r.output) for r in done),
+            **_latency_fields(rec),
         })
     # the scheduler win this PR exists to land: strictly fewer ticks
     assert steps["chunked"] < steps["serial"], steps
@@ -150,27 +182,27 @@ def run_hol(cfg, params, smoke: bool) -> list:
 
 
 def run(smoke: bool = False):
+    from benchmarks.common import write_report
     cfg, params = _model(smoke)
     rows = run_codecs(cfg, params, smoke) + run_hol(cfg, params, smoke)
-    os.makedirs(os.path.join(os.path.dirname(__file__), "results"),
-                exist_ok=True)
-    with open(os.path.join(os.path.dirname(__file__), "results",
-                           "serving_bench.json"), "w") as f:
-        json.dump(rows, f, indent=1)
+    write_report("serving_bench", rows, smoke=smoke)
     print("name,us_per_call,derived")
     for r in rows:
+        lat = (f"ttft_p50={r['ttft_p50_ms']:.1f}ms;"
+               f"tok_p50={r['tok_p50_ms']:.1f}ms;"
+               f"goodput={r['goodput_tok_s']:.1f}tok/s")
         if r["section"] == "codec":
             print(f"serving/codec/{r['config']},"
                   f"{r['sec_total']/max(r['steps'],1)*1e6:.0f},"
                   f"tok_s={r['tokens_per_s']:.1f};"
                   f"cache_bytes={r['resident_page_bytes']};"
                   f"vs_int8=x{r['ratio_vs_int8']:.4f};"
-                  f"vs_dense=x{r['ratio_vs_dense']:.4f}")
+                  f"vs_dense=x{r['ratio_vs_dense']:.4f};{lat}")
         else:
             print(f"serving/hol/{r['config']},"
                   f"{r['sec_total']/max(r['steps'],1)*1e6:.0f},"
                   f"steps_to_drain={r['steps']};"
-                  f"vs_serial=x{r['steps_vs_serial']:.3f}")
+                  f"vs_serial=x{r['steps_vs_serial']:.3f};{lat}")
     return rows
 
 
@@ -179,5 +211,10 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny model + short queue (CI interpret mode); "
                          "asserts packed cache:* selection for q=4")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Chrome-trace JSON of the whole run "
+                         "(same as STRUM_TRACE=PATH)")
     args = ap.parse_args()
+    if args.trace:
+        telemetry.configure(trace_path=args.trace)
     run(smoke=args.smoke)

@@ -3,6 +3,7 @@ paged scheduler with StruM-compressed weights AND StruM-packed KV pages.
 
 Run:  PYTHONPATH=src python examples/serve_batch.py --arch olmo_1b --requests 6
       PYTHONPATH=src python examples/serve_batch.py --kv-cache dliq --page-size 16
+      PYTHONPATH=src python examples/serve_batch.py --trace trace.json
 """
 import argparse
 import dataclasses
@@ -11,7 +12,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro import engine
+from repro import engine, telemetry
 from repro.configs import get_smoke_config
 from repro.core.policy import StruMConfig
 from repro.models import model_defs
@@ -37,7 +38,12 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill", default="chunked",
                     choices=["chunked", "serial"])
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Chrome-trace JSON of the run (same as "
+                         "STRUM_TRACE=PATH); open in Perfetto")
     args = ap.parse_args()
+    if args.trace:
+        telemetry.configure(trace_path=args.trace)
 
     cfg = get_smoke_config(args.arch)
     params = init_params(model_defs(cfg), seed=0, dtype_override="float32")
@@ -87,6 +93,16 @@ def main():
           f"(x{st['ratio_vs_int8']:.3f} vs int8 pages; "
           f"dense monolithic cache would be "
           f"{st['dense_cache_bytes']/1e3:.1f} kB)")
+    rec = telemetry.current()
+    if rec is not None:
+        lat = rec.latency_summary()
+        print(f"latency: ttft p50 {lat['ttft_p50_us']/1e3:.1f} ms / "
+              f"p99 {lat['ttft_p99_us']/1e3:.1f} ms; tok p50 "
+              f"{lat['tok_p50_us']/1e3:.1f} ms; goodput "
+              f"{lat['goodput_tok_s']:.1f} tok/s "
+              f"({lat['n_retired']}/{lat['n_requests']} retired)")
+        if args.trace:
+            print(f"trace -> {args.trace} (Perfetto / chrome://tracing)")
 
 
 if __name__ == "__main__":

@@ -39,6 +39,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.core import blocking, packing
 from repro.core.policy import StruMConfig
 from repro.core.quantizers import int8_symmetric, quantize_blocks
@@ -165,8 +166,21 @@ def decode_pages(leaf: dict, spec: CacheSpec, *,
     ``(lead..., page_size, F)`` in ``out_dtype``.
     """
     variant, interpret = _pick_cache(spec, backend)
-    return variant.fn(leaf, cfg=spec.cfg, page_size=spec.page_size,
-                      out_dtype=out_dtype, interpret=interpret)
+    if telemetry.enabled():
+        telemetry.inc(f"cache/decode/{variant.name}")
+        if spec.packed:
+            # packed payload bytes this decode streams out of the pools —
+            # the cache-side Eq.-1 numerator (uint8/int8 fields: size==bytes)
+            telemetry.inc("cache/decode_packed_bytes",
+                          sum(int(leaf[k].size) for k in ("mask", "hi", "lo")
+                              if k in leaf))
+    # the span fires at jit-trace time (once per compiled step) — it marks
+    # *that and where* a cache:* decode is part of the program; runtime
+    # attribution comes from the named_scope in XLA profiles
+    with telemetry.span(variant.name, cat="cache"), \
+            jax.named_scope(variant.name):
+        return variant.fn(leaf, cfg=spec.cfg, page_size=spec.page_size,
+                          out_dtype=out_dtype, interpret=interpret)
 
 
 def gather_decode_pages(pool: dict, page_ids: jnp.ndarray, spec: CacheSpec,

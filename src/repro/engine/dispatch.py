@@ -15,6 +15,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.core import packing
 from repro.core.policy import StruMConfig
 from repro.engine.registry import (ExecSpec, LeafInfo, get_variant,
@@ -24,6 +25,27 @@ __all__ = ["dispatch", "dispatch_grouped", "apply", "dequant_leaf",
            "leaf_spec"]
 
 PAYLOAD_KEYS = ("mask", "hi", "lo", "scale")
+
+
+def _note_dispatch(variant, wleaf: dict, *, sharded: bool = False) -> None:
+    """Count one dispatch through ``variant`` into the active recorders.
+
+    Dispatch runs at jit-trace time, so per-executable these counters fire
+    exactly once per leaf — a full forward traced from a plan yields counts
+    equal to the plan's ``variant_distribution``.  ``dispatch/packed_bytes``
+    is the mask+hi+lo payload (the Eq.-1 numerator; uint8/int8 fields, so
+    ``size`` is bytes); for ``sharded:*`` calls the same payload is what
+    the FSDP gather moves, mirrored under a dedicated counter (the runtime
+    twin of :func:`repro.telemetry.all_gather_stats`).
+    """
+    if not telemetry.enabled():
+        return
+    telemetry.inc(f"dispatch/variant/{variant.name}")
+    payload = sum(int(wleaf[k].size) for k in ("mask", "hi", "lo")
+                  if k in wleaf)
+    telemetry.inc("dispatch/packed_bytes", payload)
+    if sharded:
+        telemetry.inc("dispatch/sharded/gathered_packed_bytes", payload)
 
 
 def leaf_spec(wleaf: dict, strum: Optional[StruMConfig] = None
@@ -70,12 +92,15 @@ def _sharded_call(wleaf: dict, x: jnp.ndarray, cfg: StruMConfig,
     one place.
     """
     variant, interpret = _pick(cfg, info, spec, backend)
+    _note_dispatch(variant, wleaf, sharded=True)
     eff_backend = backend if backend is not None else (
         spec.backend if spec is not None else None)
-    return variant.fn(
-        wleaf, x, cfg=cfg, mesh=mesh, fsdp=tuple(info.fsdp), pattern=pattern,
-        k_dim=x.shape[-1], backend=eff_backend, interpret=interpret,
-        accum_dtype=accum_dtype, out_dtype=out_dtype)
+    with jax.named_scope(variant.name):
+        return variant.fn(
+            wleaf, x, cfg=cfg, mesh=mesh, fsdp=tuple(info.fsdp),
+            pattern=pattern, k_dim=x.shape[-1], backend=eff_backend,
+            interpret=interpret, accum_dtype=accum_dtype,
+            out_dtype=out_dtype)
 
 
 def _pick(cfg: StruMConfig, info: LeafInfo, spec: Optional[ExecSpec],
@@ -163,10 +188,12 @@ def dispatch(wleaf: dict, x: jnp.ndarray, *,
     info = LeafInfo(k_dim=k_dim, n_out=wleaf["scale"].shape[-1],
                     lead=(), name="")
     variant, interpret = _pick(cfg, info, spec, backend)
+    _note_dispatch(variant, wleaf)
     packed = _as_packed(wleaf, cfg, k_dim)
     lead = x.shape[:-1]
-    y = variant.fn(x.reshape(-1, k_dim), packed, out_dtype=out_dtype,
-                   interpret=interpret, accum_dtype=accum_dtype)
+    with jax.named_scope(variant.name):
+        y = variant.fn(x.reshape(-1, k_dim), packed, out_dtype=out_dtype,
+                       interpret=interpret, accum_dtype=accum_dtype)
     return y.reshape(lead + (y.shape[-1],))
 
 
@@ -217,13 +244,16 @@ def dispatch_grouped(wleaf: dict, x: jnp.ndarray, *,
     info = LeafInfo(k_dim=k_dim, n_out=wleaf["scale"].shape[-1],
                     lead=tuple(lead), name="")
     variant, interpret = _pick(cfg, info, spec, backend)
+    _note_dispatch(variant, wleaf)
     if variant.grouped:
         packed = _as_packed(wleaf, cfg, k_dim)
-        return variant.fn(x, packed, out_dtype=out_dtype,
-                          interpret=interpret, accum_dtype=accum_dtype)
-    wd = dequant_leaf(wleaf, x.dtype, cfg=cfg, k_dim=k_dim)
-    return jnp.matmul(x, wd, preferred_element_type=accum_dtype or
-                      jnp.float32).astype(out_dtype)
+        with jax.named_scope(variant.name):
+            return variant.fn(x, packed, out_dtype=out_dtype,
+                              interpret=interpret, accum_dtype=accum_dtype)
+    with jax.named_scope(variant.name):
+        wd = dequant_leaf(wleaf, x.dtype, cfg=cfg, k_dim=k_dim)
+        return jnp.matmul(x, wd, preferred_element_type=accum_dtype or
+                          jnp.float32).astype(out_dtype)
 
 
 def apply(plan, name: str, x: jnp.ndarray, *, backend: Optional[str] = None,

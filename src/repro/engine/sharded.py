@@ -42,7 +42,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import packing
@@ -245,54 +244,21 @@ def _grouped_gather(wleaf, x, *, cfg, mesh=None, fsdp, pattern=None, k_dim,
 
 # --------------------------------------------------- collective accounting --
 
-def _sub_jaxprs(val):
-    """Yield every jaxpr nested in an eqn param value."""
-    vals = val if isinstance(val, (list, tuple)) else (val,)
-    for v in vals:
-        if hasattr(v, "jaxpr"):        # ClosedJaxpr
-            yield v.jaxpr
-        elif hasattr(v, "eqns"):       # raw Jaxpr
-            yield v
-
-
 def all_gather_stats(fn, *args, mesh=None, **kwargs) -> dict:
-    """Trace ``fn`` and account every ``all_gather``'s moved bytes.
+    """Deprecated shim: moved to :func:`repro.telemetry.all_gather_stats`.
 
-    Returns ``{"ops": [...], "operand_bytes": one device's input bytes,
-    "gathered_bytes": operand bytes × gather width (one device's receive
-    volume)}`` — the wire-cost view of a sharded dispatch.  With ``mesh``,
-    adds ``"global_operand_bytes"``: operand bytes × mesh size — for an
-    operand partitioned across the whole mesh (the ``sharded:*`` payload
-    gathers) this is exactly the *global* packed mask+hi+lo payload, the
-    Eq.-1/2 fraction of a dense gather, which the tests and ``kernel_bench
-    --sharded`` assert/report.  (An operand *replicated* along a mesh axis,
-    e.g. the row-pattern scale gather, is counted once per replica.)
+    Collective byte accounting is a measurement, so it lives in the
+    telemetry layer now (where it also feeds the ``collective/*`` counters
+    of any active recorder).  Same signature, same return dict.  Follows
+    the README shim-removal timeline: deleted two PRs after this one.
     """
-    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs)
-    ops = []
-
-    def walk(jx):
-        for eqn in jx.eqns:
-            if eqn.primitive.name == "all_gather":
-                aval = eqn.invars[0].aval
-                nbytes = int(np.prod(aval.shape)) * aval.dtype.itemsize
-                width = int(eqn.params.get("axis_size", 1))
-                ops.append({"shape": tuple(aval.shape),
-                            "dtype": str(aval.dtype),
-                            "operand_bytes": nbytes,
-                            "gathered_bytes": nbytes * width})
-            for v in eqn.params.values():
-                for sub in _sub_jaxprs(v):
-                    walk(sub)
-
-    walk(jaxpr.jaxpr)
-    out = {"ops": ops,
-           "operand_bytes": int(sum(o["operand_bytes"] for o in ops)),
-           "gathered_bytes": int(sum(o["gathered_bytes"] for o in ops))}
-    if mesh is not None:
-        n_dev = math.prod(dict(mesh.shape).values())
-        out["global_operand_bytes"] = out["operand_bytes"] * n_dev
-    return out
+    import warnings
+    warnings.warn(
+        "engine.all_gather_stats is deprecated; use "
+        "repro.telemetry.all_gather_stats (same signature)",
+        DeprecationWarning, stacklevel=2)
+    from repro.telemetry.jaxpr_stats import all_gather_stats as _stats
+    return _stats(fn, *args, mesh=mesh, **kwargs)
 
 
 def dense_gather_bytes(k_dim: int, n_out: int, dtype=jnp.bfloat16) -> int:

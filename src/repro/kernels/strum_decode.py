@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.strum_matmul import _decode_tile, _mosaic_params
+from repro.kernels.strum_matmul import _decode_tile, _mosaic_params, _scoped
 
 __all__ = ["strum_page_decode_pallas"]
 
@@ -42,6 +42,7 @@ def _kernel(mask_ref, hi_ref, lo_ref, scale_ref, o_ref, *, w, n_low, q,
     o_ref[...] = wv[None]
 
 
+@_scoped("strum:page_decode")
 def strum_page_decode_pallas(mask, hi, lo, scale, *, w: int, n_low: int,
                              q: int, method: str, block_f: int = 512,
                              interpret: bool = True) -> jnp.ndarray:

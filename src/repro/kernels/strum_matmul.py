@@ -60,6 +60,20 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+
+def _scoped(name):
+    """Run the lowering under ``jax.named_scope(name)`` so each Pallas
+    variant is attributable in XLA/Perfetto profiles.  named_scope is
+    trace-time metadata — zero runtime cost, works under jit/vmap/scan."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            with jax.named_scope(name):
+                return fn(*args, **kwargs)
+        return wrapper
+    return deco
+
+
 __all__ = [
     "strum_matmul_pallas",
     "strum_matmul_pallas_maskfree",
@@ -153,6 +167,7 @@ def _kernel(x_ref, mask_ref, hi_ref, lo_ref, scale_ref, o_ref, *,
     o_ref[...] += jnp.dot(x, wv, preferred_element_type=jnp.float32)
 
 
+@_scoped("strum:onehot")
 def strum_matmul_pallas(x, mask, hi, lo, scale, *, w: int, n_low: int, q: int,
                         method: str, block_m: int = 128, block_n: int = 128,
                         block_k: int = 128, interpret: bool = True):
@@ -218,6 +233,7 @@ def _kernel_maskfree(x_ref, lo_ref, scale_ref, o_ref, *, w, q, method):
     o_ref[...] += jnp.dot(x, wv, preferred_element_type=jnp.float32)
 
 
+@_scoped("strum:maskfree")
 def strum_matmul_pallas_maskfree(x, lo, scale, *, w: int, q: int, method: str,
                                  block_m: int = 128, block_n: int = 128,
                                  block_k: int = 128, interpret: bool = True):
@@ -261,6 +277,7 @@ def _kernel_dense(x_ref, hi_ref, scale_ref, o_ref, *, w):
     o_ref[...] += jnp.dot(x, wv, preferred_element_type=jnp.float32)
 
 
+@_scoped("strum:dense")
 def strum_matmul_pallas_dense(x, hi, scale, *, w: int,
                               block_m: int = 128, block_n: int = 128,
                               block_k: int = 128, interpret: bool = True):
@@ -313,6 +330,7 @@ def _kernel_grouped(x_ref, mask_ref, hi_ref, lo_ref, scale_ref, o_ref, *,
     o_ref[...] += jnp.dot(x, wv, preferred_element_type=jnp.float32)[None]
 
 
+@_scoped("strum:grouped_onehot")
 def strum_matmul_pallas_grouped(x, mask, hi, lo, scale, *, w: int,
                                 n_low: int, q: int, method: str,
                                 block_m: int = 128, block_n: int = 128,
@@ -372,6 +390,7 @@ def _kernel_grouped_maskfree(x_ref, lo_ref, scale_ref, o_ref, *, w, q, method):
     o_ref[...] += jnp.dot(x, wv, preferred_element_type=jnp.float32)[None]
 
 
+@_scoped("strum:grouped_maskfree")
 def strum_matmul_pallas_grouped_maskfree(x, lo, scale, *, w: int, q: int,
                                          method: str, block_m: int = 128,
                                          block_n: int = 128,
@@ -419,6 +438,7 @@ def _kernel_grouped_dense(x_ref, hi_ref, scale_ref, o_ref, *, w):
     o_ref[...] += jnp.dot(x, wv, preferred_element_type=jnp.float32)[None]
 
 
+@_scoped("strum:grouped_dense")
 def strum_matmul_pallas_grouped_dense(x, hi, scale, *, w: int,
                                       block_m: int = 128, block_n: int = 128,
                                       block_k: int = 128,

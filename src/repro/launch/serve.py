@@ -25,6 +25,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.configs.base import get_config, get_smoke_config
 from repro.core.policy import StruMConfig
 from repro.launch.steps import make_decode_step, make_prefill_step
@@ -108,7 +109,14 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill", default="chunked",
                     choices=["chunked", "serial"])
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="record telemetry and write a Chrome-trace JSON "
+                         "to PATH at exit (same as STRUM_TRACE=PATH); "
+                         "open in Perfetto or chrome://tracing")
     args = ap.parse_args(argv)
+
+    if args.trace:
+        telemetry.configure(trace_path=args.trace)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params = init_params(model_defs(cfg), seed=args.seed,
@@ -175,13 +183,40 @@ def main(argv=None):
               f"({st['steps']} ticks, {args.prefill} prefill); cache "
               f"{st['codec']} x{st['ratio_vs_int8']:.3f} vs int8 pages")
         print("sample:", done[0].output[:16])
+        _print_telemetry()
         return 0
     toks, t_p, t_d = serve(cfg, params, prompt, args.gen, {}, mesh=mesh,
                            rules=rules)
     print(f"prefill {t_p*1e3:.1f} ms; decode {t_d*1e3:.1f} ms "
           f"({args.gen} steps, {t_d/args.gen*1e3:.2f} ms/tok)")
     print("sample:", toks[0, :16].tolist())
+    _print_telemetry()
     return 0
+
+
+def _print_telemetry():
+    """End-of-run summary of the active recorder (--trace / STRUM_TRACE)."""
+    rec = telemetry.current()
+    if rec is None:
+        return
+    lat = rec.latency_summary()
+    if lat["n_requests"]:
+        def ms(v):
+            return "n/a" if v is None else f"{v/1e3:.1f} ms"
+        gp = lat["goodput_tok_s"]
+        print(f"telemetry: {lat['n_retired']}/{lat['n_requests']} retired; "
+              f"ttft p50/p99 {ms(lat['ttft_p50_us'])}/"
+              f"{ms(lat['ttft_p99_us'])}; tok p50/p99 "
+              f"{ms(lat['tok_p50_us'])}/{ms(lat['tok_p99_us'])}; goodput "
+              f"{'n/a' if gp is None else f'{gp:.1f} tok/s'}")
+    disp = rec.counters("dispatch/variant/")   # keys come back prefix-free
+    if disp:
+        counts = {k: int(v) for k, v in sorted(disp.items())}
+        print(f"telemetry: dispatch {counts}; packed bytes "
+              f"{int(rec.counter('dispatch/packed_bytes'))}")
+    cache = rec.counters("cache/")
+    if cache:
+        print(f"telemetry: cache {dict(sorted(cache.items()))}")
 
 
 if __name__ == "__main__":

@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.launch.steps import (make_chunked_prefill_step,
                                 make_paged_decode_step, make_prefill_step)
 from repro.serving import pages as pages_mod
@@ -182,11 +183,13 @@ class BatchScheduler:
         caller can handle them — not mid-run from inside step()."""
         plen = int(req.prompt.shape[0])
         if req.max_new_tokens > 0 and plen > self.max_len - 3:
+            telemetry.inc("sched/reject/prompt_too_long")
             raise ValueError(
                 f"request {req.uid}: prompt length {plen} does not fit the "
                 f"serving window (max_len={self.max_len} leaves room for "
                 f"{self.max_len - 3} prompt + 1 decode positions)")
         if self._pages_needed(req) > self.allocator.n_pages:
+            telemetry.inc("sched/reject/pages_never_fit")
             raise PagesExhausted(
                 f"request {req.uid}: needs {self._pages_needed(req)} pages "
                 f"but the pool only holds {self.allocator.n_pages} — no "
@@ -194,6 +197,12 @@ class BatchScheduler:
         self._order[id(req)] = self._seq
         self._seq += 1
         self.queue.append(req)
+        if telemetry.enabled():
+            telemetry.inc("sched/submitted")
+            telemetry.request_event(req.uid, "submitted", prompt_len=plen,
+                                    max_new_tokens=req.max_new_tokens,
+                                    priority=req.priority)
+            telemetry.gauge("sched/queue_depth", len(self.queue))
 
     def _pages_needed(self, req: Request) -> int:
         plen = int(req.prompt.shape[0])
@@ -204,6 +213,7 @@ class BatchScheduler:
         while self.queue:
             free = [s for s in range(self.n_slots) if self.slots[s] is None]
             if not free:
+                telemetry.inc("sched/admit_wait/no_slot")
                 return
             nxt = max(self.queue,
                       key=lambda r: (r.priority, -self._order[id(r)]))
@@ -213,8 +223,13 @@ class BatchScheduler:
                 self._order.pop(id(nxt), None)
                 nxt.done = True
                 self._finished.append(nxt)
+                if telemetry.enabled():
+                    telemetry.inc("sched/retired")
+                    telemetry.request_event(nxt.uid, "retired", n_tokens=0)
+                    telemetry.gauge("sched/queue_depth", len(self.queue))
                 continue
             if self.allocator.available < self._pages_needed(nxt):
+                telemetry.inc("sched/admit_wait/no_pages")
                 return                      # wait for retirements
             self.queue.remove(nxt)
             self._order.pop(id(nxt), None)
@@ -223,6 +238,12 @@ class BatchScheduler:
                                      pages=self.allocator.alloc(
                                          self._pages_needed(nxt)))
             self._table[slot] = -1
+            if telemetry.enabled():
+                telemetry.inc("sched/admitted")
+                telemetry.request_event(
+                    nxt.uid, "admitted", slot=slot,
+                    pages=len(self.slots[slot].pages))
+                telemetry.gauge("sched/queue_depth", len(self.queue))
             if self.prefill_mode == "serial":
                 self._serial_prefill(slot)
 
@@ -236,10 +257,12 @@ class BatchScheduler:
         sl = self.slots[slot]
         pid = sl.pages[page_idx]
         pid_dev = jnp.int32(pid)
-        for pos in self._attn_pos:
-            k_page, v_page = kv_pages[pos]
-            self.pools[pos] = self._seal(self.pools[pos], k_page, v_page,
-                                         pid_dev)
+        with telemetry.span("sched:seal", slot=slot, page=pid):
+            for pos in self._attn_pos:
+                k_page, v_page = kv_pages[pos]
+                self.pools[pos] = self._seal(self.pools[pos], k_page, v_page,
+                                             pid_dev)
+        telemetry.inc("sched/pages_sealed")
         self._table[slot, page_idx] = pid
         sl.n_sealed = page_idx + 1
 
@@ -260,10 +283,12 @@ class BatchScheduler:
         req = sl.req
         req.output.append(int(tok))
         sl.state = "decode"
+        telemetry.request_event(req.uid, "first_token", slot=slot)
         if ((req.eos_id is not None and int(tok) == req.eos_id)
                 or len(req.output) >= req.max_new_tokens):
             self._retire(slot)
             return
+        telemetry.request_event(req.uid, "decode", slot=slot)
         self._tokens[slot] = req._feed(0, int(tok))
 
     def _serial_prefill(self, slot: int) -> None:
@@ -272,8 +297,12 @@ class BatchScheduler:
         sl = self.slots[slot]
         plen = int(sl.req.prompt.shape[0])
         ps = self.page_size
-        lg, caches = self._prefill(self.params,
-                                   {"tokens": sl.req.prompt[None, :]})
+        telemetry.request_event(sl.req.uid, "prefill", mode="serial",
+                                prompt_len=plen)
+        with telemetry.span("sched:prefill_serial", slot=slot,
+                            prompt_len=plen):
+            lg, caches = self._prefill(self.params,
+                                       {"tokens": sl.req.prompt[None, :]})
         n_full = plen // ps
         for j in range(n_full):
             kv_pages = {pos: (caches[pos]["k"][:, 0, j * ps:(j + 1) * ps],
@@ -319,12 +348,17 @@ class BatchScheduler:
         c = self.prefill_chunk
         start = sl.pf_start
         valid = min(c, plen - start)
+        if start == 0:
+            telemetry.request_event(sl.req.uid, "prefill", mode="chunked",
+                                    prompt_len=plen)
         toks = np.zeros((1, c), np.int32)
         toks[0, :valid] = prompt[start:start + valid]
-        lg, self.hot, chunk_kv = self._chunk_prefill(
-            self.params, jnp.asarray(toks), self.pools, self.hot,
-            jnp.asarray(self._table), jnp.int32(slot), jnp.int32(start),
-            jnp.int32(valid))
+        with telemetry.span("sched:prefill_chunk", slot=slot, start=start,
+                            valid=valid):
+            lg, self.hot, chunk_kv = self._chunk_prefill(
+                self.params, jnp.asarray(toks), self.pools, self.hot,
+                jnp.asarray(self._table), jnp.int32(slot), jnp.int32(start),
+                jnp.int32(valid))
         new_len = start + valid
         ps = self.page_size
         for j in range(sl.n_sealed, new_len // ps):
@@ -344,6 +378,10 @@ class BatchScheduler:
         sl = self.slots[slot]
         sl.req.done = True
         self._finished.append(sl.req)
+        if telemetry.enabled():
+            telemetry.inc("sched/retired")
+            telemetry.request_event(sl.req.uid, "retired", slot=slot,
+                                    n_tokens=len(sl.req.output))
         self.allocator.free(sl.pages)      # defrags the free list
         self._table[slot] = -1
         self.slots[slot] = None
@@ -360,17 +398,21 @@ class BatchScheduler:
                 cache_len[s] = self.slots[s].len
         mask = np.zeros((self.n_slots,), bool)
         mask[active] = True
-        lg, self.hot = self._decode(
-            self.params, jnp.asarray(self._tokens, jnp.int32)[:, None],
-            self.pools, self.hot, jnp.asarray(cache_len),
-            jnp.asarray(self._table), jnp.asarray(mask))
-        nxt = np.asarray(
-            jnp.argmax(lg[:, -1, :self.cfg.vocab_size], axis=-1))
+        with telemetry.span("sched:decode", n_active=len(active)):
+            lg, self.hot = self._decode(
+                self.params, jnp.asarray(self._tokens, jnp.int32)[:, None],
+                self.pools, self.hot, jnp.asarray(cache_len),
+                jnp.asarray(self._table), jnp.asarray(mask))
+            # np.asarray blocks on the device step, so the token events
+            # below carry post-compute wall-clock timestamps
+            nxt = np.asarray(
+                jnp.argmax(lg[:, -1, :self.cfg.vocab_size], axis=-1))
         for s in active:
             sl = self.slots[s]
             req = sl.req
             tok = int(nxt[s])
             req.output.append(tok)
+            telemetry.request_event(req.uid, "token", slot=s)
             sl.len += 1
             if sl.len % self.page_size == 0 \
                     and sl.len // self.page_size <= len(sl.pages):
@@ -386,26 +428,37 @@ class BatchScheduler:
     def step(self) -> int:
         """One scheduler tick: admit, advance one prefill chunk, decode all
         decoding slots.  Returns the number of requests that progressed."""
-        self._admit()
-        progressed = 0
-        if self.prefill_mode == "chunked":
-            pf = self._prefill_slots()
-            if pf:
-                # round-robin by progress: least-advanced first
-                slot = min(pf, key=lambda s: (self.slots[s].pf_start, s))
-                self._advance_prefill(slot)
-                progressed += 1
-        if self._stall > 0:
-            # serial mode: the monolithic prefill still occupies the device
-            self._stall -= 1
+        with telemetry.span("sched:step", tick=self._steps):
+            self._admit()
+            progressed = 0
+            prefill_busy = 0
+            if self.prefill_mode == "chunked":
+                pf = self._prefill_slots()
+                if pf:
+                    # round-robin by progress: least-advanced first
+                    slot = min(pf, key=lambda s: (self.slots[s].pf_start, s))
+                    self._advance_prefill(slot)
+                    progressed += 1
+                    prefill_busy = 1
+            if telemetry.enabled():
+                telemetry.inc("sched/ticks")
+                telemetry.gauge("sched/queue_depth", len(self.queue))
+                telemetry.gauge("sched/lane/prefill_busy", prefill_busy)
+            if self._stall > 0:
+                # serial mode: the monolithic prefill still occupies the
+                # device
+                self._stall -= 1
+                self._steps += 1
+                telemetry.inc("sched/stall_ticks")
+                telemetry.gauge("sched/lane/decode_active", 0)
+                return progressed + len(self._decode_slots())
+            active = self._decode_slots()
+            telemetry.gauge("sched/lane/decode_active", len(active))
+            if active:
+                self._run_decode(active)
+                progressed += len(active)
             self._steps += 1
-            return progressed + len(self._decode_slots())
-        active = self._decode_slots()
-        if active:
-            self._run_decode(active)
-            progressed += len(active)
-        self._steps += 1
-        return progressed
+            return progressed
 
     def run_to_completion(self, max_steps: int = 10_000) -> list:
         while (self.queue or any(s is not None for s in self.slots)) \

@@ -1,0 +1,56 @@
+"""``repro.telemetry`` — the measurement layer for the whole stack.
+
+One shared observability subsystem instead of per-module one-offs:
+
+* **counters / gauges / histograms** — thread-safe, recorded by the engine
+  dispatch funnel (per-variant counts, packed bytes moved), the page
+  allocator (occupancy, fragmentation) and the scheduler (queue depth,
+  admissions, lane utilization);
+* **spans** — wall-clock regions exported in Chrome Trace Event Format,
+  openable in Perfetto (https://ui.perfetto.dev) or ``chrome://tracing``;
+* **request lifecycle log** — submitted→admitted→prefill→first-token→
+  decode→retired events per request, reduced to TTFT / per-token p50-p99 /
+  goodput by :mod:`repro.telemetry.requests`;
+* **jaxpr byte accounting** — :func:`all_gather_stats` (moved here from
+  ``repro.engine.sharded``) statically counts collective bytes.
+
+Enablement: nothing is recorded until a recorder is active.
+``STRUM_TRACE=<path>`` (read at import, below) or ``--trace`` on the CLIs
+installs a process-wide recorder flushed at exit; ``recording()`` scopes
+one to a ``with`` block.  Disabled, every hook is an early-return no-op
+and ``span()`` returns a shared null singleton — the tier-1 suite and
+jit tracing see zero overhead.
+"""
+from repro.telemetry.recorder import (MAX_EVENTS, Recorder, configure,
+                                      current, enabled, event, gauge, inc,
+                                      observe, recording, request_event,
+                                      shutdown, span)
+from repro.telemetry.requests import (LIFECYCLE_STAGES, check_well_ordered,
+                                      latency_summary, percentile,
+                                      request_metrics)
+from repro.telemetry.trace import (chrome_trace, require_spans,
+                                   validate_chrome_trace)
+
+from repro.telemetry.recorder import _init_from_env
+
+__all__ = [
+    "Recorder", "configure", "current", "enabled", "recording", "shutdown",
+    "inc", "gauge", "observe", "event", "request_event", "span",
+    "MAX_EVENTS",
+    "LIFECYCLE_STAGES", "check_well_ordered", "latency_summary",
+    "percentile", "request_metrics",
+    "chrome_trace", "validate_chrome_trace", "require_spans",
+    "all_gather_stats",
+]
+
+
+def __getattr__(name):
+    # lazy: all_gather_stats pulls in jax, which the trace validator CLI
+    # (python -m repro.telemetry.check) must not require
+    if name == "all_gather_stats":
+        from repro.telemetry.jaxpr_stats import all_gather_stats
+        return all_gather_stats
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+_init_from_env()

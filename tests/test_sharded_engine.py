@@ -190,10 +190,11 @@ def test_gather_pallas_shards_non_power_of_two_m():
 def test_gather_pallas_moves_packed_bytes_not_dequantized():
     """Acceptance: the all-gather operands on the gather_pallas path are the
     packed payloads — global operand bytes == mask+hi+lo payload size (the
-    Eq. 1/2 fraction), nowhere near the dequantized weight."""
+    Eq. 1/2 fraction), nowhere near the dequantized weight.  The telemetry
+    dispatch counter must agree with the jaxpr-derived number."""
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
-        from repro import engine
+        from repro import engine, telemetry
         from repro.core.policy import StruMConfig
         from repro.engine.dispatch import dispatch
         from repro.launch.mesh import make_host_mesh
@@ -207,8 +208,9 @@ def test_gather_pallas_moves_packed_bytes_not_dequantized():
                                  backend="interpret", mesh=mesh)
         leaf = plan.params["mlp"]["wi"]["w"]
         x = jnp.asarray(rng.normal(size=(8, K)).astype(np.float32))
-        stats = engine.all_gather_stats(
-            lambda l, x: dispatch(l, x, mesh=mesh), leaf, x, mesh=mesh)
+        with telemetry.recording() as rec:
+            stats = telemetry.all_gather_stats(
+                lambda l, x: dispatch(l, x, mesh=mesh), leaf, x, mesh=mesh)
         payload = int(sum(leaf[k].size for k in ("mask", "hi", "lo")))
         dense_bf16 = engine.dense_gather_bytes(K, N, jnp.bfloat16)
         print("BYTES", stats["global_operand_bytes"], payload, dense_bf16)
@@ -217,6 +219,12 @@ def test_gather_pallas_moves_packed_bytes_not_dequantized():
         assert stats["global_operand_bytes"] == payload, (stats, payload)
         assert payload == int(K * N * scfg.compression_ratio)  # Eq. 1
         assert stats["global_operand_bytes"] < dense_bf16
+        # the runtime counter (recorded as dispatch traced) sees the same
+        # global payload, and the jaxpr walk fed the collective counters
+        c = rec.counters()
+        assert c["dispatch/sharded/gathered_packed_bytes"] == payload, c
+        assert c["dispatch/variant/sharded:gather_pallas"] == 1, c
+        assert c["collective/all_gather/global_operand_bytes"] == payload, c
         """)
     assert "BYTES" in out
 
@@ -267,7 +275,7 @@ def test_schedule_plan_threads_mesh_into_forwards():
     packed (uint8) all-gathers."""
     out = _run("""
         import dataclasses, jax, jax.numpy as jnp, numpy as np
-        from repro import engine
+        from repro import engine, telemetry
         from repro.autotune.schedule import StruMSchedule
         from repro.configs import get_smoke_config
         from repro.core.apply import _named_leaves
@@ -296,8 +304,8 @@ def test_schedule_plan_threads_mesh_into_forwards():
         batch = {"tokens": jnp.ones((4, 8), jnp.int32)}
         step = make_prefill_step(cfg, mesh, rules)
         with mesh:
-            stats = engine.all_gather_stats(step, plan.params, batch,
-                                            mesh=mesh)
+            stats = telemetry.all_gather_stats(step, plan.params, batch,
+                                               mesh=mesh)
             lg, _ = jax.jit(step)(plan.params, batch)
         packed_ops = [o for o in stats["ops"]
                       if o["dtype"] in ("uint8", "int8")]
