@@ -6,14 +6,12 @@ larger blocks better, smaller p better, larger q better.
 """
 from __future__ import annotations
 
-import json
-import os
 import time
 
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import RESULTS_DIR, trained_tiny_lm
+from benchmarks.common import trained_tiny_lm, write_report
 from repro.core.apply import fake_quantize_array, int8_baseline_array
 from repro.core.metrics import sqnr_db
 from repro.core.policy import StruMConfig
@@ -44,9 +42,8 @@ def run():
             s = float(np.mean([float(sqnr_db(x, fake_quantize_array(x, cfg)))
                                for x in ws]))
             rows.append({"sweep": "pq", "w": 16, "p": p, "q": q, "sqnr_db": s})
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    with open(os.path.join(RESULTS_DIR, "fig10.json"), "w") as f:
-        json.dump(rows, f, indent=1)
+    write_report("fig10", rows, figure="10",
+                 metric="weight SQNR (dB)")
     print("name,us_per_call,derived")
     for r in rows:
         print(f"fig10/{r['sweep']}_w{r['w']}_p{r['p']}_q{r['q']},"

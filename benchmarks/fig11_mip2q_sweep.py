@@ -5,13 +5,11 @@ better, larger L better, and L=5 ~ L=7 (the hardware-relevant finding that
 motivates the cheaper barrel shifter)."""
 from __future__ import annotations
 
-import json
-import os
 import time
 
 import numpy as np
 
-from benchmarks.common import RESULTS_DIR, trained_tiny_lm
+from benchmarks.common import trained_tiny_lm, write_report
 from benchmarks.fig10_dliq_sweep import weight_pool
 from repro.core.apply import fake_quantize_array
 from repro.core.metrics import sqnr_db
@@ -34,9 +32,8 @@ def run():
             s = float(np.mean([float(sqnr_db(x, fake_quantize_array(x, cfg)))
                                for x in ws]))
             rows.append({"sweep": "pL", "w": 16, "p": p, "L": L, "sqnr_db": s})
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    with open(os.path.join(RESULTS_DIR, "fig11.json"), "w") as f:
-        json.dump(rows, f, indent=1)
+    write_report("fig11", rows, figure="11",
+                 metric="weight SQNR (dB)")
     print("name,us_per_call,derived")
     for r in rows:
         print(f"fig11/{r['sweep']}_w{r['w']}_p{r['p']}_L{r['L']},"

@@ -5,13 +5,11 @@ structured sparsity except at the very smallest r (where sparsity's
 zero-payload encoding wins bytes but loses quality)."""
 from __future__ import annotations
 
-import json
-import os
 import time
 
 import numpy as np
 
-from benchmarks.common import RESULTS_DIR, eval_ce, trained_tiny_lm
+from benchmarks.common import eval_ce, trained_tiny_lm, write_report
 from repro.engine import fake_quantize
 from repro.core.policy import StruMConfig, default_policy
 
@@ -32,9 +30,8 @@ def run():
             rows.append({"method": method, **kw,
                          "r": scfg.compression_ratio,
                          "eval_ce": eval_ce(cfg, qp)})
-    os.makedirs(RESULTS_DIR, exist_ok=True)
-    with open(os.path.join(RESULTS_DIR, "fig12.json"), "w") as f:
-        json.dump(rows, f, indent=1)
+    write_report("fig12", rows, figure="12",
+                 metric="held-out CE vs compression r")
     print("name,us_per_call,derived")
     for r in rows:
         print(f"fig12/{r['method']}_r{r['r']:.3f},"

@@ -9,10 +9,9 @@ tests import them from here.
 """
 from __future__ import annotations
 
-import json
-import os
 import time
 
+from benchmarks.common import write_report
 from repro.autotune.costmodel import (  # noqa: F401  (re-exported API)
     DPU_OVERHEAD, DYN_ROUTE_AREA, GATED_LEAK, N_MULS, PE_OVERHEAD,
     P_REPLACED, SHIFT, level_savings)
@@ -30,9 +29,8 @@ def run():
     paper = {"pe_area": (0.23, 0.26), "pe_power": (0.31, 0.34),
              "dpu_area_static": (0.02, 0.03), "dpu_area_dynamic": (-0.04, -0.02),
              "dpu_power": (0.10, 0.12)}
-    os.makedirs(os.path.join(os.path.dirname(__file__), "results"), exist_ok=True)
-    with open(os.path.join(os.path.dirname(__file__), "results", "fig13.json"), "w") as f:
-        json.dump({"model": rows, "paper_ranges": paper}, f, indent=1)
+    write_report("fig13", {"model": rows, "paper_ranges": paper},
+                 figure="13", metric="area/power savings model")
     print("name,us_per_call,derived")
     for r in rows:
         tag = f"L{r['L']}_{'dyn' if r['dynamic'] else 'static'}"

@@ -12,25 +12,44 @@ Prints ``name,us_per_call,derived`` CSV rows (one per benchmark case).
   roofline (§scale)  — printed separately via ``python -m benchmarks.roofline``
                        (reads benchmarks/results/dryrun.json from the dry-run)
 
+Every benchmark writes its artifact through ``common.write_report`` (the
+shared ``{meta, results}`` envelope: git rev, jax version/backend, argv,
+timestamp); this driver additionally writes ``results/run.json``
+summarizing the full sweep.
+
 The tiny-LM used by table1/fig10-12 is trained once and cached in-process.
 """
 from __future__ import annotations
 
 import sys
+import time
 
 
 def main() -> None:
     from benchmarks import (autotune_pareto, dynamic_p_sweep, fig10_dliq_sweep,
                             fig11_mip2q_sweep, fig12_accuracy_vs_compression,
                             fig13_efficiency, kernel_bench, table1_accuracy)
-    table1_accuracy.run()
-    fig10_dliq_sweep.run()
-    fig11_mip2q_sweep.run()
-    fig12_accuracy_vs_compression.run()
-    fig13_efficiency.run()
-    kernel_bench.run()
-    dynamic_p_sweep.run()   # beyond-paper: the paper's §VIII future work
-    autotune_pareto.run()   # beyond-paper: schedule search Pareto frontier
+    from benchmarks.common import write_report
+
+    suite = [
+        ("table1", table1_accuracy.run),
+        ("fig10", fig10_dliq_sweep.run),
+        ("fig11", fig11_mip2q_sweep.run),
+        ("fig12", fig12_accuracy_vs_compression.run),
+        ("fig13", fig13_efficiency.run),
+        ("kernel_bench", kernel_bench.run),
+        # beyond-paper: §VIII future work + schedule-search Pareto frontier
+        ("dynamic_p_sweep", dynamic_p_sweep.run),
+        ("autotune_pareto", autotune_pareto.run),
+    ]
+    summary = []
+    for name, fn in suite:
+        t0 = time.time()
+        out = fn()
+        summary.append({"benchmark": name,
+                        "wall_s": round(time.time() - t0, 3),
+                        "n_rows": len(out) if hasattr(out, "__len__") else 1})
+    write_report("run", summary)
 
 
 if __name__ == '__main__':

@@ -1,0 +1,92 @@
+"""CLI: ``python -m repro.analysis`` — run the static analysis suite.
+
+Exit code 1 iff any pass produced an ``error`` finding, so CI can gate on
+it directly.  Environment (host platform, device count, interpret-mode
+Pallas) is configured *before* jax is imported.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _parse_args(argv):
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static analysis for the StruM engine: packed-dataflow "
+                    "verification, registry audit, Pallas kernel lint, and "
+                    "recompile lint — all without running a kernel.")
+    ap.add_argument("--passes", default=",".join(
+        ("dataflow", "registry", "pallas", "recompile")),
+        help="comma-separated subset of dataflow,registry,pallas,recompile")
+    ap.add_argument("--arch", action="append", default=None,
+                    help="model-zoo architecture(s) for the scheduler-lane "
+                         "passes (default: qwen2_7b)")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="host platform device count (>=4 exercises a 2x2 "
+                         "data x model mesh)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the full report as JSON on stdout")
+    ap.add_argument("--coverage-table", action="store_true",
+                    help="print the registry coverage table (markdown)")
+    ap.add_argument("--min-severity", default="warning",
+                    choices=("error", "warning", "info"),
+                    help="lowest severity to print in text mode")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rules glossary and exit (no jax)")
+    return ap.parse_args(argv)
+
+
+def _list_rules() -> int:
+    from repro.analysis.report import RULES
+
+    width = max(len(r) for r in RULES)
+    for rule, text in sorted(RULES.items()):
+        print(f"{rule:<{width}}  {text}")
+    return 0
+
+
+def main(argv=None) -> int:
+    args = _parse_args(sys.argv[1:] if argv is None else argv)
+    if args.list_rules:
+        return _list_rules()
+
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    os.environ.setdefault("STRUM_INTERPRET", "1")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{args.devices}").strip()
+
+    from repro.analysis import registry_audit, suite
+
+    passes = tuple(p.strip() for p in args.passes.split(",") if p.strip())
+    unknown = set(passes) - set(suite.PASSES)
+    if unknown:
+        print(f"unknown pass(es): {', '.join(sorted(unknown))}",
+              file=sys.stderr)
+        return 2
+    arches = tuple(args.arch) if args.arch else ("qwen2_7b",)
+
+    report, audit_data = suite.run_all(arches=arches, passes=passes)
+
+    if args.json:
+        print(report.dumps())
+    else:
+        text = report.render(min_severity=args.min_severity)
+        if text:
+            print(text)
+        n_err, n_warn = len(report.errors()), len(report.warnings())
+        print(f"repro.analysis: {len(report.findings)} finding(s) "
+              f"({n_err} error(s), {n_warn} warning(s)) across "
+              f"{', '.join(passes)}")
+    if args.coverage_table and audit_data is not None:
+        print()
+        print(registry_audit.render_coverage(audit_data))
+    return 1 if report.errors() else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

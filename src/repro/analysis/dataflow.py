@@ -1,0 +1,302 @@
+"""Packed-dataflow verification: prove, from a jaxpr alone, that a program
+moves only packed StruM bytes where it claims to.
+
+The pass generalizes the ``all_gather`` byte walk that used to live in
+``repro.telemetry.jaxpr_stats`` (now a thin wrapper over this module) into
+a taint analysis over the traced program:
+
+* every input leaf reached through a ``mask`` / ``hi`` / ``lo`` pytree key
+  is tagged PACKED (and ``scale`` SCALE) at its leaf root;
+* taints propagate through equations, recursing into sub-jaxprs
+  (pjit / shard_map / scan / cond / pallas_call kernels);
+* the first equation that turns an integer PACKED value into floats is a
+  *decode site*; the enclosing (sub-)jaxpr is its *decode region*;
+* gather-class collectives (``all_gather`` / ``all_to_all`` /
+  ``ppermute``) are recorded with their operand bytes and taint state.
+
+Three invariants fall out (:func:`verify`):
+
+``dataflow/fp-collective``      a gather-class collective must move packed
+                                payload (or SCALE-tagged) bytes, never a
+                                DECODED operand — decoding *before* the
+                                gather is exactly the regression the
+                                ``sharded:*`` family exists to prevent.
+``dataflow/eq1-bytes``          the global packed bytes the gathers move
+                                must equal the leaf's mask+hi+lo payload —
+                                the paper's Eq.-1/2 wire cost.
+``dataflow/decode-multiplicity`` each payload leaf decodes in at most one
+                                program region (no re-materialized fp
+                                intermediates).
+
+Everything here is trace-time only: no kernel runs, no devices needed
+beyond what tracing requires (a 1-device mesh traces the same collectives
+with ``axis_size=1``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.analysis.report import Report
+
+__all__ = ["Taint", "CollectiveOp", "DataflowTrace", "trace_dataflow",
+           "collective_stats", "verify", "PAYLOAD_KEYS", "GATHER_COLLECTIVES"]
+
+PAYLOAD_KEYS = ("mask", "hi", "lo")
+SCALE_KEY = "scale"
+#: collectives that *move* operand bytes to other devices (a psum reduces
+#: partials — the row-parallel contraction — and is not byte-expansion)
+GATHER_COLLECTIVES = frozenset({"all_gather", "all_to_all", "ppermute"})
+
+PACKED, SCALE, DECODED = "packed", "scale", "decoded"
+_RANK = {None: 0, SCALE: 1, PACKED: 2, DECODED: 3}
+
+
+@dataclasses.dataclass(frozen=True)
+class Taint:
+    """Lattice value: ``state`` plus the payload-leaf tags it derives from."""
+
+    state: str
+    tags: frozenset = frozenset()
+
+
+def _join(taints) -> Optional[Taint]:
+    taints = [t for t in taints if t is not None]
+    if not taints:
+        return None
+    state = max((t.state for t in taints), key=_RANK.__getitem__)
+    tags = frozenset().union(*(t.tags for t in taints))
+    return Taint(state, tags)
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    """One traced collective with byte accounting and operand taint."""
+
+    primitive: str
+    shape: tuple
+    dtype: str
+    operand_bytes: int
+    gathered_bytes: int
+    state: Optional[str]          # taint state of the operand (None = clean)
+    tags: tuple
+
+
+@dataclasses.dataclass
+class DataflowTrace:
+    """Everything :func:`trace_dataflow` learned about one traced program."""
+
+    collectives: list
+    decode_regions: dict          # tag -> set of region ids
+    out_taints: list
+
+    def stats(self, mesh=None) -> dict:
+        """The legacy ``all_gather_stats`` dict (ops / operand_bytes /
+        gathered_bytes [, global_operand_bytes]) — what
+        :func:`repro.telemetry.all_gather_stats` returns."""
+        ops = [{"shape": o.shape, "dtype": o.dtype,
+                "operand_bytes": o.operand_bytes,
+                "gathered_bytes": o.gathered_bytes}
+               for o in self.collectives if o.primitive == "all_gather"]
+        out = {"ops": ops,
+               "operand_bytes": int(sum(o["operand_bytes"] for o in ops)),
+               "gathered_bytes": int(sum(o["gathered_bytes"] for o in ops))}
+        if mesh is not None:
+            n_dev = math.prod(dict(mesh.shape).values())
+            out["global_operand_bytes"] = out["operand_bytes"] * n_dev
+        return out
+
+    def packed_operand_bytes(self) -> int:
+        return int(sum(o.operand_bytes for o in self.collectives
+                       if o.primitive in GATHER_COLLECTIVES
+                       and o.state == PACKED))
+
+
+def _key_name(entry) -> Optional[str]:
+    """The string name of one pytree path entry (dict key / attr / index)."""
+    for attr in ("key", "name", "idx"):
+        if hasattr(entry, attr):
+            return str(getattr(entry, attr))
+    return str(entry)
+
+
+def _leaf_taint(path) -> Optional[Taint]:
+    """Payload taint of an input leaf from its pytree path: the last path
+    entry names the field, everything before it is the leaf root tag."""
+    if not path:
+        return None
+    field = _key_name(path[-1])
+    tag = "/".join(_key_name(p) for p in path[:-1]) or "<root>"
+    if field in PAYLOAD_KEYS:
+        return Taint(PACKED, frozenset({tag}))
+    if field == SCALE_KEY:
+        return Taint(SCALE, frozenset({tag}))
+    return None
+
+
+def _sub_jaxprs(params: dict):
+    """Yield every jaxpr nested in an eqn's params."""
+    for val in params.values():
+        vals = val if isinstance(val, (list, tuple)) else (val,)
+        for v in vals:
+            if hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):
+                yield v.jaxpr        # ClosedJaxpr
+            elif hasattr(v, "eqns"):
+                yield v              # raw Jaxpr
+
+
+def _is_float(aval) -> bool:
+    return np.issubdtype(np.dtype(aval.dtype), np.floating)
+
+
+def trace_dataflow(fn, *args, **kwargs) -> DataflowTrace:
+    """Trace ``fn(*args, **kwargs)`` and propagate payload taints through
+    its jaxpr.  Input tagging follows the pytree paths of ``(args,
+    kwargs)`` — any leaf under a ``mask``/``hi``/``lo`` key is PACKED,
+    under ``scale`` SCALE."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    leaves = jax.tree_util.tree_leaves_with_path((args, kwargs))
+
+    collectives: list = []
+    decode_regions: dict = {}
+    region_ids = itertools.count()
+
+    def read(env, atom):
+        return env.get(atom) if hasattr(atom, "aval") and not hasattr(
+            atom, "val") else None
+
+    def walk(jaxpr, env, region) -> Optional[Taint]:
+        for eqn in jaxpr.eqns:
+            in_taints = [read(env, v) for v in eqn.invars]
+            joined = _join(in_taints)
+            prim = eqn.primitive.name
+
+            if prim in GATHER_COLLECTIVES or prim == "all_gather":
+                aval = eqn.invars[0].aval
+                nbytes = int(np.prod(aval.shape)) * aval.dtype.itemsize
+                width = int(eqn.params.get("axis_size", 1))
+                t = in_taints[0]
+                collectives.append(CollectiveOp(
+                    primitive=prim, shape=tuple(aval.shape),
+                    dtype=str(aval.dtype), operand_bytes=nbytes,
+                    gathered_bytes=nbytes * width,
+                    state=t.state if t else None,
+                    tags=tuple(sorted(t.tags)) if t else ()))
+
+            subs = list(_sub_jaxprs(eqn.params))
+            if subs:
+                sub_results = []
+                for sub in subs:
+                    sub_env = {}
+                    for iv, t in zip(sub.invars, in_taints):
+                        if t is not None:
+                            sub_env[iv] = t
+                    sub_results.append(walk(sub, sub_env, next(region_ids)))
+                out_t = _join(sub_results + [joined if joined and
+                                             joined.state == DECODED
+                                             else None])
+                # sub-jaxpr outputs carry whatever the body derived; when
+                # the body decoded a payload, its outputs are DECODED even
+                # though the eqn inputs were PACKED
+                if out_t is None:
+                    out_t = joined
+            else:
+                out_t = joined
+                if joined is not None and joined.state in (PACKED, SCALE):
+                    int_packed = any(
+                        t is not None and t.state == PACKED
+                        and not _is_float(v.aval)
+                        for t, v in zip(in_taints, eqn.invars)
+                        if hasattr(v, "aval"))
+                    float_out = any(_is_float(v.aval) for v in eqn.outvars)
+                    if int_packed and float_out:
+                        out_t = Taint(DECODED, joined.tags)
+                        for tag in joined.tags:
+                            decode_regions.setdefault(tag, set()).add(region)
+            if out_t is not None:
+                for ov in eqn.outvars:
+                    env[ov] = out_t
+        outs = [read(env, v) for v in jaxpr.outvars]
+        if jaxpr.outvars and any(o is not None for o in outs):
+            return _join(outs)
+        # kernels (pallas_call) write through refs and have no outvars:
+        # fall back to the join of everything the body touched
+        return _join(env.values())
+
+    env0 = {}
+    for var, (path, _leaf) in zip(closed.jaxpr.invars, leaves):
+        t = _leaf_taint(path)
+        if t is not None:
+            env0[var] = t
+    out = walk(closed.jaxpr, env0, next(region_ids))
+    return DataflowTrace(collectives=collectives,
+                         decode_regions=decode_regions,
+                         out_taints=[out])
+
+
+def collective_stats(fn, *args, mesh=None, **kwargs) -> dict:
+    """Legacy byte accounting (the ``all_gather_stats`` contract), produced
+    by the dataflow walker."""
+    return trace_dataflow(fn, *args, **kwargs).stats(mesh=mesh)
+
+
+def verify(fn, *args, location: str = "<fn>", mesh=None,
+           expected_payload_bytes: Optional[int] = None,
+           cfg=None, k_dim: Optional[int] = None,
+           n_out: Optional[int] = None, **kwargs) -> Report:
+    """Run the dataflow pass over ``fn`` and report invariant violations.
+
+    ``expected_payload_bytes`` (usually ``mask.size + hi.size + lo.size`` of
+    the *global* leaf) arms the Eq.-1 byte check against the gathered
+    packed bytes; passing ``cfg`` (+ ``k_dim``/``n_out``) additionally pins
+    that payload to the paper's ``K x N x compression_ratio``.
+    """
+    report = Report()
+    trace = trace_dataflow(fn, *args, **kwargs)
+
+    for op in trace.collectives:
+        if op.primitive not in GATHER_COLLECTIVES:
+            continue
+        where = (f"{location}: {op.primitive} {op.shape} {op.dtype}"
+                 + (f" tags={list(op.tags)}" if op.tags else ""))
+        if op.state == DECODED:
+            report.add("error", "dataflow/fp-collective", where,
+                       f"collective moves {op.operand_bytes} decoded fp "
+                       f"bytes per device; gather the packed payload and "
+                       f"decode after the collective")
+        elif op.state is None and np.issubdtype(np.dtype(op.dtype),
+                                                np.floating):
+            report.add("warning", "dataflow/fp-collective", where,
+                       f"collective moves {op.operand_bytes} untagged "
+                       f"floating-point bytes per device (dense operand?)")
+
+    for tag, regions in trace.decode_regions.items():
+        if len(regions) > 1:
+            report.add("error", "dataflow/decode-multiplicity",
+                       f"{location}: {tag}",
+                       f"payload decoded in {len(regions)} distinct program "
+                       f"regions; decode exactly once")
+
+    if expected_payload_bytes is not None:
+        n_dev = math.prod(dict(mesh.shape).values()) if mesh is not None \
+            else 1
+        moved = trace.packed_operand_bytes() * n_dev
+        if moved != int(expected_payload_bytes):
+            report.add("error", "dataflow/eq1-bytes", location,
+                       f"gathers move {moved} global packed bytes, leaf "
+                       f"payload is {int(expected_payload_bytes)}")
+        if cfg is not None and k_dim is not None and n_out is not None \
+                and k_dim % cfg.w == 0:
+            eq1 = int(k_dim * n_out * cfg.compression_ratio)
+            if int(expected_payload_bytes) != eq1:
+                report.add("error", "dataflow/eq1-bytes", location,
+                           f"leaf payload {int(expected_payload_bytes)} B "
+                           f"!= Eq.-1 prediction {eq1} B "
+                           f"(K={k_dim} N={n_out} r="
+                           f"{cfg.compression_ratio:.4f})")
+    return report

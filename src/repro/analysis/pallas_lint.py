@@ -1,0 +1,193 @@
+"""Pallas kernel lint: abstract-eval every registered ``pallas:*`` /
+``cache:*`` variant and check its lowering contracts without running it.
+
+Tracing (``jax.make_jaxpr``) is enough: the kernels assert their tile
+contracts (``m % block_m == 0``, ``block_k % w == 0``, ``w % 8 == 0`` for
+the one-hot decode, BlockSpec index-map consistency) with *Python*
+asserts that fire at trace time, so a variant whose registry predicate
+admits a config its lowering rejects is caught here — with no kernel
+execution and no TPU.
+
+Payloads are built by the real packers (host-side, tiny arrays);
+activations stay abstract (``jax.ShapeDtypeStruct``).  On top of the
+per-variant sweep, the pass property-checks the shared tiling helpers
+(``ops._pick_block``, ``sharded._pick_m_pad``) directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.report import Report
+from repro.core.policy import StruMConfig
+from repro.engine.registry import LeafInfo, list_variants
+from repro.kernels.ops import _pick_block
+from repro.engine.sharded import _pick_m_pad
+
+__all__ = ["lint_pallas", "lint_block_contracts", "default_lint_cfgs"]
+
+
+def default_lint_cfgs() -> list:
+    """A small config sweep: enough to hit every decode family (one-hot,
+    maskfree, dense) per method at byte-aligned and default widths."""
+    cfgs = []
+    for w in (8, 16):
+        for p in (0.0, 0.5, 1.0):
+            for method in ("sparsity", "dliq", "mip2q"):
+                try:
+                    cfgs.append(StruMConfig(method=method, w=w, p=p, q=4))
+                except ValueError:
+                    continue
+    return cfgs
+
+
+def _dims_for(w: int) -> list:
+    """(m, k, n) probe shapes: aligned, deliberately ragged, and minimal —
+    the wrappers must pad all three into legal tiles."""
+    return [(8, 4 * w, 128), (5, 4 * w + 3, 96), (1, w, 257)]
+
+
+def _trace(fn, *arg_structs):
+    return jax.make_jaxpr(fn)(*arg_structs)
+
+
+def _classify(exc: Exception) -> str:
+    if isinstance(exc, AssertionError):
+        return "pallas/tile-misaligned"
+    msg = str(exc).lower()
+    if any(s in msg for s in ("block", "tile", "divis", "align", "grid")):
+        return "pallas/tile-misaligned"
+    return "pallas/abstract-eval"
+
+
+def _lint_matmul_variant(variant, cfg: StruMConfig, report: Report) -> None:
+    from repro.core.apply import pack_array
+    from repro.models.quantize import _pack_leaf
+    from repro.core import packing
+
+    for m, k, n in _dims_for(cfg.w):
+        lead = (3,) if variant.grouped else ()
+        info = LeafInfo(k_dim=k, n_out=n, lead=lead)
+        if not variant.supports(cfg, info):
+            continue
+        where = (f"{variant.name} cfg=({cfg.method} w={cfg.w} "
+                 f"n_low={cfg.n_low} q={cfg.q}) dims=({m},{k},{n})"
+                 + (" stacked" if lead else ""))
+        try:
+            if variant.grouped:
+                wleaf = _pack_leaf(np.zeros(lead + (k, n), np.float32), cfg)
+                packed = packing.PackedStruM(
+                    method=cfg.method, w=cfg.w, n_low=cfg.n_low, q=cfg.q,
+                    L=cfg.L, k_dim=k, scale=wleaf["scale"],
+                    mask=wleaf["mask"], hi=wleaf["hi"], lo=wleaf["lo"])
+                x = jax.ShapeDtypeStruct(lead + (m, k), jnp.float32)
+                want = lead + (m, n)
+            else:
+                packed = pack_array(np.zeros((k, n), np.float32), cfg)
+                x = jax.ShapeDtypeStruct((m, k), jnp.float32)
+                want = (m, n)
+            jaxpr = _trace(
+                lambda a: variant.fn(a, packed, out_dtype=jnp.float32,
+                                     interpret=True,
+                                     accum_dtype=jnp.float32), x)
+        except Exception as exc:  # noqa: BLE001 - lint classifies anything
+            report.add("error", _classify(exc), where,
+                       f"{type(exc).__name__}: {exc}")
+            continue
+        out = jaxpr.out_avals[0]
+        if tuple(out.shape) != want or out.dtype != jnp.float32:
+            report.add("error", "pallas/output-mismatch", where,
+                       f"traced output {tuple(out.shape)} {out.dtype}, "
+                       f"dispatch contract wants {want} float32")
+
+
+def _lint_cache_variant(variant, cfg: Optional[StruMConfig],
+                        report: Report) -> None:
+    from repro.engine.cache import encode_page, _is_identity
+
+    page, feat, lead = 64, 32, (2,)
+    info = LeafInfo(k_dim=page, n_out=feat, cache=True)
+    if not variant.supports(cfg, info):
+        return
+    where = (f"{variant.name} cfg="
+             + (f"({cfg.method} w={cfg.w} q={cfg.q})" if cfg else "None")
+             + f" page={page} feat={feat}")
+    try:
+        if cfg is None or _is_identity(cfg):
+            leaf = {"pages": jax.ShapeDtypeStruct(lead + (page, feat),
+                                                  jnp.float32)}
+        else:
+            structs = jax.eval_shape(
+                functools.partial(encode_page, cfg=cfg),
+                jax.ShapeDtypeStruct((page, feat), jnp.float32))
+            leaf = {k: jax.ShapeDtypeStruct(lead + tuple(v.shape), v.dtype)
+                    for k, v in structs.items()}
+        jaxpr = jax.make_jaxpr(
+            lambda lf: variant.fn(lf, cfg=cfg, page_size=page,
+                                  out_dtype=jnp.float32, interpret=True)
+        )(leaf)
+    except Exception as exc:  # noqa: BLE001 - lint classifies anything
+        report.add("error", _classify(exc), where,
+                   f"{type(exc).__name__}: {exc}")
+        return
+    out = jaxpr.out_avals[0]
+    if tuple(out.shape) != lead + (page, feat) or out.dtype != jnp.float32:
+        report.add("error", "pallas/output-mismatch", where,
+                   f"traced output {tuple(out.shape)} {out.dtype}, decode "
+                   f"contract wants {lead + (page, feat)} float32")
+
+
+def lint_block_contracts() -> Report:
+    """Property-check the shared tiling helpers over an adversarial grid."""
+    report = Report()
+    for dim in (1, 3, 8, 100, 129, 256, 1000):
+        for pref in (8, 128, 256):
+            for align in (8, 16, 128):
+                res = _pick_block(dim, pref, align)
+                padded = -(-dim // align) * align
+                ok = (res % align == 0 and res >= align
+                      and res <= max(align, (pref // align) * align)
+                      and res <= max(align, padded))
+                if not ok:
+                    report.add(
+                        "error", "pallas/block-contract",
+                        f"_pick_block({dim}, {pref}, {align})",
+                        f"returned {res}; want an align-multiple in "
+                        f"[{align}, min(pref, padded axis)]")
+    for m in (1, 3, 8, 17, 64):
+        for n_fsdp in (1, 2, 4, 8):
+            pad = _pick_m_pad(m, n_fsdp)
+            ok = (pad == 0 if n_fsdp <= 1
+                  else (0 <= pad < n_fsdp and (m + pad) % n_fsdp == 0))
+            if not ok:
+                report.add("error", "pallas/block-contract",
+                           f"_pick_m_pad({m}, {n_fsdp})",
+                           f"returned {pad}; want the minimal pad making "
+                           f"M divide the FSDP width")
+    return report
+
+
+def lint_pallas(cfgs: Optional[list] = None,
+                variants: Optional[list] = None) -> Report:
+    """Abstract-eval sweep over every ``pallas``-family matmul variant and
+    every ``cache:*`` codec (plus the block-contract properties).
+
+    ``variants`` narrows the sweep to the named variants (the seeded-defect
+    tests lint exactly their planted registration).
+    """
+    cfgs = default_lint_cfgs() if cfgs is None else cfgs
+    report = lint_block_contracts() if variants is None else Report()
+    for name, variant in sorted(list_variants().items()):
+        if variants is not None and name not in variants:
+            continue
+        if variant.cache:
+            for cfg in list(cfgs) + [None]:
+                _lint_cache_variant(variant, cfg, report)
+        elif variant.family == "pallas" and not variant.sharded:
+            for cfg in cfgs:
+                _lint_matmul_variant(variant, cfg, report)
+    return report

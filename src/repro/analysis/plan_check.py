@@ -1,0 +1,79 @@
+"""Plan validation: the opt-in ``build_plan(..., validate=True)`` hook.
+
+Light static checks over a freshly built :class:`ExecutionPlan` — cheap
+enough to run at plan-build time in serving bring-up:
+
+``plan/selection-drift``  re-running selection under the entry's recorded
+                          backend picks a different variant (a registry
+                          mutation between build and validate, or a
+                          non-deterministic predicate);
+``plan/payload-shape``    packed field geometry or dtypes disagree with
+                          ``packing.field_dims`` for the entry's config;
+``plan/k-dim``            the recorded reduction dim does not fit the
+                          payload's block count.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.report import Report
+from repro.core import packing
+from repro.engine.registry import LeafInfo, select_variant
+
+__all__ = ["validate_plan"]
+
+_FIELD_DTYPES = {"mask": np.uint8, "hi": np.int8, "lo": np.uint8}
+
+
+def validate_plan(plan) -> Report:
+    from repro.engine.plan import _is_expert_stack
+
+    report = Report()
+    for name, e in plan.entries.items():
+        # exec-lead convention from build_plan: scan-group lead dims are
+        # sliced away before dispatch; only MoE expert stacks keep theirs
+        lead = (tuple(e.shape[:-2])
+                if e.layout == "serve" and _is_expert_stack(name) else ())
+        shard = e.shard
+        info = LeafInfo(
+            k_dim=e.shape[-2], n_out=e.shape[-1], lead=lead, name=name,
+            fsdp=tuple(shard.fsdp_axes) if shard is not None else (),
+            tp_pattern=shard.tp_pattern if shard is not None else None)
+        try:
+            reselected = select_variant(e.cfg, info, backend=e.backend).name
+        except LookupError:
+            reselected = None
+        if reselected != e.variant:
+            report.add("error", "plan/selection-drift", name,
+                       f"plan recorded {e.variant!r}, selection now yields "
+                       f"{reselected!r} under backend={e.backend!r}")
+
+        if e.leaf is None:
+            continue
+        cfg = e.cfg
+        k_dim = e.shape[-2]
+        nb = e.leaf["mask"].shape[-3]
+        if not (nb * cfg.w >= k_dim > (nb - 1) * cfg.w):
+            report.add("error", "plan/k-dim", name,
+                       f"recorded K={k_dim} does not fit {nb} blocks of "
+                       f"w={cfg.w}")
+        mb, nh, lb = packing.field_dims(cfg.w, cfg.n_low, cfg.q, cfg.method)
+        rows = {"mask": mb, "hi": nh, "lo": lb}
+        n_out = e.leaf["scale"].shape[-1]
+        for field, want_rows in rows.items():
+            arr = e.leaf[field]
+            if arr.shape[-3] != nb or arr.shape[-2] != want_rows \
+                    or arr.shape[-1] != n_out:
+                report.add(
+                    "error", "plan/payload-shape", f"{name}/{field}",
+                    f"shape {tuple(arr.shape)}; field_dims want "
+                    f"(..., {nb}, {want_rows}, {n_out})")
+            if np.dtype(arr.dtype) != _FIELD_DTYPES[field]:
+                report.add(
+                    "error", "plan/payload-shape", f"{name}/{field}",
+                    f"dtype {arr.dtype}; packed payload fields must be "
+                    f"{_FIELD_DTYPES[field].__name__}")
+        if not np.issubdtype(np.dtype(e.leaf["scale"].dtype), np.floating):
+            report.add("error", "plan/payload-shape", f"{name}/scale",
+                       f"dtype {e.leaf['scale'].dtype}; scales are float")
+    return report

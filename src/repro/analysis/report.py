@@ -1,0 +1,143 @@
+"""Findings and reports: the one output format every analysis pass emits.
+
+Deliberately jax-free (like ``repro.telemetry.check``): a CI job or a test
+can import the report machinery, render results, and gate on severities
+without initializing a backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Iterable, Optional
+
+__all__ = ["Finding", "Report", "RULES", "SEVERITIES"]
+
+SEVERITIES = ("error", "warning", "info")
+
+#: rule id -> one-line description (the README glossary is generated from
+#: this table, so a rule cannot ship without documentation)
+RULES = {
+    "dataflow/fp-collective":
+        "a gather-class collective (all_gather/all_to_all/ppermute) moves "
+        "decoded floating-point bytes instead of packed payload bytes",
+    "dataflow/eq1-bytes":
+        "the packed bytes a collective moves disagree with the Eq.-1/2 "
+        "prediction (K x N x compression_ratio) for the leaf",
+    "dataflow/decode-multiplicity":
+        "one payload leaf is decoded in more than one program region — the "
+        "fp intermediate is re-materialized instead of decoded exactly once",
+    "cache/fp-page":
+        "a packed cache pool stores a floating-point payload field — fp "
+        "bytes leak out of sealed pages",
+    "registry/no-variant":
+        "no registered kernel variant supports a (config, context) point of "
+        "the capability grid",
+    "registry/unreachable-variant":
+        "a registered variant's predicate accepts no point of the "
+        "capability grid (dead predicate or grid hole)",
+    "registry/shadowed-variant":
+        "a variant is never selected: everywhere its predicate accepts, a "
+        "higher-(priority, name) variant in the same partition also accepts",
+    "registry/priority-overlap":
+        "two variants in the same family/partition share a priority and "
+        "both accept some grid point — selection falls back to name order",
+    "registry/coverage-hole":
+        "a requested pallas backend falls through to the xla family "
+        "(dequant fallback) for a grid point",
+    "pallas/tile-misaligned":
+        "a Pallas lowering's tile/grid contract (block alignment, "
+        "divisibility) rejects a config its registry predicate accepts",
+    "pallas/abstract-eval":
+        "abstract evaluation (trace, no execution) of a Pallas variant "
+        "failed",
+    "pallas/output-mismatch":
+        "a variant's traced output shape/dtype disagrees with the dispatch "
+        "contract (M, N) in the requested dtype",
+    "pallas/block-contract":
+        "ops._pick_block / sharded._pick_m_pad violated their alignment "
+        "contract for some (dim, pref, align) point",
+    "recompile/lane-retrace":
+        "a scheduler lane executable compiled more than once across a "
+        "mixed-length workload — the PR-5 fixed-shape invariant regressed",
+    "plan/selection-drift":
+        "re-running variant selection for a plan entry under its recorded "
+        "backend picks a different variant than the plan recorded",
+    "plan/payload-shape":
+        "a plan entry's packed payload field shapes disagree with "
+        "packing.field_dims for its config",
+    "plan/k-dim":
+        "a plan entry's recorded reduction dim disagrees with its payload "
+        "geometry",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analysis result: ``severity`` in {error, warning, info}."""
+
+    severity: str
+    rule: str
+    location: str
+    detail: str
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"severity {self.severity!r} not in {SEVERITIES}")
+        if self.rule not in RULES:
+            raise ValueError(f"unknown rule {self.rule!r}; add it to "
+                             f"analysis.report.RULES")
+
+    def render(self) -> str:
+        return f"[{self.severity}] {self.rule} @ {self.location}: {self.detail}"
+
+
+@dataclasses.dataclass
+class Report:
+    """An ordered collection of findings with severity accessors."""
+
+    findings: list = dataclasses.field(default_factory=list)
+
+    def add(self, severity: str, rule: str, location: str, detail: str) -> None:
+        self.findings.append(Finding(severity, rule, location, detail))
+
+    def extend(self, other: "Report") -> "Report":
+        self.findings.extend(other.findings)
+        return self
+
+    def errors(self) -> list:
+        return [f for f in self.findings if f.severity == "error"]
+
+    def warnings(self) -> list:
+        return [f for f in self.findings if f.severity == "warning"]
+
+    def by_rule(self, rule: str) -> list:
+        return [f for f in self.findings if f.rule == rule]
+
+    @property
+    def ok(self) -> bool:
+        return not self.errors()
+
+    def to_json(self) -> dict:
+        counts = {s: 0 for s in SEVERITIES}
+        for f in self.findings:
+            counts[f.severity] += 1
+        return {"counts": counts,
+                "findings": [dataclasses.asdict(f) for f in self.findings]}
+
+    def render(self, min_severity: str = "info") -> str:
+        keep = SEVERITIES[:SEVERITIES.index(min_severity) + 1]
+        lines = [f.render() for f in self.findings if f.severity in keep]
+        c = self.to_json()["counts"]
+        lines.append(f"{c['error']} error(s), {c['warning']} warning(s), "
+                     f"{c['info']} info")
+        return "\n".join(lines)
+
+    def dumps(self, indent: Optional[int] = 1) -> str:
+        return json.dumps(self.to_json(), indent=indent)
+
+    @staticmethod
+    def merged(reports: Iterable["Report"]) -> "Report":
+        out = Report()
+        for r in reports:
+            out.extend(r)
+        return out

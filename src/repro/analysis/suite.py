@@ -1,0 +1,262 @@
+"""The representative verification suite behind ``python -m repro.analysis``.
+
+Builds small-but-real instances of every jitted entry point the engine
+serves — local ``engine.apply`` dispatch, each registered ``sharded:*``
+variant under col/row TP layouts, the ``cache:*`` page codecs, and the
+scheduler's serving lanes — and runs the four analysis passes over them:
+
+* packed-dataflow verification (:mod:`repro.analysis.dataflow`),
+* registry audit (:mod:`repro.analysis.registry_audit`),
+* Pallas kernel lint (:mod:`repro.analysis.pallas_lint`),
+* recompile lint (:mod:`repro.analysis.recompile`).
+
+Everything except the recompile pass is trace-only.  The sharded scenarios
+prove the Eq.-1 collective-byte invariant statically for *every* variant in
+the ``sharded:*`` family, on whatever device count is available — a
+1-device mesh traces the same ``all_gather`` equations with
+``axis_size=1``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis import dataflow, pallas_lint, recompile, registry_audit
+from repro.analysis.report import Report
+from repro.core.policy import StruMConfig
+
+__all__ = ["PASSES", "run_all", "tiny_model", "verify_local_apply",
+           "verify_sharded_variants", "verify_cache_codecs",
+           "verify_scheduler_lanes", "check_cache_pools"]
+
+PASSES = ("dataflow", "registry", "pallas", "recompile")
+
+_WCFG = StruMConfig(method="mip2q", w=16, p=0.5, L=5)
+_KVCFG = StruMConfig(method="dliq", w=16, p=0.5, q=4)
+
+
+def tiny_model(arch: str = "qwen2_7b"):
+    """(ModelConfig, float32 params) for a smoke-scale architecture."""
+    import dataclasses
+
+    from repro.configs import get_smoke_config
+    from repro.models import model_defs
+    from repro.models.params import init_params
+
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+    params = init_params(model_defs(cfg), seed=0, dtype_override="float32")
+    return cfg, params
+
+
+def _payload_bytes(wleaf: dict) -> int:
+    return int(sum(wleaf[k].size for k in ("mask", "hi", "lo")))
+
+
+def _leaf(k: int, n: int, cfg: StruMConfig, lead: tuple = ()) -> dict:
+    from repro.models.quantize import _pack_leaf
+
+    return _pack_leaf(np.zeros(lead + (k, n), np.float32), cfg)
+
+
+# ------------------------------------------------------------- scenarios --
+
+def verify_local_apply(backend: Optional[str] = "interpret") -> Report:
+    """Single-device dispatch: decode-exactly-once, no collectives."""
+    from repro.engine.dispatch import dispatch
+
+    report = Report()
+    k, n = 64, 128
+    for cfg, label in ((_WCFG, "mip2q"), (_KVCFG, "dliq"),
+                       (StruMConfig(method="sparsity", w=16, p=0.5),
+                        "sparsity")):
+        wleaf = _leaf(k, n, cfg)
+        report.extend(dataflow.verify(
+            lambda lf, x: dispatch(lf, x, strum=cfg, backend=backend),
+            wleaf, jax.ShapeDtypeStruct((4, k), jnp.float32),
+            location=f"engine.apply[{label}]"))
+    return report
+
+
+def _mesh_2d():
+    n = len(jax.devices())
+    if n >= 4:
+        return jax.make_mesh((2, 2), ("data", "model"))
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def _mesh_1d():
+    n = len(jax.devices())
+    return jax.make_mesh((2 if n >= 2 else 1,), ("data",))
+
+
+def verify_sharded_variants(cfg: StruMConfig = _WCFG) -> Report:
+    """Statically prove the Eq.-1 gather invariant for every registered
+    ``sharded:*`` variant (packed-only collectives, decode-once, global
+    gathered bytes == mask+hi+lo == K x N x compression_ratio)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.engine.registry import list_variants
+    from repro.models.sharding import shard_map
+
+    report = Report()
+    k, n = 128, 256
+
+    for name, variant in sorted(list_variants().items()):
+        if not variant.sharded:
+            continue
+        if variant.grouped:
+            mesh = _mesh_1d()
+            fsdp = ("data",)
+            lead = (2,)
+            wleaf = _leaf(k, n, cfg, lead=lead)
+            x = jnp.zeros(lead + (4, k), jnp.float32)
+            pay_spec = P(None, fsdp, None, None)
+            leaf_specs = {"mask": pay_spec, "hi": pay_spec, "lo": pay_spec,
+                          "scale": P(None, None, None)}
+
+            def run(lf, xg, _v=variant, _fsdp=fsdp):
+                return _v.fn(lf, xg, cfg=cfg, mesh=None, fsdp=_fsdp,
+                             pattern=None, k_dim=k, backend="interpret",
+                             interpret=True, accum_dtype=jnp.float32,
+                             out_dtype=jnp.float32)
+
+            fn = shard_map(
+                run, mesh=mesh, in_specs=(leaf_specs, P(None, None, None)),
+                out_specs=P(None, None, None), check_vma=False)
+            report.extend(dataflow.verify(
+                fn, wleaf, x, location=name, mesh=mesh,
+                expected_payload_bytes=_payload_bytes(wleaf),
+                cfg=cfg, k_dim=k, n_out=n * lead[0]))
+            continue
+
+        mesh = _mesh_2d()
+        fsdp = ("data",)
+        wleaf = _leaf(k, n, cfg)
+        backend = "interpret" if variant.family == "pallas" else None
+        for pattern in ("col", "row"):
+            fn = functools.partial(
+                variant.fn, cfg=cfg, mesh=mesh, fsdp=fsdp, pattern=pattern,
+                k_dim=k, backend=backend, interpret=True,
+                accum_dtype=jnp.float32, out_dtype=jnp.float32)
+            report.extend(dataflow.verify(
+                fn, wleaf, jnp.zeros((4, k), jnp.float32),
+                location=f"{name}[{pattern}]", mesh=mesh,
+                expected_payload_bytes=_payload_bytes(wleaf),
+                cfg=cfg, k_dim=k, n_out=n))
+    return report
+
+
+def verify_cache_codecs(kv: StruMConfig = _KVCFG) -> Report:
+    """Packed page pools: decode-once, no fp payload fields, and payload
+    bytes at the Eq.-1 page ratio."""
+    from repro.engine import cache as cache_mod
+
+    report = Report()
+    page, feat, n_pages = 64, 32, 8
+    for backend in (None, "interpret"):
+        spec = cache_mod.build_cache_spec(kv, page_size=page, feat=feat,
+                                          backend=backend)
+        structs = jax.eval_shape(
+            functools.partial(cache_mod.encode_page, cfg=kv),
+            jax.ShapeDtypeStruct((page, feat), jnp.float32))
+        pool = {f: jax.ShapeDtypeStruct((n_pages,) + tuple(s.shape), s.dtype)
+                for f, s in structs.items()}
+        loc = f"cache.gather_decode_pages[{spec.variant}]"
+        for f in ("mask", "hi", "lo"):
+            if np.issubdtype(np.dtype(pool[f].dtype), np.floating):
+                report.add("error", "cache/fp-page", f"{loc}/{f}",
+                           f"payload pool field is {pool[f].dtype}")
+        report.extend(dataflow.verify(
+            lambda p, ids, _s=spec, _b=backend: cache_mod.gather_decode_pages(
+                p, ids, _s, backend=_b),
+            pool, jax.ShapeDtypeStruct((2, 3), jnp.int32), location=loc))
+        want = cache_mod.page_payload_bytes(page, feat, kv)
+        got = sum(int(np.prod(pool[f].shape)) // n_pages
+                  for f in ("mask", "hi", "lo"))
+        if got != want:
+            report.add("error", "dataflow/eq1-bytes", loc,
+                       f"page payload {got} B != page_payload_bytes {want}")
+    return report
+
+
+def check_cache_pools(pools: dict, spec, location: str) -> Report:
+    """No fp bytes inside sealed packed pages (the pool-side static check)."""
+    from jax.tree_util import keystr, tree_leaves_with_path
+
+    report = Report()
+    if not getattr(spec, "packed", False):
+        return report
+    for path, arr in tree_leaves_with_path(pools):
+        field = getattr(path[-1], "key", str(path[-1]))
+        if field == "scale":
+            continue
+        if np.issubdtype(np.dtype(arr.dtype), np.floating):
+            report.add("error", "cache/fp-page",
+                       f"{location}{keystr(path)}",
+                       f"packed pool stores {arr.dtype} — fp bytes leak "
+                       f"out of sealed pages")
+    return report
+
+
+def build_tiny_scheduler(cfg, params, *, kv=_KVCFG, wcfg=_WCFG,
+                         n_slots: int = 2, max_len: int = 48):
+    """A packed-weights, packed-KV scheduler for lane analysis."""
+    from repro import engine
+    from repro.serving import BatchScheduler
+
+    plan = engine.build_plan(params, cfg=wcfg, float_only=True)
+    return BatchScheduler(cfg, params, n_slots=n_slots, max_len=max_len,
+                          plan=plan, kv_cache=kv, page_size=kv.w)
+
+
+def verify_scheduler_lanes(sched, location: str = "scheduler") -> Report:
+    """Trace both serving lanes (no execution) and run the dataflow pass:
+    weights and sealed pages decode exactly once, nothing gathers fp."""
+    report = check_cache_pools(sched.pools, sched.spec,
+                               f"{location}/pools")
+    ns, pps = sched.n_slots, sched.pages_per_seq
+    table = jnp.zeros((ns, pps), jnp.int32)
+    report.extend(dataflow.verify(
+        sched._decode, sched.params,
+        jnp.zeros((ns, 1), jnp.int32), sched.pools, sched.hot,
+        jnp.zeros((ns,), jnp.int32), table,
+        jnp.ones((ns,), bool), location=f"{location}/decode-lane"))
+    report.extend(dataflow.verify(
+        sched._chunk_prefill, sched.params,
+        jnp.zeros((1, sched.prefill_chunk), jnp.int32), sched.pools,
+        sched.hot, table, jnp.int32(0), jnp.int32(0), jnp.int32(1),
+        location=f"{location}/prefill-lane"))
+    return report
+
+
+# --------------------------------------------------------------- runner --
+
+def run_all(arches=("qwen2_7b",), passes=PASSES,
+            lint_cfgs: Optional[list] = None):
+    """Run the requested passes; returns ``(Report, AuditData | None)``."""
+    report = Report()
+    audit_data = None
+    if "registry" in passes:
+        r, audit_data = registry_audit.audit_registry()
+        report.extend(r)
+    if "pallas" in passes:
+        report.extend(pallas_lint.lint_pallas(cfgs=lint_cfgs))
+    if "dataflow" in passes:
+        report.extend(verify_local_apply())
+        report.extend(verify_sharded_variants())
+        report.extend(verify_cache_codecs())
+    if "dataflow" in passes or "recompile" in passes:
+        for arch in arches:
+            cfg, params = tiny_model(arch)
+            sched = build_tiny_scheduler(cfg, params)
+            if "dataflow" in passes:
+                report.extend(verify_scheduler_lanes(
+                    sched, location=f"{arch}/scheduler"))
+            if "recompile" in passes:
+                report.extend(recompile.lint_scheduler_recompiles(
+                    sched=sched, location=f"{arch}/scheduler"))
+    return report, audit_data

@@ -28,14 +28,14 @@ own int8 scale, matching the paper's per-output-channel scheme.
 from __future__ import annotations
 
 import warnings
-from typing import Any, Callable, Optional
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import blocking, packing
 from repro.core.policy import LayerPolicy, StruMConfig, default_policy
-from repro.core.quantizers import int8_symmetric, n_low_for_p, quantize_blocks
+from repro.core.quantizers import int8_symmetric, quantize_blocks
 
 __all__ = [
     "fake_quantize_array",

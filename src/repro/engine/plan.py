@@ -197,12 +197,24 @@ def _is_expert_stack(name: str) -> bool:
     return "/moe/" in name and name.rsplit("/", 1)[-1] in ("wi", "wg", "wo")
 
 
+def _maybe_validate(plan: "ExecutionPlan", validate: bool) -> "ExecutionPlan":
+    if not validate:
+        return plan
+    from repro.analysis import validate_plan
+    report = validate_plan(plan)
+    if report.errors():
+        raise ValueError("build_plan(validate=True) failed:\n"
+                         + report.render(min_severity="warning"))
+    return plan
+
+
 def build_plan(params: Any, *, schedule: Any = None,
                policy: Optional[LayerPolicy] = None,
                cfg: Optional[StruMConfig] = None,
                backend: Optional[str] = None, scope: str = "model",
                float_only: bool = False, pack: bool = True,
-               mesh=None, rules=None) -> ExecutionPlan:
+               mesh=None, rules=None,
+               validate: bool = False) -> ExecutionPlan:
     """Build an :class:`ExecutionPlan` from ``(params, schedule)``.
 
     Precedence: ``schedule`` (per-tensor table) > ``policy`` > uniform
@@ -217,6 +229,12 @@ def build_plan(params: Any, *, schedule: Any = None,
     family — the compressed-gather datapaths.  Only axis *names* are
     recorded, so the plan stays serializable/jit-static and also serves
     single-device (dispatch re-selects when no mesh arrives at call time).
+
+    ``validate=True`` runs :func:`repro.analysis.validate_plan` over the
+    finished plan (selection drift, payload geometry vs
+    ``packing.field_dims``, K-vs-block-count) and raises ``ValueError``
+    with the rendered findings if any check fails — cheap enough for
+    serving bring-up paths.
     """
     if scope not in ("model", "tree"):
         raise ValueError(f"scope={scope!r}")
@@ -288,9 +306,11 @@ def build_plan(params: Any, *, schedule: Any = None,
             return packed if pack else leaf
 
         out = jax.tree_util.tree_map_with_path(visit, params)
-        return ExecutionPlan(entries=entries, params=out, backend=backend,
-                             scope="model", schedule=schedule,
-                             meta={"fsdp_axes": fsdp} if fsdp else {})
+        return _maybe_validate(
+            ExecutionPlan(entries=entries, params=out, backend=backend,
+                          scope="model", schedule=schedule,
+                          meta={"fsdp_axes": fsdp} if fsdp else {}),
+            validate)
 
     # scope == "tree": flat manifest, column-folded packing
     from repro.core.apply import pack_array
@@ -313,8 +333,9 @@ def build_plan(params: Any, *, schedule: Any = None,
         else:
             _entry(name, leaf, leaf_cfg, "folded", None)
             out[name] = leaf
-    return ExecutionPlan(entries=entries, params=out, backend=backend,
-                         scope="tree", schedule=schedule)
+    return _maybe_validate(
+        ExecutionPlan(entries=entries, params=out, backend=backend,
+                      scope="tree", schedule=schedule), validate)
 
 
 def fake_quantize(params: Any, *, schedule: Any = None,

@@ -249,8 +249,9 @@ def all_gather_stats(fn, *args, mesh=None, **kwargs) -> dict:
 
     Collective byte accounting is a measurement, so it lives in the
     telemetry layer now (where it also feeds the ``collective/*`` counters
-    of any active recorder).  Same signature, same return dict.  Follows
-    the README shim-removal timeline: deleted two PRs after this one.
+    of any active recorder; the walk itself is ``repro.analysis.dataflow``).
+    Same signature, same return dict.  Follows the README shim-removal
+    timeline: deleted in the next PR.
     """
     import warnings
     warnings.warn(

@@ -29,7 +29,7 @@ from repro import telemetry
 from repro.configs.base import get_config, get_smoke_config
 from repro.core.policy import StruMConfig
 from repro.launch.steps import make_decode_step, make_prefill_step
-from repro.models import cache_defs, model_defs
+from repro.models import model_defs
 from repro.models.params import init_params
 from repro.models.quantize import serve_tree_bytes
 

@@ -13,8 +13,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.models import cache_defs, model_defs
 from repro.models.params import abstract_params, param_shardings
-from repro.models.sharding import (Rules, fsdp_axes, rules_for_mesh,
-                                   spec_for_axes)
+from repro.models.sharding import Rules, fsdp_axes, rules_for_mesh
 from repro.optim.adamw import OptState
 
 __all__ = ["input_specs", "input_shardings", "batch_axes", "padded_cache_len"]

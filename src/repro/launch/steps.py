@@ -6,11 +6,9 @@ run in tests.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import transformer as tfm
 from repro.models.sharding import Rules, rules_for_mesh

@@ -18,7 +18,6 @@ import os
 import sys
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import get_config, get_smoke_config
 from repro.data.pipeline import DataConfig, global_batch

@@ -15,13 +15,11 @@ collectives:
 from __future__ import annotations
 
 import math
-from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.layers import apply_rope, linear, linear_def
-from repro.models.params import ParamDef
 
 __all__ = ["attn_def", "attention", "decode_attention", "init_cache_spec",
            "decode_attention_paged", "prefill_attention_paged"]

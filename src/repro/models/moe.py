@@ -25,13 +25,11 @@ all experts and no collectives.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.models.layers import linear
 from repro.models.params import ParamDef
 
 __all__ = ["moe_def", "moe_apply"]

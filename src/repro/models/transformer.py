@@ -12,7 +12,7 @@ group body.
 from __future__ import annotations
 
 import math
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

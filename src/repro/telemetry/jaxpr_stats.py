@@ -1,35 +1,17 @@
-"""Static byte accounting of collectives, by jaxpr inspection.
+"""Static byte accounting of collectives — telemetry front-end.
 
-Moved here from ``repro.engine.sharded`` (which keeps a deprecation shim):
-collective byte accounting is a *measurement*, and this is the measurement
-layer.  Unlike the runtime counters in :mod:`repro.telemetry.recorder`,
-these numbers come from tracing a function and walking its jaxpr — they
-are exact for a given program, independent of how often it runs.
-
-When a recorder is active, :func:`all_gather_stats` also folds its totals
-into the ``collective/all_gather/*`` counters, so a traced-and-accounted
-dispatch shows up in the same trace file as everything else.
+The jaxpr walk itself now lives in :mod:`repro.analysis.dataflow` (where
+it grew into a full taint analysis); this module keeps the measurement
+contract: the same ``all_gather_stats`` dict as always, plus folding the
+totals into the ``collective/all_gather/*`` counters of any active
+recorder, so a traced-and-accounted dispatch shows up in the same trace
+file as everything else.
 """
 from __future__ import annotations
-
-import math
-
-import jax
-import numpy as np
 
 from repro.telemetry import recorder as _rec
 
 __all__ = ["all_gather_stats"]
-
-
-def _sub_jaxprs(val):
-    """Yield every jaxpr nested in an eqn param value."""
-    vals = val if isinstance(val, (list, tuple)) else (val,)
-    for v in vals:
-        if hasattr(v, "jaxpr"):        # ClosedJaxpr
-            yield v.jaxpr
-        elif hasattr(v, "eqns"):       # raw Jaxpr
-            yield v
 
 
 def all_gather_stats(fn, *args, mesh=None, **kwargs) -> dict:
@@ -45,32 +27,11 @@ def all_gather_stats(fn, *args, mesh=None, **kwargs) -> dict:
     --sharded`` assert/report.  (An operand *replicated* along a mesh axis,
     e.g. the row-pattern scale gather, is counted once per replica.)
     """
-    jaxpr = jax.make_jaxpr(fn)(*args, **kwargs)
-    ops = []
+    from repro.analysis.dataflow import collective_stats
 
-    def walk(jx):
-        for eqn in jx.eqns:
-            if eqn.primitive.name == "all_gather":
-                aval = eqn.invars[0].aval
-                nbytes = int(np.prod(aval.shape)) * aval.dtype.itemsize
-                width = int(eqn.params.get("axis_size", 1))
-                ops.append({"shape": tuple(aval.shape),
-                            "dtype": str(aval.dtype),
-                            "operand_bytes": nbytes,
-                            "gathered_bytes": nbytes * width})
-            for v in eqn.params.values():
-                for sub in _sub_jaxprs(v):
-                    walk(sub)
-
-    walk(jaxpr.jaxpr)
-    out = {"ops": ops,
-           "operand_bytes": int(sum(o["operand_bytes"] for o in ops)),
-           "gathered_bytes": int(sum(o["gathered_bytes"] for o in ops))}
-    if mesh is not None:
-        n_dev = math.prod(dict(mesh.shape).values())
-        out["global_operand_bytes"] = out["operand_bytes"] * n_dev
+    out = collective_stats(fn, *args, mesh=mesh, **kwargs)
     if _rec.enabled():
-        _rec.inc("collective/all_gather/ops", len(ops))
+        _rec.inc("collective/all_gather/ops", len(out["ops"]))
         _rec.inc("collective/all_gather/operand_bytes", out["operand_bytes"])
         _rec.inc("collective/all_gather/gathered_bytes",
                  out["gathered_bytes"])

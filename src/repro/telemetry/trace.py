@@ -22,7 +22,7 @@ Event mapping:
 from __future__ import annotations
 
 import json
-from typing import Optional, Sequence, Union
+from typing import Sequence, Union
 
 __all__ = ["chrome_trace", "validate_chrome_trace", "require_spans"]
 

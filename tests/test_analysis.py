@@ -1,0 +1,236 @@
+"""repro.analysis: the static verifier.
+
+Two halves:
+
+* clean-repo checks — every pass reports zero errors on the registry and
+  dispatch paths as shipped (the CI gate, in miniature), and the
+  packed-dataflow pass *statically* proves the Eq.-1 collective-byte
+  invariant for every registered ``sharded:*`` variant;
+* seeded-defect fixtures — plant a shadowed registry variant, a Pallas
+  lowering whose tile contract rejects what its predicate accepts, and a
+  dense-byte (decode-before-gather) sharded path, and assert each pass
+  reports exactly the expected rule id.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (RULES, SEVERITIES, Finding, Report, audit_registry,
+                            lint_pallas, render_coverage, validate_plan,
+                            verify)
+from repro.core.policy import StruMConfig
+from repro.engine import registry as reg
+
+CFG = StruMConfig(method="mip2q", w=16, p=0.5, L=5)
+
+
+# ----------------------------------------------------------------- report --
+
+def test_finding_validates_rule_and_severity():
+    with pytest.raises(ValueError):
+        Finding("error", "not/a-rule", "x", "y")
+    with pytest.raises(ValueError):
+        Finding("fatal", "dataflow/eq1-bytes", "x", "y")
+
+
+def test_report_accessors_and_json():
+    r = Report()
+    r.add("error", "dataflow/eq1-bytes", "a", "d1")
+    r.add("warning", "registry/priority-overlap", "b", "d2")
+    r.add("info", "registry/coverage-hole", "c", "d3")
+    assert not r.ok and len(r.errors()) == 1 and len(r.warnings()) == 1
+    assert len(r.by_rule("dataflow/eq1-bytes")) == 1
+    j = r.to_json()
+    assert j["counts"] == {"error": 1, "warning": 1, "info": 1}
+    assert all(f["rule"] in RULES for f in j["findings"])
+    assert "2 finding" not in r.render()  # render lists findings + counts
+    assert all(s in SEVERITIES for s in ("error", "warning", "info"))
+
+
+# ------------------------------------------------------- clean-repo gates --
+
+def test_registry_audit_clean():
+    report, data = audit_registry()
+    assert report.ok, report.render()
+    assert not report.warnings(), report.render()
+    # every registered variant wins somewhere (nothing shadowed/unreachable)
+    for name in reg.list_variants():
+        assert data.selected[name] > 0, name
+
+
+def test_coverage_table_lists_every_variant():
+    _, data = audit_registry()
+    table = render_coverage(data)
+    for name in reg.list_variants():
+        assert f"`{name}`" in table
+
+
+def test_pallas_lint_clean():
+    report = lint_pallas()
+    assert report.ok, report.render()
+
+
+def test_local_dispatch_dataflow_clean():
+    from repro.engine.dispatch import dispatch
+    from repro.models.quantize import _pack_leaf
+
+    leaf = _pack_leaf(np.zeros((64, 128), np.float32), CFG)
+    report = verify(
+        lambda lf, x: dispatch(lf, x, strum=CFG, backend="interpret"),
+        leaf, jax.ShapeDtypeStruct((4, 64), jnp.float32),
+        location="dispatch")
+    assert report.ok and not report.findings, report.render()
+
+
+def test_sharded_variants_eq1_static_proof():
+    """The acceptance criterion: Eq.-1 proven for every ``sharded:*``
+    variant from the jaxpr alone — no kernel execution."""
+    from repro.analysis.suite import verify_sharded_variants
+
+    names = [n for n, v in reg.list_variants().items() if v.sharded]
+    assert names, "sharded family vanished?"
+    report = verify_sharded_variants()
+    assert report.ok and not report.findings, report.render()
+
+
+def test_cache_codecs_dataflow_clean():
+    from repro.analysis.suite import verify_cache_codecs
+
+    report = verify_cache_codecs()
+    assert report.ok and not report.findings, report.render()
+
+
+# -------------------------------------------------------- seeded defects --
+
+def test_seeded_shadowed_variant():
+    """A variant that accepts exactly what a higher-priority sibling
+    accepts is dead code: ``registry/shadowed-variant``."""
+    def supports_dense(cfg, info):
+        return (cfg is not None and info.lead == () and not info.cache
+                and cfg.n_low == 0)
+
+    try:
+        @reg.register_kernel("test:always_shadowed", family="pallas",
+                             priority=1, supports=supports_dense)
+        def _fn(*a, **k):  # pragma: no cover - never selected
+            raise AssertionError
+        report, _ = audit_registry()
+        hits = report.by_rule("registry/shadowed-variant")
+        assert [f for f in hits if "test:always_shadowed" in f.location], \
+            report.render()
+    finally:
+        reg.unregister_kernel("test:always_shadowed")
+    report, _ = audit_registry()
+    assert report.ok and not report.warnings(), report.render()
+
+
+def test_seeded_priority_overlap():
+    """Same family, same priority, overlapping predicates: selection
+    degrades to name order — ``registry/priority-overlap``."""
+    def supports_all_2d(cfg, info):
+        return cfg is not None and info.lead == () and not info.cache
+
+    try:
+        @reg.register_kernel("test:overlaps_dequant", family="xla",
+                             priority=0, supports=supports_all_2d)
+        def _fn(*a, **k):  # pragma: no cover
+            raise AssertionError
+        report, _ = audit_registry()
+        hits = report.by_rule("registry/priority-overlap")
+        assert [f for f in hits if "test:overlaps_dequant" in f.detail], \
+            report.render()
+    finally:
+        reg.unregister_kernel("test:overlaps_dequant")
+
+
+def test_seeded_misaligned_tile_lowering():
+    """A lowering whose trace-time tile contract rejects configs its
+    predicate accepts: ``pallas/tile-misaligned`` — caught with no
+    execution."""
+    def supports_any_mip2q(cfg, info):
+        return (cfg is not None and cfg.method == "mip2q"
+                and info.lead == () and not info.cache)
+
+    try:
+        @reg.register_kernel("test:misaligned", family="pallas",
+                             priority=99, supports=supports_any_mip2q)
+        def _bad(x, packed, **kwargs):
+            # claims every mip2q config, but its "tiling" demands K % 256
+            assert packed.k_dim % 256 == 0, "block_k misaligned"
+            return jnp.zeros((x.shape[0], packed.scale.shape[-1]),
+                             jnp.float32)
+        report = lint_pallas(cfgs=[CFG], variants=["test:misaligned"])
+        hits = report.by_rule("pallas/tile-misaligned")
+        assert hits and all(f.severity == "error" for f in hits), \
+            report.render()
+    finally:
+        reg.unregister_kernel("test:misaligned")
+
+
+def test_seeded_dense_byte_gather():
+    """Decode-before-gather — the regression the ``sharded:*`` family
+    exists to prevent: ``dataflow/fp-collective`` (error) plus the Eq.-1
+    byte mismatch."""
+    from repro.engine.dispatch import dispatch
+    from repro.models.quantize import _pack_leaf
+    from repro.models.sharding import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    k, n = 64, 128
+    mesh = jax.make_mesh((1,), ("data",))
+    leaf = _pack_leaf(np.zeros((k, n), np.float32), CFG)
+
+    def dense_gather(lf, x):
+        def body(lf, x):
+            w = dispatch(lf, jnp.eye(k, dtype=jnp.float32), strum=CFG,
+                         backend="xla")           # decode FIRST (the bug)
+            w = jax.lax.all_gather(w, "data", axis=0, tiled=True)
+            return x @ w[:k]
+        spec = {f: P() for f in ("mask", "hi", "lo", "scale")}
+        return shard_map(body, mesh=mesh, in_specs=(spec, P()),
+                         out_specs=P(), check_vma=False)(lf, x)
+
+    payload = sum(leaf[f].size for f in ("mask", "hi", "lo"))
+    report = verify(dense_gather, leaf,
+                    jax.ShapeDtypeStruct((4, k), jnp.float32),
+                    location="seeded-dense-gather", mesh=mesh,
+                    expected_payload_bytes=payload)
+    assert report.by_rule("dataflow/fp-collective"), report.render()
+    assert report.by_rule("dataflow/eq1-bytes"), report.render()
+    assert not report.ok
+
+
+def test_seeded_plan_payload_corruption():
+    from repro import engine
+
+    plan = engine.build_plan(
+        {"blocks": {"pos0": {"attn": {"wq": {"w": np.zeros((64, 128),
+                                                           np.float32)}}}}},
+        cfg=CFG)
+    assert validate_plan(plan).ok
+    entry = plan.entries["blocks/pos0/attn/wq/w"]
+    entry.leaf["hi"] = entry.leaf["hi"].astype(jnp.int32)
+    report = validate_plan(plan)
+    assert report.by_rule("plan/payload-shape"), report.render()
+    from repro.engine.plan import _maybe_validate
+    with pytest.raises(ValueError, match="validate=True"):
+        _maybe_validate(plan, validate=True)
+
+
+def test_build_plan_validate_hook():
+    from repro import engine
+
+    params = {"blocks": {"pos0": {"attn": {"wq": {"w": np.zeros(
+        (64, 128), np.float32)}}}}}
+    plan = engine.build_plan(params, cfg=CFG, validate=True)
+    assert plan.entries  # clean plan validates silently
+
+
+def test_legacy_collective_stats_contract():
+    """telemetry.all_gather_stats now routes through the dataflow walker;
+    the legacy dict contract is unchanged."""
+    from repro import telemetry
+
+    st = telemetry.all_gather_stats(lambda x: x * 2.0, jnp.zeros((4,)))
+    assert st == {"ops": [], "operand_bytes": 0, "gathered_bytes": 0}
