@@ -30,7 +30,7 @@ TARGETS = (0.45, 0.55, 0.65, 0.75, 0.875, 0.95)
 def _weighted_sqnr(profile, policy) -> float:
     """Bytes-weighted mean SQNR of a uniform policy over profiled tensors."""
     tot = acc = 0
-    for name, row in profile.items():
+    for _name, row in profile.items():
         cfg = policy.default
         s = row["sqnr_db"][config_key(cfg)]
         acc += s * row["size"]

@@ -299,8 +299,8 @@ def run_sharded(smoke: bool = False):
             dense_bytes = engine.dense_gather_bytes(k, n, jnp.bfloat16)
             for backend, name in (("interpret", sel),
                                   ("xla", "sharded:gather_dequant")):
-                fn = lambda l, xx: dispatch(  # noqa: E731
-                    l, xx, mesh=mesh, tp_pattern=pattern, backend=backend)
+                fn = lambda l, xx, _p=pattern, _b=backend: dispatch(  # noqa: E731
+                    l, xx, mesh=mesh, tp_pattern=_p, backend=_b)
                 with mesh:
                     stats = telemetry.all_gather_stats(fn, leaf, x, mesh=mesh)
                     reps = 1 if backend == "interpret" and not smoke else 3

@@ -18,8 +18,9 @@ def _parse_args(argv):
                     "verification, registry audit, Pallas kernel lint, and "
                     "recompile lint — all without running a kernel.")
     ap.add_argument("--passes", default=",".join(
-        ("dataflow", "registry", "pallas", "recompile")),
-        help="comma-separated subset of dataflow,registry,pallas,recompile")
+        ("dataflow", "registry", "pallas", "recompile", "numerics")),
+        help="comma-separated subset of "
+             "dataflow,registry,pallas,recompile,numerics")
     ap.add_argument("--arch", action="append", default=None,
                     help="model-zoo architecture(s) for the scheduler-lane "
                          "passes (default: qwen2_7b)")
@@ -35,6 +36,14 @@ def _parse_args(argv):
                     help="lowest severity to print in text mode")
     ap.add_argument("--list-rules", action="store_true",
                     help="print the rules glossary and exit (no jax)")
+    ap.add_argument("--sync-docs", action="store_true",
+                    help="regenerate README's rules glossary and registry "
+                         "coverage table from report.RULES/registry_audit "
+                         "and rewrite README.md in place")
+    ap.add_argument("--check-docs", action="store_true",
+                    help="like --sync-docs but read-only: exit 1 if the "
+                         "committed README is stale (the docs-drift CI "
+                         "gate)")
     return ap.parse_args(argv)
 
 
@@ -44,6 +53,54 @@ def _list_rules() -> int:
     width = max(len(r) for r in RULES)
     for rule, text in sorted(RULES.items()):
         print(f"{rule:<{width}}  {text}")
+    return 0
+
+
+def _rules_table() -> str:
+    from repro.analysis.report import RULES
+
+    lines = ["| rule | meaning |", "|---|---|"]
+    for rule, text in sorted(RULES.items()):
+        lines.append(f"| `{rule}` | {' '.join(text.split())} |")
+    return "\n".join(lines)
+
+
+def _replace_table(text: str, header: str, table: str) -> str:
+    """Swap the first markdown table after ``header`` for ``table``."""
+    i = text.index(header)
+    j = text.index("\n|", i) + 1
+    end = j
+    for line in text[j:].splitlines(keepends=True):
+        if not line.startswith("|"):
+            break
+        end += len(line)
+    return text[:j] + table.rstrip("\n") + "\n" + text[end:]
+
+
+def _sync_docs(check: bool) -> int:
+    """Regenerate the README sections that mirror analyzer data; with
+    ``check`` just report staleness (exit 1) without writing."""
+    from repro.analysis import registry_audit
+
+    readme = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "..", "..", "..", "README.md")
+    readme = os.path.normpath(readme)
+    with open(readme, encoding="utf-8") as fh:
+        committed = fh.read()
+    _, audit = registry_audit.audit_registry()
+    regenerated = _replace_table(committed, "### Rules", _rules_table())
+    regenerated = _replace_table(regenerated, "### Registry coverage",
+                                 registry_audit.render_coverage(audit))
+    if regenerated == committed:
+        print("README.md is in sync with report.RULES/registry_audit")
+        return 0
+    if check:
+        print("README.md is stale: rerun `python -m repro.analysis "
+              "--sync-docs` and commit the result", file=sys.stderr)
+        return 1
+    with open(readme, "w", encoding="utf-8") as fh:
+        fh.write(regenerated)
+    print(f"rewrote {readme}")
     return 0
 
 
@@ -59,6 +116,9 @@ def main(argv=None) -> int:
         os.environ["XLA_FLAGS"] = (
             f"{flags} --xla_force_host_platform_device_count="
             f"{args.devices}").strip()
+
+    if args.sync_docs or args.check_docs:
+        return _sync_docs(check=args.check_docs)
 
     from repro.analysis import registry_audit, suite
 

@@ -10,7 +10,12 @@ enough to run at plan-build time in serving bring-up:
 ``plan/payload-shape``    packed field geometry or dtypes disagree with
                           ``packing.field_dims`` for the entry's config;
 ``plan/k-dim``            the recorded reduction dim does not fit the
-                          payload's block count.
+                          payload's block count;
+``numerics/budget-exceeded``  (with ``params``) a packed entry's
+                          unit-input output-error bound — or the full
+                          static end-to-end bound, when the plan's
+                          schedule declares ``error_budget`` — exceeds
+                          the declared budget.
 """
 from __future__ import annotations
 
@@ -25,10 +30,11 @@ __all__ = ["validate_plan"]
 _FIELD_DTYPES = {"mask": np.uint8, "hi": np.int8, "lo": np.uint8}
 
 
-def validate_plan(plan) -> Report:
+def validate_plan(plan, params=None) -> Report:
     from repro.engine.plan import _is_expert_stack
 
     report = Report()
+    report.extend(_check_error_budget(plan, params))
     for name, e in plan.entries.items():
         # exec-lead convention from build_plan: scan-group lead dims are
         # sliced away before dispatch; only MoE expert stacks keep theirs
@@ -76,4 +82,34 @@ def validate_plan(plan) -> Report:
         if not np.issubdtype(np.dtype(e.leaf["scale"].dtype), np.floating):
             report.add("error", "plan/payload-shape", f"{name}/scale",
                        f"dtype {e.leaf['scale'].dtype}; scales are float")
+    return report
+
+
+def _check_error_budget(plan, params) -> Report:
+    """Fidelity check for plans whose schedule declares ``error_budget``
+    (``autotune.Budget(error_budget=...)``): every packed entry's
+    unit-input output-error bound (``numerics.per_tensor_bound``, the
+    worst-case error of ``x @ W_hat`` vs ``x @ W`` over ``|x|_inf <= 1``)
+    must clear the budget.  Needs the original float ``params``; without
+    them (or without a declared budget) this is a no-op."""
+    report = Report()
+    if params is None:
+        return report
+    meta = getattr(plan.schedule, "meta", None) or {}
+    budget = (meta.get("budget") or {}).get("error_budget")
+    if budget is None:
+        return report
+    from repro.analysis.numerics import per_tensor_bound
+    from repro.core.apply import _named_leaves
+
+    named = dict(_named_leaves(params))
+    for name, e in plan.entries.items():
+        if e.leaf is None or name not in named:
+            continue
+        bound = per_tensor_bound(e, named[name])
+        if bound > float(budget):
+            report.add("error", "numerics/budget-exceeded", name,
+                       f"unit-input output-error bound {bound:.6g} exceeds "
+                       f"the schedule's declared error budget "
+                       f"{float(budget):.6g}")
     return report

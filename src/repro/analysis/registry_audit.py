@@ -116,7 +116,7 @@ def audit_registry(cfgs: Optional[list] = None) -> tuple:
             by_prio: dict = {}
             for v in accepting:
                 by_prio.setdefault((v.family, v.priority), []).append(v.name)
-            for (family, prio), names in by_prio.items():
+            for (_family, prio), names in by_prio.items():
                 if len(names) > 1:
                     key = (tuple(sorted(names)), ctx_name, prio)
                     overlaps.add(key)
@@ -142,7 +142,7 @@ def audit_registry(cfgs: Optional[list] = None) -> tuple:
                     key = (backend, cfg.method, cfg.w)
                     holes[key] = holes.get(key, 0) + 1
 
-    for name, variant in registry.items():
+    for name, _variant in registry.items():
         if selected[name]:
             continue
         if supported[name] == 0:

@@ -12,11 +12,11 @@ from typing import Iterable, Optional
 
 __all__ = ["Finding", "Report", "RULES", "SEVERITIES"]
 
-SEVERITIES = ("error", "warning", "info")
+SEVERITIES: tuple[str, ...] = ("error", "warning", "info")
 
 #: rule id -> one-line description (the README glossary is generated from
 #: this table, so a rule cannot ship without documentation)
-RULES = {
+RULES: dict[str, str] = {
     "dataflow/fp-collective":
         "a gather-class collective (all_gather/all_to_all/ppermute) moves "
         "decoded floating-point bytes instead of packed payload bytes",
@@ -68,6 +68,19 @@ RULES = {
     "plan/k-dim":
         "a plan entry's recorded reduction dim disagrees with its payload "
         "geometry",
+    "numerics/budget-exceeded":
+        "a statically derived output-error bound (end-to-end or per-layer) "
+        "exceeds the schedule's declared error budget",
+    "numerics/unsound-bound":
+        "the static output-error bound is beaten by measured teacher-forced "
+        "error — the abstract interpreter itself is wrong (soundness "
+        "self-check)",
+    "numerics/unsupported-op":
+        "the numerics interpreter met a primitive it cannot transfer "
+        "through; downstream bounds fall back to unconstrained",
+    "numerics/unbounded":
+        "an operation (division by a zero-spanning interval, rsqrt of a "
+        "non-positive range) made the static bound unconstrained",
 }
 
 
@@ -80,7 +93,7 @@ class Finding:
     location: str
     detail: str
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.severity not in SEVERITIES:
             raise ValueError(f"severity {self.severity!r} not in {SEVERITIES}")
         if self.rule not in RULES:
@@ -95,7 +108,7 @@ class Finding:
 class Report:
     """An ordered collection of findings with severity accessors."""
 
-    findings: list = dataclasses.field(default_factory=list)
+    findings: list[Finding] = dataclasses.field(default_factory=list)
 
     def add(self, severity: str, rule: str, location: str, detail: str) -> None:
         self.findings.append(Finding(severity, rule, location, detail))
@@ -104,20 +117,20 @@ class Report:
         self.findings.extend(other.findings)
         return self
 
-    def errors(self) -> list:
+    def errors(self) -> list[Finding]:
         return [f for f in self.findings if f.severity == "error"]
 
-    def warnings(self) -> list:
+    def warnings(self) -> list[Finding]:
         return [f for f in self.findings if f.severity == "warning"]
 
-    def by_rule(self, rule: str) -> list:
+    def by_rule(self, rule: str) -> list[Finding]:
         return [f for f in self.findings if f.rule == rule]
 
     @property
     def ok(self) -> bool:
         return not self.errors()
 
-    def to_json(self) -> dict:
+    def to_json(self) -> dict[str, object]:
         counts = {s: 0 for s in SEVERITIES}
         for f in self.findings:
             counts[f.severity] += 1
@@ -127,7 +140,9 @@ class Report:
     def render(self, min_severity: str = "info") -> str:
         keep = SEVERITIES[:SEVERITIES.index(min_severity) + 1]
         lines = [f.render() for f in self.findings if f.severity in keep]
-        c = self.to_json()["counts"]
+        c = {s: 0 for s in SEVERITIES}
+        for f in self.findings:
+            c[f.severity] += 1
         lines.append(f"{c['error']} error(s), {c['warning']} warning(s), "
                      f"{c['info']} info")
         return "\n".join(lines)

@@ -8,7 +8,11 @@ scheduler's serving lanes — and runs the four analysis passes over them:
 * packed-dataflow verification (:mod:`repro.analysis.dataflow`),
 * registry audit (:mod:`repro.analysis.registry_audit`),
 * Pallas kernel lint (:mod:`repro.analysis.pallas_lint`),
-* recompile lint (:mod:`repro.analysis.recompile`).
+* recompile lint (:mod:`repro.analysis.recompile`),
+* numerics abstract interpretation (:mod:`repro.analysis.numerics`),
+  including its soundness self-check: the statically derived output-error
+  bound must dominate the measured teacher-forced error, or the suite
+  reports ``numerics/unsound-bound``.
 
 Everything except the recompile pass is trace-only.  The sharded scenarios
 prove the Eq.-1 collective-byte invariant statically for *every* variant in
@@ -31,9 +35,10 @@ from repro.core.policy import StruMConfig
 
 __all__ = ["PASSES", "run_all", "tiny_model", "verify_local_apply",
            "verify_sharded_variants", "verify_cache_codecs",
-           "verify_scheduler_lanes", "check_cache_pools"]
+           "verify_scheduler_lanes", "verify_numerics",
+           "check_cache_pools"]
 
-PASSES = ("dataflow", "registry", "pallas", "recompile")
+PASSES = ("dataflow", "registry", "pallas", "recompile", "numerics")
 
 _WCFG = StruMConfig(method="mip2q", w=16, p=0.5, L=5)
 _KVCFG = StruMConfig(method="dliq", w=16, p=0.5, q=4)
@@ -75,7 +80,8 @@ def verify_local_apply(backend: Optional[str] = "interpret") -> Report:
                         "sparsity")):
         wleaf = _leaf(k, n, cfg)
         report.extend(dataflow.verify(
-            lambda lf, x: dispatch(lf, x, strum=cfg, backend=backend),
+            lambda lf, x, _cfg=cfg: dispatch(lf, x, strum=_cfg,
+                                             backend=backend),
             wleaf, jax.ShapeDtypeStruct((4, k), jnp.float32),
             location=f"engine.apply[{label}]"))
     return report
@@ -233,6 +239,60 @@ def verify_scheduler_lanes(sched, location: str = "scheduler") -> Report:
     return report
 
 
+_NUMERICS_CFGS = (StruMConfig(method="dliq", w=8, p=0.5, q=4),
+                  StruMConfig(method="mip2q", w=8, p=0.5, L=3))
+
+
+def verify_numerics(arch: str = "qwen2_7b",
+                    cfgs=_NUMERICS_CFGS) -> Report:
+    """Numerics pass + soundness self-check on a real packed forward.
+
+    For each schedule: derive the static per-layer and end-to-end
+    output-error bound with :func:`repro.analysis.numerics.analyze`, then
+    run the float and the packed forward teacher-forced on the same tokens
+    and require ``static bound >= measured error`` — a violated inequality
+    is a bug in the interpreter itself and reports
+    ``numerics/unsound-bound``.  Schedules that declare an error budget
+    (``Budget(error_budget=...)`` via autotune) are additionally checked
+    with :func:`repro.analysis.numerics.check_error_budget`.
+    """
+    from repro import engine
+    from repro.analysis import numerics
+    from repro.models.transformer import forward_train
+
+    cfg, params = tiny_model(arch)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 48), 0,
+                              cfg.vocab_size)
+
+    def fn(p, t):
+        return forward_train(p, {"tokens": t}, cfg)[0]
+
+    report = Report()
+    for scfg in cfgs:
+        loc = f"{arch}/numerics[{scfg.method} w={scfg.w} p={scfg.p}]"
+        plan = engine.build_plan(params, cfg=scfg, backend="xla", pack=True)
+        stats = numerics.leaf_stats_from_plan(plan, params)
+        res, rep = numerics.analyze(fn, plan.params, toks, stats=stats,
+                                    location=loc)
+        report.extend(rep)
+        measured = numerics.measured_error(fn, (params, toks),
+                                           (plan.params, toks))
+        if res.total < measured:
+            report.add("error", "numerics/unsound-bound", loc,
+                       f"static bound {res.total:.6g} < measured "
+                       f"teacher-forced error {measured:.6g}")
+        budget = _schedule_error_budget(plan.schedule)
+        if budget is not None:
+            report.extend(numerics.check_error_budget(
+                res, {"total": budget}, location=loc))
+    return report
+
+
+def _schedule_error_budget(schedule):
+    meta = getattr(schedule, "meta", None) or {}
+    return (meta.get("budget") or {}).get("error_budget")
+
+
 # --------------------------------------------------------------- runner --
 
 def run_all(arches=("qwen2_7b",), passes=PASSES,
@@ -249,6 +309,9 @@ def run_all(arches=("qwen2_7b",), passes=PASSES,
         report.extend(verify_local_apply())
         report.extend(verify_sharded_variants())
         report.extend(verify_cache_codecs())
+    if "numerics" in passes:
+        for arch in arches:
+            report.extend(verify_numerics(arch))
     if "dataflow" in passes or "recompile" in passes:
         for arch in arches:
             cfg, params = tiny_model(arch)

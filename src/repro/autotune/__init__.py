@@ -22,13 +22,13 @@ from repro.autotune.schedule import (StruMSchedule, config_from_dict,
 from repro.autotune.search import (Budget, Candidate, pareto_frontier,
                                    search_schedule)
 from repro.autotune.sensitivity import (DEFAULT_GRID, cache_info, clear_cache,
-                                        int8_sqnr_db, profile_array,
-                                        profile_tree)
+                                        int8_sqnr_db, output_error_profile,
+                                        profile_array, profile_tree)
 
 __all__ = [
     "CostEstimate", "config_cost", "level_savings",
     "StruMSchedule", "config_from_dict", "config_key", "config_to_dict",
     "Budget", "Candidate", "pareto_frontier", "search_schedule",
     "DEFAULT_GRID", "cache_info", "clear_cache", "int8_sqnr_db",
-    "profile_array", "profile_tree",
+    "output_error_profile", "profile_array", "profile_tree",
 ]

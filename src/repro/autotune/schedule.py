@@ -73,7 +73,7 @@ class StruMSchedule:
                   rows, achieved totals.  Round-trips through JSON.
     """
 
-    assignments: dict
+    assignments: dict[str, Optional[StruMConfig]]
     exclude: tuple = DEFAULT_EXCLUDE
     meta: dict = dataclasses.field(default_factory=dict)
 
@@ -104,7 +104,8 @@ class StruMSchedule:
         """
         if sizes is None:
             sizes = {r["name"]: r["size"] for r in self.meta.get("tensors", ())}
-        tot = comp = 0
+        tot = 0
+        comp = 0.0
         for name, cfg in self.assignments.items():
             n = sizes.get(name)
             if n is None:

@@ -32,7 +32,8 @@ from typing import Optional, Sequence
 
 from repro.autotune import costmodel
 from repro.autotune.schedule import StruMSchedule, config_key
-from repro.autotune.sensitivity import DEFAULT_GRID, profile_tree
+from repro.autotune.sensitivity import (DEFAULT_GRID,
+                                        output_error_profile, profile_tree)
 from repro.core.policy import LayerPolicy, StruMConfig, default_policy
 
 __all__ = ["Budget", "Candidate", "pareto_frontier", "search_schedule"]
@@ -40,16 +41,25 @@ __all__ = ["Budget", "Candidate", "pareto_frontier", "search_schedule"]
 
 @dataclasses.dataclass(frozen=True)
 class Budget:
-    """Global constraint the allocator must satisfy (set at least one)."""
+    """Global constraint the allocator must satisfy (set at least one).
+
+    ``error_budget`` is not an allocation axis: it declares the maximum
+    statically derived end-to-end output error the schedule accepts, is
+    recorded in the schedule meta, and is enforced after the fact by the
+    numerics pass (``repro.analysis.numerics.check_error_budget``,
+    ``build_plan(..., validate=True)``).
+    """
 
     target_ratio: Optional[float] = None   # packed/int8 bytes, e.g. 0.875
     max_energy: Optional[float] = None     # normalized (costmodel units)
     min_sqnr_db: Optional[float] = None    # per-tensor quality floor
+    error_budget: Optional[float] = None   # declared max static output error
 
     def __post_init__(self):
         if (self.target_ratio is None and self.max_energy is None
                 and self.min_sqnr_db is None):
-            raise ValueError("Budget needs at least one constraint axis")
+            raise ValueError("Budget needs at least one constraint axis "
+                             "(error_budget is declarative, not one)")
         if self.target_ratio is not None and self.max_energy is not None:
             raise ValueError(
                 "target_ratio and max_energy are alternative cost axes — "
@@ -81,7 +91,7 @@ class Candidate:
 
 
 def _candidates(row: dict, grid: Sequence[StruMConfig], budget: Budget,
-                axis: str) -> list:
+                axis: str, proxy: str = "sqnr") -> list:
     """Build the candidate list for one profiled tensor (incl. INT8)."""
     size = row["size"]
     cands = []
@@ -92,8 +102,13 @@ def _candidates(row: dict, grid: Sequence[StruMConfig], budget: Budget,
             continue  # below the floor: never eligible (INT8 always is)
         est = costmodel.config_cost(cfg, size)
         cost = est.bytes if axis == "bytes" else est.energy
+        if proxy == "output_error":
+            loss = (row["int8_output_err2"] if cfg is None
+                    else row["output_err2"][config_key(cfg)])
+        else:
+            loss = size * 10.0 ** (-float(s) / 10.0)
         cands.append(Candidate(cfg=cfg, sqnr_db=float(s),
-                               loss=size * 10.0 ** (-float(s) / 10.0),
+                               loss=float(loss),
                                cost=float(cost),
                                bytes=est.bytes, energy=est.energy))
     return cands
@@ -120,20 +135,46 @@ def pareto_frontier(cands: Sequence[Candidate]) -> list:
 def search_schedule(params, budget: Budget,
                     grid: Sequence[StruMConfig] = DEFAULT_GRID,
                     base_policy: Optional[LayerPolicy] = None,
-                    profile: Optional[dict] = None) -> StruMSchedule:
+                    profile: Optional[dict] = None,
+                    proxy: str = "sqnr",
+                    fn=None, fn_args: tuple = ()) -> StruMSchedule:
     """Search the per-layer config space against ``budget``.
 
     ``base_policy`` is the eligibility test (which tensors participate at
     all — defaults to the repo-wide exclusions); ``profile`` lets callers
-    reuse a :func:`~repro.autotune.sensitivity.profile_tree` result across
-    budget sweeps.
+    reuse a :func:`~repro.autotune.sensitivity.profile_tree` (or
+    :func:`~repro.autotune.sensitivity.output_error_profile`) result
+    across budget sweeps.
+
+    ``proxy`` picks the allocator's quality objective: ``"sqnr"`` is the
+    data-free size-weighted noise power; ``"output_error"`` is the
+    activation-aware statically derived *output* error power (weight noise
+    rescaled by each leaf's traced noise gain — the quantity the numerics
+    pass bounds, and the acceptance-rate predictor the self-speculative
+    ROADMAP item needs).  The output-error proxy needs either a profile
+    from ``output_error_profile`` or ``fn``/``fn_args`` (a traced forward,
+    e.g. ``lambda p, t: forward_train(p, {"tokens": t}, cfg)[0]``) to
+    derive one here.
 
     Returns a :class:`StruMSchedule` whose meta records the budget, the
-    per-tensor decision table, and the achieved totals.
+    proxy, the per-tensor decision table, and the achieved totals.
     """
+    if proxy not in ("sqnr", "output_error"):
+        raise ValueError(f"proxy={proxy!r}: pick 'sqnr' or 'output_error'")
     base_policy = base_policy or default_policy()
     grid = tuple(grid)
-    if profile is None:
+    if proxy == "output_error":
+        have_gains = profile is not None and all(
+            "output_err2" in row for row in profile.values())
+        if not have_gains:
+            if fn is None:
+                raise ValueError(
+                    "proxy='output_error' needs an output_error_profile() "
+                    "result or fn/fn_args to trace one")
+            profile = output_error_profile(
+                params, fn, *fn_args, grid=grid, base_policy=base_policy,
+                profile=profile)
+    elif profile is None:
         profile = profile_tree(params, grid, base_policy=base_policy)
 
     # cost axis: bytes when a byte budget is set; otherwise energy — which
@@ -144,7 +185,8 @@ def search_schedule(params, budget: Budget,
     limit = budget.max_energy if axis == "energy" else None
 
     names = sorted(profile)
-    frontiers = {n: pareto_frontier(_candidates(profile[n], grid, budget, axis))
+    frontiers = {n: pareto_frontier(
+        _candidates(profile[n], grid, budget, axis, proxy=proxy))
                  for n in names}
 
     if budget.target_ratio is not None:
@@ -191,6 +233,7 @@ def search_schedule(params, budget: Budget,
                 for n in names) / max(tot_size, 1)
     meta = {
         "budget": budget.to_dict(),
+        "proxy": proxy,
         "grid": [config_key(c) for c in grid],
         "achieved_ratio": tot_bytes / max(tot_size, 1),
         "total_bytes": tot_bytes,

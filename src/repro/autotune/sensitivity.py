@@ -32,7 +32,7 @@ from repro.core.policy import LayerPolicy, StruMConfig, default_policy
 from repro.core.quantizers import (int8_symmetric, pow2_round, rank_in_block)
 
 __all__ = ["DEFAULT_GRID", "profile_array", "int8_sqnr_db", "profile_tree",
-           "clear_cache", "cache_info"]
+           "output_error_profile", "clear_cache", "cache_info"]
 
 #: candidate grid used when callers don't supply one: the paper's three
 #: methods over its p grid, with both MIP2Q shifter ranges (Fig. 11/12).
@@ -168,7 +168,52 @@ def profile_tree(params, grid: Sequence[StruMConfig] = DEFAULT_GRID,
             continue
         out[name] = {
             "size": int(leaf.size),
+            "ms": float(np.mean(np.square(np.asarray(leaf, np.float64)))),
             "int8_sqnr_db": int8_sqnr_db(leaf),
             "sqnr_db": profile_array(leaf, grid, use_cache=use_cache),
         }
+    return out
+
+
+def output_error_profile(params, fn, *fn_args,
+                         grid: Sequence[StruMConfig] = DEFAULT_GRID,
+                         base_policy: Optional[LayerPolicy] = None,
+                         profile: Optional[dict] = None,
+                         use_cache: bool = True, **fn_kwargs) -> dict:
+    """Activation-aware sensitivity: weight SQNR composed with the model's
+    statically derived per-leaf noise gains.
+
+    One :func:`repro.analysis.numerics.output_gains` pass over the traced
+    ``fn(params, *fn_args)`` seeds a unit mean-square perturbation at every
+    eligible leaf and reads off the *output* error power it induces —
+    ``err2`` propagation is linear in the seeds, so the result is each
+    leaf's gain ``G``.  A candidate config's predicted output error power
+    is then ``G · ms(W) · 10^(−SQNR/10)`` (leaf noise power rescaled by
+    how much of it survives to the logits), which is what separates an
+    attention projection from an equally-SQNR'd MLP matrix.
+
+    Returns :func:`profile_tree` rows extended with ``"gain"`` and
+    ``"output_err2": {config_key: predicted output error power}``; feed it
+    to ``search_schedule(..., proxy="output_error")``.
+    """
+    from repro.analysis import numerics
+
+    base_policy = base_policy or default_policy()
+    if profile is None:
+        profile = profile_tree(params, grid, base_policy=base_policy,
+                               use_cache=use_cache)
+    gains = numerics.output_gains(fn, params, *fn_args,
+                                  names=tuple(sorted(profile)),
+                                  location="autotune.output_error_profile",
+                                  **fn_kwargs)
+    out = {}
+    for name, row in profile.items():
+        g = float(gains.get(name, 0.0))
+        row = dict(row, gain=g)
+        row["output_err2"] = {
+            key: g * row["ms"] * 10.0 ** (-s / 10.0)
+            for key, s in row["sqnr_db"].items()}
+        row["int8_output_err2"] = (
+            g * row["ms"] * 10.0 ** (-row["int8_sqnr_db"] / 10.0))
+        out[name] = row
     return out

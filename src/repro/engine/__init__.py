@@ -48,7 +48,7 @@ from repro.engine.registry import (BACKENDS, ExecSpec, KernelVariant,
                                    list_variants, register_kernel,
                                    resolve_backend, select_variant,
                                    unregister_kernel)
-from repro.engine.sharded import (all_gather_stats, dense_gather_bytes,
+from repro.engine.sharded import (dense_gather_bytes,
                                   tp_pattern_for)
 
 __all__ = [
@@ -57,7 +57,7 @@ __all__ = [
     "BACKENDS", "ExecSpec", "KernelVariant", "LeafInfo", "ShardSpec",
     "register_kernel", "unregister_kernel", "get_variant", "list_variants",
     "select_variant", "resolve_backend",
-    "all_gather_stats", "dense_gather_bytes", "tp_pattern_for",
+    "dense_gather_bytes", "tp_pattern_for",
     "CacheSpec", "build_cache_spec", "select_cache_variant",
     "encode_page", "decode_pages", "gather_decode_pages",
 ]

@@ -197,11 +197,12 @@ def _is_expert_stack(name: str) -> bool:
     return "/moe/" in name and name.rsplit("/", 1)[-1] in ("wi", "wg", "wo")
 
 
-def _maybe_validate(plan: "ExecutionPlan", validate: bool) -> "ExecutionPlan":
+def _maybe_validate(plan: "ExecutionPlan", validate: bool,
+                    params: Any = None) -> "ExecutionPlan":
     if not validate:
         return plan
     from repro.analysis import validate_plan
-    report = validate_plan(plan)
+    report = validate_plan(plan, params=params)
     if report.errors():
         raise ValueError("build_plan(validate=True) failed:\n"
                          + report.render(min_severity="warning"))
@@ -232,9 +233,11 @@ def build_plan(params: Any, *, schedule: Any = None,
 
     ``validate=True`` runs :func:`repro.analysis.validate_plan` over the
     finished plan (selection drift, payload geometry vs
-    ``packing.field_dims``, K-vs-block-count) and raises ``ValueError``
-    with the rendered findings if any check fails — cheap enough for
-    serving bring-up paths.
+    ``packing.field_dims``, K-vs-block-count, and — when the schedule
+    declares ``Budget(error_budget=...)`` — the numerics per-tensor
+    output-error-bound check) and raises ``ValueError`` with the
+    rendered findings if any check fails — cheap enough for serving
+    bring-up paths.
     """
     if scope not in ("model", "tree"):
         raise ValueError(f"scope={scope!r}")
@@ -310,7 +313,7 @@ def build_plan(params: Any, *, schedule: Any = None,
             ExecutionPlan(entries=entries, params=out, backend=backend,
                           scope="model", schedule=schedule,
                           meta={"fsdp_axes": fsdp} if fsdp else {}),
-            validate)
+            validate, params=params)
 
     # scope == "tree": flat manifest, column-folded packing
     from repro.core.apply import pack_array
@@ -335,7 +338,8 @@ def build_plan(params: Any, *, schedule: Any = None,
             out[name] = leaf
     return _maybe_validate(
         ExecutionPlan(entries=entries, params=out, backend=backend,
-                      scope="tree", schedule=schedule), validate)
+                      scope="tree", schedule=schedule), validate,
+        params=params)
 
 
 def fake_quantize(params: Any, *, schedule: Any = None,

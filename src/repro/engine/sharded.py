@@ -51,7 +51,7 @@ from repro.engine.registry import (LeafInfo, list_variants, register_kernel,
 from repro.models.sharding import fsdp_axes as _fsdp_axes
 from repro.models.sharding import shard_map
 
-__all__ = ["gather_dequant_leaf", "tp_pattern_for", "all_gather_stats",
+__all__ = ["gather_dequant_leaf", "tp_pattern_for",
            "dense_gather_bytes"]
 
 _ROW_NAMES = ("wo", "out_proj")
@@ -243,24 +243,6 @@ def _grouped_gather(wleaf, x, *, cfg, mesh=None, fsdp, pattern=None, k_dim,
 
 
 # --------------------------------------------------- collective accounting --
-
-def all_gather_stats(fn, *args, mesh=None, **kwargs) -> dict:
-    """Deprecated shim: moved to :func:`repro.telemetry.all_gather_stats`.
-
-    Collective byte accounting is a measurement, so it lives in the
-    telemetry layer now (where it also feeds the ``collective/*`` counters
-    of any active recorder; the walk itself is ``repro.analysis.dataflow``).
-    Same signature, same return dict.  Follows the README shim-removal
-    timeline: deleted in the next PR.
-    """
-    import warnings
-    warnings.warn(
-        "engine.all_gather_stats is deprecated; use "
-        "repro.telemetry.all_gather_stats (same signature)",
-        DeprecationWarning, stacklevel=2)
-    from repro.telemetry.jaxpr_stats import all_gather_stats as _stats
-    return _stats(fn, *args, mesh=mesh, **kwargs)
-
 
 def dense_gather_bytes(k_dim: int, n_out: int, dtype=jnp.bfloat16) -> int:
     """Bytes the naive path would move: all-gather the *dequantized* weight."""

@@ -81,7 +81,7 @@ def _scan_groups(body, x, blocks, cfg, collect=False):
     g = jax.tree_util.tree_leaves(blocks)[0].shape[0]
     ys = []
     for i in range(g):
-        gp = jax.tree.map(lambda a: a[i], blocks)
+        gp = jax.tree.map(lambda a, _i=i: a[_i], blocks)
         x, y = body(x, gp)
         ys.append(y)
     stack = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)

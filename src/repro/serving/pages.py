@@ -227,7 +227,7 @@ def cache_stats(pools: dict, hot: dict, spec: CacheSpec, cfg,
                 n_slots: int, max_len: int) -> dict:
     """Measured resident cache bytes vs the codec's Eq.-1/2 expectation.
 
-    The cache-side analog of :func:`repro.engine.all_gather_stats`: counts
+    The cache-side analog of :func:`repro.telemetry.all_gather_stats`: counts
     the bytes that are actually allocated, and derives the ratio against
     the same pages stored int8 (the paper's baseline) and against the
     monolithic fp cache tree the paged layout replaced.  For a packed

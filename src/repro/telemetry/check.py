@@ -12,11 +12,12 @@ from __future__ import annotations
 
 import argparse
 import sys
+from typing import Optional, Sequence
 
 from repro.telemetry.trace import require_spans, validate_chrome_trace
 
 
-def main(argv=None) -> int:
+def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.telemetry.check",
         description="validate a repro.telemetry Chrome-trace JSON file")

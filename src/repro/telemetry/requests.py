@@ -17,10 +17,13 @@ file, and the tests' synthetic streams.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Iterable, Optional, Tuple
 
 __all__ = ["LIFECYCLE_STAGES", "check_well_ordered", "request_metrics",
            "latency_summary", "percentile"]
+
+#: one lifecycle event: (stage, timestamp_us, attributes)
+Event = Tuple[str, float, dict]
 
 # Canonical stage order; a request's events must be a subsequence of this
 # (with "token" events interleaved after first_token).
@@ -29,7 +32,7 @@ LIFECYCLE_STAGES = ("submitted", "admitted", "prefill", "first_token",
 _STAGE_RANK = {s: i for i, s in enumerate(LIFECYCLE_STAGES)}
 
 
-def percentile(values, q: float) -> Optional[float]:
+def percentile(values: Iterable[float], q: float) -> Optional[float]:
     """Linear-interpolated percentile (numpy's default), stdlib-only.
     ``q`` in [0, 100].  None on empty input."""
     vals = sorted(values)
@@ -44,7 +47,7 @@ def percentile(values, q: float) -> Optional[float]:
     return float(vals[lo] * (1 - frac) + vals[hi] * frac)
 
 
-def check_well_ordered(events) -> None:
+def check_well_ordered(events: Iterable[Event]) -> None:
     """Validate one request's event stream: timestamps non-decreasing and
     lifecycle stages in canonical order (stages may be skipped, never
     repeated or reordered; ``token`` events only after ``first_token``).
@@ -80,10 +83,10 @@ def request_metrics(log: dict) -> dict:
     (submitted -> admitted), token timestamps, per-token decode intervals,
     ``n_tokens``, ``e2e_us`` (submitted -> retired), ``retired`` flag.
     """
-    out = {}
+    out: dict = {}
     for uid, events in log.items():
-        stamps = {}
-        token_ts = []
+        stamps: dict = {}
+        token_ts: list = []
         for stage, ts, _attrs in events:
             if stage == "token":
                 token_ts.append(ts)

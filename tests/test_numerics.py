@@ -1,0 +1,300 @@
+"""repro.analysis.numerics: the quantization-error abstract interpreter.
+
+The load-bearing property is *soundness*: for every (params, schedule)
+pair in the grid the statically derived end-to-end output-error bound must
+dominate the measured teacher-forced error between the float and the
+packed forward — including the ``p=1.0`` (everything low-precision) and
+``n_low=0`` (``p=0.0``) edges.  On top of that: per-layer bounds via
+single-leaf schedules, declared error budgets (``numerics/budget-exceeded``
+both from :func:`check_error_budget` and from the
+``build_plan(..., validate=True)`` hook), zero findings on the clean repo,
+noise-gain linearity for the autotune proxy, and the CLI exit-code
+contract (0 clean / 1 error findings / 2 unknown passes).
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.analysis import numerics
+from repro.analysis.report import RULES, Report
+from repro.core.policy import StruMConfig
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.configs import get_smoke_config
+    from repro.models import model_defs
+    from repro.models.params import init_params
+    from repro.models.transformer import forward_train
+
+    cfg = dataclasses.replace(get_smoke_config("qwen2_7b"), dtype="float32")
+    params = init_params(model_defs(cfg), seed=0, dtype_override="float32")
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 48), 0,
+                              cfg.vocab_size)
+
+    def fn(p, t):
+        return forward_train(p, {"tokens": t}, cfg)[0]
+
+    return cfg, params, toks, fn
+
+
+def _analyzed(params, toks, fn, scfg):
+    plan = engine.build_plan(params, cfg=scfg, backend="xla", pack=True)
+    stats = numerics.leaf_stats_from_plan(plan, params)
+    res, rep = numerics.analyze(fn, plan.params, toks, stats=stats,
+                                location=f"test[{scfg.method}]")
+    return plan, res, rep
+
+
+# ------------------------------------------------------- soundness grid --
+
+GRID = [
+    StruMConfig(method="dliq", w=4, p=1.0, q=4),     # everything low
+    StruMConfig(method="dliq", w=8, p=0.0, q=4),     # n_low = 0 edge
+    StruMConfig(method="dliq", w=8, p=0.5, q=4),
+    StruMConfig(method="mip2q", w=4, p=0.0, L=3),    # n_low = 0 edge
+    StruMConfig(method="mip2q", w=4, p=1.0, L=3),    # everything low
+    StruMConfig(method="mip2q", w=8, p=0.5, L=3),
+]
+
+
+@pytest.mark.parametrize(
+    "scfg", GRID, ids=[f"{c.method}_w{c.w}_p{c.p}" for c in GRID])
+def test_static_bound_dominates_measured(setup, scfg):
+    """The soundness gate: static end-to-end bound >= teacher-forced
+    measured error, with a finite output interval, no unsupported
+    primitives, and zero findings on the clean model."""
+    _, params, toks, fn = setup
+    plan, res, rep = _analyzed(params, toks, fn, scfg)
+    assert rep.ok and not rep.findings, rep.render()
+    assert not res.unsupported, res.unsupported
+    assert np.isfinite(res.interval[0]) and np.isfinite(res.interval[1])
+    assert np.isfinite(res.total)
+
+    measured = numerics.measured_error(fn, (params, toks),
+                                       (plan.params, toks))
+    assert res.total >= measured, \
+        f"UNSOUND: static {res.total} < measured {measured}"
+    # every packed entry contributed an error tag (and only those)
+    assert set(res.per_tag) == set(
+        n for n, e in plan.entries.items() if e.leaf is not None)
+
+
+def test_per_layer_bound_single_leaf_schedule(setup):
+    """Quantize exactly one tensor: the static per-layer bound for that
+    tag must dominate the measured error of swapping just that leaf."""
+    from repro.autotune.schedule import StruMSchedule
+
+    _, params, toks, fn = setup
+    scfg = StruMConfig(method="dliq", w=8, p=0.5, q=4)
+    full = engine.build_plan(params, cfg=scfg, backend="xla", pack=True)
+    name = sorted(n for n, e in full.entries.items()
+                  if e.leaf is not None)[0]
+    sched = StruMSchedule(assignments={name: scfg})
+    plan = engine.build_plan(params, schedule=sched, backend="xla",
+                             pack=True)
+    stats = numerics.leaf_stats_from_plan(plan, params)
+    res, rep = numerics.analyze(fn, plan.params, toks, stats=stats)
+    assert rep.ok, rep.render()
+    assert set(res.per_tag) == {name}
+    measured = numerics.measured_error(fn, (params, toks),
+                                       (plan.params, toks))
+    assert res.per_tag[name] >= measured
+    assert res.total == pytest.approx(res.per_tag[name])
+
+
+def test_err2_estimate_tracks_method_ordering(setup):
+    """The estimate channel (no soundness claim) must still be usable as
+    a proxy: more aggressive schedules predict more output noise."""
+    _, params, toks, fn = setup
+    mild = StruMConfig(method="dliq", w=8, p=0.25, q=4)
+    harsh = StruMConfig(method="dliq", w=8, p=1.0, q=2)
+    _, res_mild, _ = _analyzed(params, toks, fn, mild)
+    _, res_harsh, _ = _analyzed(params, toks, fn, harsh)
+    assert 0.0 < res_mild.total_err2 < res_harsh.total_err2
+
+
+# ---------------------------------------------------------- error budgets --
+
+def test_check_error_budget_total_and_per_layer(setup):
+    _, params, toks, fn = setup
+    scfg = StruMConfig(method="mip2q", w=8, p=0.5, L=3)
+    _, res, _ = _analyzed(params, toks, fn, scfg)
+    assert res.total > 0
+
+    # generous budgets: silent
+    ok = numerics.check_error_budget(
+        res, {"total": res.total * 2, "per_layer": res.total * 2})
+    assert ok.ok and not ok.findings, ok.render()
+
+    # violated total budget: exactly one numerics/budget-exceeded error
+    bad = numerics.check_error_budget(res, {"total": res.total * 0.5})
+    assert [f.rule for f in bad.findings] == ["numerics/budget-exceeded"]
+    assert bad.findings[0].severity == "error"
+
+    # per-layer dict form: cap one named tag below its bound
+    tag, bound = max(res.per_tag.items(), key=lambda kv: kv[1])
+    bad = numerics.check_error_budget(
+        res, {"per_layer": {tag: bound * 0.5}}, location="grid")
+    assert [f.rule for f in bad.findings] == ["numerics/budget-exceeded"]
+    assert tag in bad.findings[0].location
+
+
+def test_build_plan_validate_enforces_error_budget(setup):
+    """``build_plan(..., validate=True)`` fails a plan whose schedule
+    declares an error budget its packed tensors cannot meet, and accepts
+    the same schedule with a satisfiable budget."""
+    from repro.autotune.schedule import StruMSchedule
+
+    _, params, _, _ = setup
+    scfg = StruMConfig(method="dliq", w=8, p=0.5, q=4)
+    full = engine.build_plan(params, cfg=scfg, backend="xla", pack=True)
+    name = sorted(n for n, e in full.entries.items()
+                  if e.leaf is not None)[0]
+    bound = numerics.per_tensor_bound(
+        full.entries[name],
+        dict(_named(params))[name])
+    assert bound > 0
+
+    tight = StruMSchedule(assignments={name: scfg},
+                          meta={"budget": {"error_budget": bound * 0.5}})
+    with pytest.raises(ValueError, match="validate=True"):
+        engine.build_plan(params, schedule=tight, backend="xla",
+                          pack=True, validate=True)
+
+    loose = StruMSchedule(assignments={name: scfg},
+                          meta={"budget": {"error_budget": bound * 2}})
+    plan = engine.build_plan(params, schedule=loose, backend="xla",
+                             pack=True, validate=True)
+    assert plan.entries[name].leaf is not None
+
+
+def _named(params):
+    from repro.core.apply import _named_leaves
+    return _named_leaves(params)
+
+
+def test_suite_numerics_pass_clean():
+    """The CI gate in miniature: the shipped repo produces zero numerics
+    findings (soundness self-check included)."""
+    from repro.analysis.suite import verify_numerics
+
+    report = verify_numerics()
+    assert report.ok and not report.findings, report.render()
+
+
+# ------------------------------------------------------------ noise gains --
+
+def test_output_gains_linearity(setup):
+    """``err2`` propagation is linear in the small-seed regime (seeds
+    that never hit the width^2 saturation cap, i.e. real quantization
+    noise): 4x the seed gives 4x the output power, per-tag channels stay
+    independent, and the ``output_gains`` unit seeds are positive for
+    every leaf on the output path."""
+    _, params, toks, fn = setup
+    scfg = StruMConfig(method="dliq", w=8, p=0.5, q=4)
+    plan = engine.build_plan(params, cfg=scfg, backend="xla", pack=True)
+    names = sorted(n for n, e in plan.entries.items()
+                   if e.leaf is not None)[:2]
+    assert len(names) == 2
+    gains = numerics.output_gains(fn, params, toks, names=tuple(names))
+    assert all(g > 0 for g in gains.values()), gains
+
+    eps = 1e-12                       # far below every interval width^2
+    seeds = {names[0]: numerics.LeafStats(0.0, 0.0, err=0.0, err2=eps,
+                                          ms=0.0)}
+    res1, _ = numerics.analyze(fn, params, toks, seeds=seeds)
+    seeds4 = {names[0]: numerics.LeafStats(0.0, 0.0, err=0.0, err2=4 * eps,
+                                           ms=0.0)}
+    res4, _ = numerics.analyze(fn, params, toks, seeds=seeds4)
+    g1 = res1.per_tag_err2[names[0]]
+    assert g1 > 0
+    assert res4.per_tag_err2[names[0]] == pytest.approx(4.0 * g1, rel=1e-6)
+
+    both = {n: numerics.LeafStats(0.0, 0.0, err=0.0, err2=eps, ms=0.0)
+            for n in names}
+    res_b, _ = numerics.analyze(fn, params, toks, seeds=both)
+    assert res_b.per_tag_err2[names[0]] == pytest.approx(g1, rel=1e-6)
+    assert set(res_b.per_tag_err2) == set(names)
+
+
+def test_output_error_profile_rows(setup):
+    """The autotune bridge: every profiled row gains an ``output_err2``
+    map and a positive gain, and the predicted power is gain * ms *
+    10^(-SQNR/10)."""
+    from repro.autotune import output_error_profile
+
+    _, params, toks, fn = setup
+    prof = output_error_profile(params, fn, toks)
+    assert prof
+    for name, row in prof.items():
+        assert row["gain"] > 0, name
+        assert set(row["output_err2"]) == set(row["sqnr_db"])
+        for key, sq in row["sqnr_db"].items():
+            want = row["gain"] * row["ms"] * 10.0 ** (-sq / 10.0)
+            assert row["output_err2"][key] == pytest.approx(want, rel=1e-6)
+
+
+# -------------------------------------------------------------- CLI gates --
+
+def _fake_run_all(report):
+    def run_all(arches=("qwen2_7b",), passes=(), lint_cfgs=None):
+        return report, None
+    return run_all
+
+
+def test_cli_exit_codes(monkeypatch, capsys):
+    from repro.analysis import __main__ as cli
+
+    clean = Report()
+    monkeypatch.setattr("repro.analysis.suite.run_all",
+                        _fake_run_all(clean))
+    assert cli.main(["--passes", "numerics"]) == 0
+
+    dirty = Report()
+    dirty.add("error", "numerics/budget-exceeded", "x", "over budget")
+    monkeypatch.setattr("repro.analysis.suite.run_all",
+                        _fake_run_all(dirty))
+    assert cli.main(["--passes", "numerics"]) == 1
+    assert "numerics/budget-exceeded" in capsys.readouterr().out
+
+    assert cli.main(["--passes", "numerics,warp-drive"]) == 2
+    assert "warp-drive" in capsys.readouterr().err
+
+
+def test_cli_json_round_trip(monkeypatch, capsys):
+    from repro.analysis import __main__ as cli
+
+    report = Report()
+    report.add("error", "numerics/unsound-bound", "loc", "bound < measured")
+    report.add("warning", "registry/priority-overlap", "a", "b")
+    monkeypatch.setattr("repro.analysis.suite.run_all",
+                        _fake_run_all(report))
+    assert cli.main(["--json"]) == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["counts"] == {"error": 1, "warning": 1, "info": 0}
+    rules = {f["rule"] for f in doc["findings"]}
+    assert rules == {"numerics/unsound-bound", "registry/priority-overlap"}
+    assert all(f["rule"] in RULES for f in doc["findings"])
+
+
+def test_cli_list_rules_includes_numerics(capsys):
+    from repro.analysis import __main__ as cli
+
+    assert cli.main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in ("numerics/budget-exceeded", "numerics/unsound-bound",
+                 "numerics/unsupported-op", "numerics/unbounded"):
+        assert rule in out, rule
+
+
+def test_cli_docs_in_sync():
+    """The docs-drift gate: the committed README's rules glossary and
+    registry coverage table match the analyzer's own data."""
+    from repro.analysis import __main__ as cli
+
+    assert cli.main(["--check-docs"]) == 0

@@ -261,11 +261,13 @@ def test_validate_chrome_trace_rejects_malformed(tmp_path):
 
 # -------------------------------------------------------- deprecation shim
 
-def test_engine_all_gather_stats_shim_warns():
+def test_engine_all_gather_stats_shim_removed():
+    """The deprecated ``engine.all_gather_stats`` shim is gone; the
+    telemetry home is the only entry point."""
+    assert not hasattr(engine, "all_gather_stats")
+    assert "all_gather_stats" not in engine.__all__
+
     def fn(x):
         return x * 2
-    x = jnp.ones((4,), jnp.float32)
-    with pytest.deprecated_call():
-        st = engine.all_gather_stats(fn, x)
+    st = telemetry.all_gather_stats(fn, jnp.ones((4,), jnp.float32))
     assert st["ops"] == [] and st["gathered_bytes"] == 0
-    assert st == telemetry.all_gather_stats(fn, x)
