@@ -77,6 +77,25 @@ EXPECTED_PALLAS = {
     "dliq_w12_p0.0": "pallas:dense",   # no w%8 constraint on the hi-only path
 }
 
+# cache codecs through the fused-attention partition (attn=True contexts):
+# packed codecs fuse page-gather + decode + flash-decode attention; p=1.0
+# upgrades to the maskfree kernel; fp passthrough stays on the
+# gather-then-einsum fallback
+ATTN_CODECS = [
+    ("fp", None),
+    ("dliq_p0.5", StruMConfig(method="dliq", p=0.5, q=4)),
+    ("mip2q_p0.5", StruMConfig(method="mip2q", p=0.5, L=7)),
+    ("sparsity_p0.5", StruMConfig(method="sparsity", p=0.5)),
+    ("dliq_p1.0", StruMConfig(method="dliq", p=1.0, q=4)),
+]
+EXPECTED_ATTN = {
+    "fp": "cache:attn_unfused",
+    "dliq_p0.5": "cache:attn_fused",
+    "mip2q_p0.5": "cache:attn_fused",
+    "sparsity_p0.5": "cache:attn_fused",
+    "dliq_p1.0": "cache:attn_fused_maskfree",
+}
+
 # ... and for expert-stack leaves (info.lead != ()): the grouped family
 EXPECTED_GROUPED = {
     "mip2q_p0.5": "pallas:grouped",
@@ -133,6 +152,77 @@ def check_selection(verbose: bool = True) -> None:
         print("selection check: "
               f"{len(CONFIGS)} configs (2-D + stacked) + heterogeneous and "
               f"expert-stack plans OK")
+
+
+def run_attn_rows(smoke: bool = False) -> list:
+    """Fused paged decode attention vs the gather-then-einsum path.
+
+    One token per slot attends over ``pp`` sealed pages per codec; the
+    fused kernel's sealed-pool HBM read is the mask+hi+lo payload, the
+    unfused path additionally materializes the decoded fp pages before its
+    einsum.  Also asserts the attn-partition selection map
+    (``EXPECTED_ATTN``) — the serving-lane analogue of
+    ``check_selection``.
+    """
+    from repro.engine import cache as ec
+    rng = np.random.default_rng(0)
+    if smoke:
+        ps, kv, hd, n_pages, b, pp, rep = 16, 2, 16, 8, 2, 4, 2
+    else:
+        ps, kv, hd, n_pages, b, pp, rep = 64, 4, 64, 64, 4, 16, 4
+    feat = kv * hd
+    rows = []
+    for label, cfg in ATTN_CODECS:
+        fused = ec.build_cache_spec(cfg, page_size=ps, feat=feat,
+                                    backend="interpret")
+        unfused = ec.build_cache_spec(cfg, page_size=ps, feat=feat,
+                                      backend="xla")
+        assert fused.attn_variant == EXPECTED_ATTN[label], \
+            (label, fused.attn_variant)
+        assert unfused.attn_variant == "cache:attn_unfused", unfused
+
+        def mkpool():
+            pages = jnp.asarray(
+                rng.normal(size=(n_pages, ps, feat)).astype(np.float32))
+            if not fused.packed:
+                return {"pages": pages}
+            return jax.vmap(lambda pg: ec.encode_page(pg, cfg))(pages)
+        pool = {"k": mkpool(), "v": mkpool()}
+        qf = jnp.asarray(rng.normal(size=(b, kv, rep, hd)).astype(np.float32))
+        table = jnp.asarray(rng.permutation(n_pages)[:b * pp]
+                            .reshape(b, pp).astype(np.int32))
+        n_valid = jnp.full((b,), pp, jnp.int32)
+
+        fp_bytes = 2 * b * pp * ps * feat * 4      # decoded/raw pages, f32
+        packed = fp_bytes if not fused.packed else \
+            2 * b * pp * ec.page_payload_bytes(ps, feat, cfg)
+        y_ref, tol = None, None
+        for spec in (fused, unfused):
+            name = spec.attn_variant
+            is_fused = name != "cache:attn_unfused"
+            reps = 1 if (is_fused and not smoke) else 3
+            t_call, y = _bench_call(ec.attn_sealed_partial, pool, qf,
+                                    table, n_valid, spec, reps=reps)
+            if y_ref is None:
+                y_ref = y
+                tol = 1e-4 * max(1.0, float(jnp.max(jnp.abs(y[0]))))
+            err = max(float(jnp.max(jnp.abs(a - r)))
+                      for a, r in zip(y, y_ref))
+            rows.append({
+                "config": f"attn_{label}", "variant": name,
+                "m": b * rep * kv, "k": pp * ps, "n": hd,
+                "err_tol": tol,
+                "packed_bytes": packed,
+                "fp_intermediate_bytes": 0 if is_fused else fp_bytes,
+                "ratio_vs_int8": packed / (fp_bytes // 4),
+                "ratio_vs_bf16": packed / (fp_bytes // 2),
+                "proj_decode_us_bf16": (fp_bytes // 2) / HBM_BW * 1e6,
+                "proj_decode_us_strum": packed / HBM_BW * 1e6,
+                "sec_per_call": t_call,
+                "tokens_per_s": b / t_call,
+                "max_abs_err": err,
+            })
+    return rows
 
 
 def _bench_call(fn, *args, reps: int = 3, **kw) -> tuple[float, jnp.ndarray]:
@@ -241,8 +331,12 @@ def run(smoke: bool = False):
                     "tokens_per_s": e * c / t_call,
                     "max_abs_err": err,
                 })
+    attn_rows = run_attn_rows(smoke=smoke)
+    rows += attn_rows
     from benchmarks.common import write_report
     write_report("kernel_bench", rows, smoke=smoke)
+    write_report("BENCH_decode_attention", attn_rows, smoke=smoke,
+                 interpret=jax.default_backend() != "tpu")
     print("name,us_per_call,derived")
     for r in rows:
         print(f"kernel/{r['config']}/{r['variant']}_"

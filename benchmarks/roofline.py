@@ -83,8 +83,69 @@ def pick_hillclimb_cells(rows):
     return worst, coll, paper
 
 
+PEAK_FLOPS = 197e12     # v5e bf16
+HBM_BW = 819e9          # v5e bytes/s; ridge ~ 240 FLOP/byte
+
+#: (label, w, p, q_bits) — cache codecs through the fused decode-attention
+#: kernel; bytes/elem = (w/8 + n_high + ceil(n_low*q/8)) / w, mask+hi+lo
+ATTN_CODECS = [
+    ("fp32_pages", None, None, None),
+    ("dliq_q4_p0.5", 16, 0.5, 4),
+    ("mip2q_L7_p0.5", 16, 0.5, 4),
+    ("sparsity_p0.5", 16, 0.5, 0),
+]
+
+
+def attn_intensity_rows(s=32768, n_heads=32, n_kv=8, hd=128):
+    """Arithmetic intensity of one fused decode-attention step (per layer):
+    QK^T + PV FLOPs over the sealed-KV HBM bytes the kernel actually
+    reads (packed mask+hi+lo vs raw fp pages).  Decode attention sits far
+    left of the ridge — bandwidth-bound — so the Eq.-1 byte cut converts
+    ~1:1 into step latency."""
+    flops = 4 * n_heads * s * hd            # 2 matmuls x 2 FLOP/MAC
+    rows = []
+    for label, w, p, q in ATTN_CODECS:
+        if w is None:
+            bpe = 4.0                       # raw f32 pages (unfused gather)
+            kernel = "cache:attn_unfused"
+        else:
+            n_low = round(p * w)
+            bpe = (w // 8 + (w - n_low) + -(-n_low * q // 8)) / w
+            kernel = "cache:attn_fused"
+        kv_bytes = 2 * s * n_kv * hd * bpe
+        ai = flops / kv_bytes
+        rows.append({
+            "codec": label, "kernel": kernel, "bytes_per_elem": bpe,
+            "kv_bytes": kv_bytes, "flops": flops, "intensity": ai,
+            "t_mem_us": kv_bytes / HBM_BW * 1e6,
+            "roofline_frac": min(1.0, ai / (PEAK_FLOPS / HBM_BW)),
+        })
+    return rows
+
+
+def fmt_attn_table(rows):
+    hdr = (f"{'decode-attention codec':24s}{'kernel':20s}{'B/elem':>8s}"
+           f"{'KV MB/step':>12s}{'FLOP/B':>8s}{'t_mem(us)':>11s}"
+           f"{'ridge%':>8s}")
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        out.append(f"{r['codec']:24s}{r['kernel']:20s}"
+                   f"{r['bytes_per_elem']:8.3f}"
+                   f"{r['kv_bytes']/1e6:12.2f}{r['intensity']:8.2f}"
+                   f"{r['t_mem_us']:11.1f}{100*r['roofline_frac']:7.1f}%")
+    return "\n".join(out)
+
+
 def main():
+    print("fused decode-attention arithmetic intensity "
+          "(32k ctx, 32 heads / 8 KV, hd=128, per layer):")
+    print(fmt_attn_table(attn_intensity_rows()))
+    if not os.path.exists(RESULTS):
+        print(f"\n(no {RESULTS}: run the dry-run sweep for the full "
+              f"per-cell roofline table)")
+        return 0
     rows = load()
+    print()
     print(fmt_table(rows, "16x16"))
     print()
     print(fmt_table(rows, "2x16x16"))

@@ -142,6 +142,89 @@ def run_codecs(cfg, params, smoke: bool) -> list:
     return rows
 
 
+def run_attn(cfg, params, smoke: bool) -> list:
+    """Fused decode attention vs gather-then-einsum, per cache codec.
+
+    Each codec drains the same queue twice: once under a pallas-family
+    cache backend (packed codecs select ``cache:attn_fused*`` — the
+    attention megakernel) and once under xla (the unfused fallback).
+    Reports decode-attention HBM bytes per token — sealed pools leave HBM
+    as mask+hi+lo bytes in both modes (the fused number is cross-checked
+    against the trace-time ``attn/fused/packed_bytes`` counter), but only
+    the unfused path round-trips the decoded fp pages — and tokens/s.
+    """
+    from repro.engine import cache as cache_mod
+    from repro.serving import BatchScheduler
+    from repro.serving import pages as pages_mod
+    n_req = 4 if smoke else 8
+    max_new = 6 if smoke else 16
+    lens = (6, 9) if smoke else (12, 24, 48)
+    max_len = 48 if smoke else 128
+    codecs = [c for c in CODECS if c[0] != "sparsity_p0.5"] if smoke \
+        else CODECS
+    feat = pages_mod.attn_feat_dim(cfg)
+    rows, fp_read = [], None
+    for run_idx, (label, codec) in enumerate(codecs):
+        for mode_idx, (mode, backend) in enumerate(
+                (("fused", "interpret"), ("unfused", "xla"))):
+            sched = BatchScheduler(cfg, params, n_slots=2 if smoke else 4,
+                                   max_len=max_len, kv_cache=codec,
+                                   page_size=16, cache_backend=backend)
+            av = sched.spec.attn_variant
+            if mode == "unfused" or codec is None:
+                assert av == "cache:attn_unfused", (label, mode, av)
+            elif smoke and codec.q == 4:
+                # acceptance: packed q=4 lanes under a pallas-family
+                # backend run the fused attention kernel
+                assert av == "cache:attn_fused", (label, av)
+            ns, pps = sched.n_slots, sched.pages_per_seq
+            n_pools = sum(1 for v in sched.pools.values() if v)
+            ps = sched.spec.page_size
+            fp_pages = n_pools * 2 * ns * pps * ps * feat * 4
+            sealed_read = fp_pages if not sched.spec.packed else \
+                n_pools * 2 * ns * pps * \
+                cache_mod.page_payload_bytes(ps, feat, codec)
+            if codec is None:
+                fp_read = sealed_read
+            with telemetry.recording() as rec:
+                for r in _queue(cfg, n_req, lens, max_new,
+                                uid0=10_000 + 100 * (2 * run_idx + mode_idx)):
+                    sched.submit(r)
+                t0 = time.time()
+                done = sched.run_to_completion(max_steps=2000)
+                dt = time.time() - t0
+            assert len(done) == n_req, (label, mode, len(done))
+            toks = sum(len(r.output) for r in done)
+            traced = rec.counter("attn/fused/packed_bytes")
+            if av == "cache:attn_fused":
+                # trace-time counter = one decode-lane trace (ns slots)
+                # + one chunked-prefill trace (a single slot row): both
+                # must gather exactly the mask+hi+lo payload
+                assert traced == sealed_read + sealed_read // ns, \
+                    (label, traced, sealed_read, ns)
+            rows.append({
+                "section": "attn", "config": f"{label}_{mode}",
+                "variant": av, "requests": n_req, "tokens": toks,
+                "steps": sched._steps, "sec_total": dt,
+                "tokens_per_s": toks / dt,
+                "attn_read_bytes_per_step": sealed_read,
+                "attn_read_bytes_per_token": sealed_read // ns,
+                "fp_intermediate_bytes_per_step":
+                    0 if av.startswith("cache:attn_fused") else fp_pages,
+                "traced_fused_packed_bytes": traced,
+                "attn_read_ratio_vs_fp":
+                    None if fp_read is None else sealed_read / fp_read,
+                **_latency_fields(rec),
+            })
+            if smoke and codec is not None and codec.q == 4 \
+                    and sched.spec.packed:
+                # Eq.-1: packed sealed reads vs the fp-page baseline
+                want = codec.compression_ratio / 4
+                got = sealed_read / fp_read
+                assert abs(got - want) < 1e-9, (label, got, want)
+    return rows
+
+
 def run_hol(cfg, params, smoke: bool) -> list:
     """Steps-to-drain a mixed queue: chunked vs serial prefill."""
     from repro.serving import BatchScheduler, Request
@@ -184,14 +267,23 @@ def run_hol(cfg, params, smoke: bool) -> list:
 def run(smoke: bool = False):
     from benchmarks.common import write_report
     cfg, params = _model(smoke)
-    rows = run_codecs(cfg, params, smoke) + run_hol(cfg, params, smoke)
+    rows = (run_codecs(cfg, params, smoke) + run_attn(cfg, params, smoke)
+            + run_hol(cfg, params, smoke))
     write_report("serving_bench", rows, smoke=smoke)
     print("name,us_per_call,derived")
     for r in rows:
         lat = (f"ttft_p50={r['ttft_p50_ms']:.1f}ms;"
                f"tok_p50={r['tok_p50_ms']:.1f}ms;"
                f"goodput={r['goodput_tok_s']:.1f}tok/s")
-        if r["section"] == "codec":
+        if r["section"] == "attn":
+            ratio = r["attn_read_ratio_vs_fp"]
+            print(f"serving/attn/{r['config']},"
+                  f"{r['sec_total']/max(r['steps'],1)*1e6:.0f},"
+                  f"tok_s={r['tokens_per_s']:.1f};"
+                  f"attn_bytes_per_tok={r['attn_read_bytes_per_token']};"
+                  f"vs_fp=x{ratio if ratio is None else round(ratio, 4)};"
+                  f"{lat}")
+        elif r["section"] == "codec":
             print(f"serving/codec/{r['config']},"
                   f"{r['sec_total']/max(r['steps'],1)*1e6:.0f},"
                   f"tok_s={r['tokens_per_s']:.1f};"

@@ -6,15 +6,19 @@ The pass generalizes the ``all_gather`` byte walk that used to live in
 a taint analysis over the traced program:
 
 * every input leaf reached through a ``mask`` / ``hi`` / ``lo`` pytree key
-  is tagged PACKED (and ``scale`` SCALE) at its leaf root;
+  is tagged PACKED (``scale`` SCALE, raw fp cache ``pages`` FPPAGE) at its
+  leaf root;
 * taints propagate through equations, recursing into sub-jaxprs
   (pjit / shard_map / scan / cond / pallas_call kernels);
 * the first equation that turns an integer PACKED value into floats is a
   *decode site*; the enclosing (sub-)jaxpr is its *decode region*;
 * gather-class collectives (``all_gather`` / ``all_to_all`` /
-  ``ppermute``) are recorded with their operand bytes and taint state.
+  ``ppermute``) are recorded with their operand bytes and taint state;
+* gather-class *reads* (the ``gather`` primitive — page-table lookups into
+  pools) of tainted operands are recorded the same way: their materialized
+  bytes are the HBM read a paged decode step performs on sealed pools.
 
-Three invariants fall out (:func:`verify`):
+The invariants that fall out (:func:`verify`):
 
 ``dataflow/fp-collective``      a gather-class collective must move packed
                                 payload (or SCALE-tagged) bytes, never a
@@ -27,6 +31,11 @@ Three invariants fall out (:func:`verify`):
 ``dataflow/decode-multiplicity`` each payload leaf decodes in at most one
                                 program region (no re-materialized fp
                                 intermediates).
+``dataflow/fp-page``            armed via ``forbid_fp_pages``: a paged lane
+                                claiming the Eq.-1 cache read must not
+                                gather raw fp pages (FPPAGE) nor re-gather
+                                pool bytes it already decoded — sealed
+                                pools leave HBM as mask+hi+lo only.
 
 Everything here is trace-time only: no kernel runs, no devices needed
 beyond what tracing requires (a 1-device mesh traces the same collectives
@@ -49,20 +58,30 @@ __all__ = ["Taint", "CollectiveOp", "DataflowTrace", "trace_dataflow",
 
 PAYLOAD_KEYS = ("mask", "hi", "lo")
 SCALE_KEY = "scale"
+PAGES_KEY = "pages"   # raw fp pages of a passthrough cache pool
 #: collectives that *move* operand bytes to other devices (a psum reduces
 #: partials — the row-parallel contraction — and is not byte-expansion)
 GATHER_COLLECTIVES = frozenset({"all_gather", "all_to_all", "ppermute"})
+#: gather-class *read* primitives: page-table lookups into pool arrays
+GATHER_READS = frozenset({"gather"})
 
-PACKED, SCALE, DECODED = "packed", "scale", "decoded"
-_RANK = {None: 0, SCALE: 1, PACKED: 2, DECODED: 3}
+PACKED, SCALE, DECODED, FPPAGE = "packed", "scale", "decoded", "fp_page"
+_RANK = {None: 0, SCALE: 1, FPPAGE: 2, PACKED: 3, DECODED: 4}
 
 
 @dataclasses.dataclass(frozen=True)
 class Taint:
-    """Lattice value: ``state`` plus the payload-leaf tags it derives from."""
+    """Lattice value: ``state`` plus the payload-leaf tags it derives from.
+
+    ``root`` marks the taint seeded on an *input leaf itself* (never on a
+    value computed from one): a gather whose operand carries a root taint
+    reads stored payload bytes straight out of a pool/leaf, while gathers
+    over derived intermediates (code matrices, LUT lookups inside a
+    decoder) are compute-local and do not touch HBM-resident payload."""
 
     state: str
     tags: frozenset = frozenset()
+    root: bool = False
 
 
 def _join(taints) -> Optional[Taint]:
@@ -85,6 +104,7 @@ class CollectiveOp:
     gathered_bytes: int
     state: Optional[str]          # taint state of the operand (None = clean)
     tags: tuple
+    root: bool = False            # operand is a stored input leaf itself
 
 
 @dataclasses.dataclass
@@ -94,6 +114,10 @@ class DataflowTrace:
     collectives: list
     decode_regions: dict          # tag -> set of region ids
     out_taints: list
+    gathers: list = dataclasses.field(default_factory=list)
+    # tainted gather-primitive reads (pool lookups), as CollectiveOps:
+    # operand_bytes = the pool resident bytes, gathered_bytes = the bytes
+    # the lookup materializes (== the HBM read of the sealed pools)
 
     def stats(self, mesh=None) -> dict:
         """The legacy ``all_gather_stats`` dict (ops / operand_bytes /
@@ -116,6 +140,14 @@ class DataflowTrace:
                        if o.primitive in GATHER_COLLECTIVES
                        and o.state == PACKED))
 
+    def sealed_gather_packed_bytes(self) -> int:
+        """Bytes the traced step's gather-class pool reads materialize out
+        of PACKED-state *stored leaves* — the sealed-cache HBM read per
+        step.  Gathers over derived intermediates (decoder-internal code
+        matrices) are compute-local and excluded."""
+        return int(sum(o.gathered_bytes for o in self.gathers
+                       if o.state == PACKED and o.root))
+
 
 def _key_name(entry) -> Optional[str]:
     """The string name of one pytree path entry (dict key / attr / index)."""
@@ -133,9 +165,11 @@ def _leaf_taint(path) -> Optional[Taint]:
     field = _key_name(path[-1])
     tag = "/".join(_key_name(p) for p in path[:-1]) or "<root>"
     if field in PAYLOAD_KEYS:
-        return Taint(PACKED, frozenset({tag}))
+        return Taint(PACKED, frozenset({tag}), root=True)
     if field == SCALE_KEY:
-        return Taint(SCALE, frozenset({tag}))
+        return Taint(SCALE, frozenset({tag}), root=True)
+    if field == PAGES_KEY:
+        return Taint(FPPAGE, frozenset({tag}), root=True)
     return None
 
 
@@ -163,6 +197,7 @@ def trace_dataflow(fn, *args, **kwargs) -> DataflowTrace:
     leaves = jax.tree_util.tree_leaves_with_path((args, kwargs))
 
     collectives: list = []
+    gathers: list = []
     decode_regions: dict = {}
     region_ids = itertools.count()
 
@@ -187,6 +222,23 @@ def trace_dataflow(fn, *args, **kwargs) -> DataflowTrace:
                     gathered_bytes=nbytes * width,
                     state=t.state if t else None,
                     tags=tuple(sorted(t.tags)) if t else ()))
+
+            if prim in GATHER_READS and in_taints and in_taints[0] is not None:
+                # tainted pool lookup: record what the read materializes.
+                # untainted gathers (token embeddings etc.) are not pool
+                # traffic and stay out of the byte accounting.
+                t = in_taints[0]
+                a_in = eqn.invars[0].aval
+                a_out = eqn.outvars[0].aval
+                gathers.append(CollectiveOp(
+                    primitive=prim, shape=tuple(a_out.shape),
+                    dtype=str(a_out.dtype),
+                    operand_bytes=int(np.prod(a_in.shape))
+                    * a_in.dtype.itemsize,
+                    gathered_bytes=int(np.prod(a_out.shape))
+                    * a_out.dtype.itemsize,
+                    state=t.state, tags=tuple(sorted(t.tags)),
+                    root=t.root))
 
             subs = list(_sub_jaxprs(eqn.params))
             if subs:
@@ -236,7 +288,7 @@ def trace_dataflow(fn, *args, **kwargs) -> DataflowTrace:
     out = walk(closed.jaxpr, env0, next(region_ids))
     return DataflowTrace(collectives=collectives,
                          decode_regions=decode_regions,
-                         out_taints=[out])
+                         out_taints=[out], gathers=gathers)
 
 
 def collective_stats(fn, *args, mesh=None, **kwargs) -> dict:
@@ -248,13 +300,22 @@ def collective_stats(fn, *args, mesh=None, **kwargs) -> dict:
 def verify(fn, *args, location: str = "<fn>", mesh=None,
            expected_payload_bytes: Optional[int] = None,
            cfg=None, k_dim: Optional[int] = None,
-           n_out: Optional[int] = None, **kwargs) -> Report:
+           n_out: Optional[int] = None,
+           expected_gather_packed_bytes: Optional[int] = None,
+           forbid_fp_pages: bool = False, **kwargs) -> Report:
     """Run the dataflow pass over ``fn`` and report invariant violations.
 
     ``expected_payload_bytes`` (usually ``mask.size + hi.size + lo.size`` of
     the *global* leaf) arms the Eq.-1 byte check against the gathered
     packed bytes; passing ``cfg`` (+ ``k_dim``/``n_out``) additionally pins
     that payload to the paper's ``K x N x compression_ratio``.
+
+    ``expected_gather_packed_bytes`` arms the cache-side Eq.-1 check: the
+    bytes all gather-class *pool reads* materialize out of PACKED operands
+    (per traced step — a layer scan's body counts once) must equal it.
+    ``forbid_fp_pages=True`` additionally errors on any FPPAGE pool read
+    (raw fp pages) and on DECODED re-gathers of pool-tagged data — together
+    they prove a paged lane touches sealed pools as mask+hi+lo bytes only.
     """
     report = Report()
     trace = trace_dataflow(fn, *args, **kwargs)
@@ -274,6 +335,24 @@ def verify(fn, *args, location: str = "<fn>", mesh=None,
             report.add("warning", "dataflow/fp-collective", where,
                        f"collective moves {op.operand_bytes} untagged "
                        f"floating-point bytes per device (dense operand?)")
+
+    if forbid_fp_pages:
+        pool_tags = set().union(*(set(o.tags) for o in trace.gathers
+                                  if o.root
+                                  and o.state in (PACKED, FPPAGE)), set())
+        for op in trace.gathers:
+            where = (f"{location}: {op.primitive} {op.shape} {op.dtype}"
+                     + (f" tags={list(op.tags)}" if op.tags else ""))
+            if op.state == FPPAGE:
+                report.add("error", "dataflow/fp-page", where,
+                           f"pool read materializes {op.gathered_bytes} raw "
+                           f"fp page bytes; the packed lane must read "
+                           f"mask+hi+lo only")
+            elif op.state == DECODED and set(op.tags) & pool_tags:
+                report.add("error", "dataflow/fp-page", where,
+                           f"pool bytes re-gathered after decode "
+                           f"({op.gathered_bytes} fp bytes); gather packed "
+                           f"and decode in the kernel")
 
     for tag, regions in trace.decode_regions.items():
         if len(regions) > 1:
@@ -299,4 +378,12 @@ def verify(fn, *args, location: str = "<fn>", mesh=None,
                            f"!= Eq.-1 prediction {eq1} B "
                            f"(K={k_dim} N={n_out} r="
                            f"{cfg.compression_ratio:.4f})")
+
+    if expected_gather_packed_bytes is not None:
+        moved = trace.sealed_gather_packed_bytes()
+        if moved != int(expected_gather_packed_bytes):
+            report.add("error", "dataflow/eq1-bytes", location,
+                       f"gather-class pool reads materialize {moved} packed "
+                       f"bytes per traced step; the sealed pools' mask+hi+lo "
+                       f"payload is {int(expected_gather_packed_bytes)}")
     return report

@@ -141,6 +141,53 @@ def _lint_cache_variant(variant, cfg: Optional[StruMConfig],
                    f"contract wants {lead + (page, feat)} float32")
 
 
+def _lint_attn_variant(variant, cfg: Optional[StruMConfig],
+                       report: Report) -> None:
+    """Abstract-eval one ``cache:attn_*`` variant against its sealed-partial
+    contract: ``fn(pool, qf, table, n_valid, ...) -> (acc, m, l)`` with
+    acc (B, KV, R, hd) and m/l (B, KV, R), all float32."""
+    from repro.engine.cache import _is_identity, build_cache_spec, encode_page
+
+    page, kv, hd, b, pp, r = 64, 2, 16, 2, 3, 2
+    feat = kv * hd
+    info = LeafInfo(k_dim=page, n_out=feat, cache=True, attn=True)
+    if not variant.supports(cfg, info):
+        return
+    if cfg is not None and not _is_identity(cfg) and page % cfg.w:
+        return
+    where = (f"{variant.name} cfg="
+             + (f"({cfg.method} w={cfg.w} q={cfg.q})" if cfg else "None")
+             + f" page={page} feat={feat}")
+    try:
+        spec = build_cache_spec(cfg, page_size=page, feat=feat)
+        if cfg is None or _is_identity(cfg):
+            leaf = {"pages": jax.ShapeDtypeStruct((4, page, feat),
+                                                  jnp.float32)}
+        else:
+            structs = jax.eval_shape(
+                functools.partial(encode_page, cfg=cfg),
+                jax.ShapeDtypeStruct((page, feat), jnp.float32))
+            leaf = {k: jax.ShapeDtypeStruct((4,) + tuple(v.shape), v.dtype)
+                    for k, v in structs.items()}
+        pool = {"k": leaf, "v": leaf}
+        jaxpr = jax.make_jaxpr(
+            lambda po, qf, tb, nv: variant.fn(po, qf, tb, nv, cfg=cfg,
+                                              spec=spec, interpret=True)
+        )(pool, jax.ShapeDtypeStruct((b, kv, r, hd), jnp.float32),
+          jax.ShapeDtypeStruct((b, pp), jnp.int32),
+          jax.ShapeDtypeStruct((b,), jnp.int32))
+    except Exception as exc:  # noqa: BLE001 - lint classifies anything
+        report.add("error", _classify(exc), where,
+                   f"{type(exc).__name__}: {exc}")
+        return
+    want = [(b, kv, r, hd), (b, kv, r), (b, kv, r)]
+    got = [tuple(o.shape) for o in jaxpr.out_avals]
+    if got != want or any(o.dtype != jnp.float32 for o in jaxpr.out_avals):
+        report.add("error", "pallas/output-mismatch", where,
+                   f"traced outputs {got}, sealed-partial contract wants "
+                   f"{want} float32")
+
+
 def lint_block_contracts() -> Report:
     """Property-check the shared tiling helpers over an adversarial grid."""
     report = Report()
@@ -184,7 +231,10 @@ def lint_pallas(cfgs: Optional[list] = None,
     for name, variant in sorted(list_variants().items()):
         if variants is not None and name not in variants:
             continue
-        if variant.cache:
+        if getattr(variant, "attn", False):
+            for cfg in list(cfgs) + [None]:
+                _lint_attn_variant(variant, cfg, report)
+        elif variant.cache:
             for cfg in list(cfgs) + [None]:
                 _lint_cache_variant(variant, cfg, report)
         elif variant.family == "pallas" and not variant.sharded:

@@ -50,6 +50,7 @@ CONTEXTS = (
     ("sharded-stacked", LeafInfo(k_dim=_K, n_out=_N, lead=(4,),
                                  fsdp=("data",))),
     ("cache", LeafInfo(k_dim=_PAGE, n_out=_FEAT, cache=True)),
+    ("attn", LeafInfo(k_dim=_PAGE, n_out=_FEAT, cache=True, attn=True)),
 )
 
 BACKENDS = ("pallas", "xla", "reference")
@@ -89,7 +90,9 @@ class AuditData:
 
 def _partition_matches(variant, info: LeafInfo) -> bool:
     return (variant.sharded == bool(info.fsdp)
-            and variant.cache == bool(info.cache))
+            and variant.cache == bool(info.cache)
+            and getattr(variant, "attn", False) == bool(
+                getattr(info, "attn", False)))
 
 
 def audit_registry(cfgs: Optional[list] = None) -> tuple:

@@ -26,6 +26,14 @@ RULES: dict[str, str] = {
     "dataflow/decode-multiplicity":
         "one payload leaf is decoded in more than one program region — the "
         "fp intermediate is re-materialized instead of decoded exactly once",
+    "dataflow/fp-page":
+        "a paged lane claiming the Eq.-1 cache read gathers raw fp pages or "
+        "re-gathers pool bytes after decoding them — sealed pools must "
+        "leave HBM as mask+hi+lo bytes only",
+    "attn/unfused-lane":
+        "a packed-codec scheduler lane did not select the fused attention "
+        "variant (cache:attn_fused*) — the decode hot loop falls back to "
+        "gather-then-einsum and loses the Eq.-1 HBM ratio",
     "cache/fp-page":
         "a packed cache pool stores a floating-point payload field — fp "
         "bytes leak out of sealed pages",

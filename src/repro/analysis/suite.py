@@ -35,13 +35,14 @@ from repro.core.policy import StruMConfig
 
 __all__ = ["PASSES", "run_all", "tiny_model", "verify_local_apply",
            "verify_sharded_variants", "verify_cache_codecs",
-           "verify_scheduler_lanes", "verify_numerics",
-           "check_cache_pools"]
+           "verify_scheduler_lanes", "verify_fused_attention",
+           "verify_numerics", "check_cache_pools"]
 
 PASSES = ("dataflow", "registry", "pallas", "recompile", "numerics")
 
 _WCFG = StruMConfig(method="mip2q", w=16, p=0.5, L=5)
 _KVCFG = StruMConfig(method="dliq", w=16, p=0.5, q=4)
+_KVCFG_MIP = StruMConfig(method="mip2q", w=16, p=0.5, L=7)
 
 
 def tiny_model(arch: str = "qwen2_7b"):
@@ -209,14 +210,16 @@ def check_cache_pools(pools: dict, spec, location: str) -> Report:
 
 
 def build_tiny_scheduler(cfg, params, *, kv=_KVCFG, wcfg=_WCFG,
-                         n_slots: int = 2, max_len: int = 48):
+                         n_slots: int = 2, max_len: int = 48,
+                         cache_backend=None):
     """A packed-weights, packed-KV scheduler for lane analysis."""
     from repro import engine
     from repro.serving import BatchScheduler
 
     plan = engine.build_plan(params, cfg=wcfg, float_only=True)
     return BatchScheduler(cfg, params, n_slots=n_slots, max_len=max_len,
-                          plan=plan, kv_cache=kv, page_size=kv.w)
+                          plan=plan, kv_cache=kv, page_size=kv.w,
+                          cache_backend=cache_backend)
 
 
 def verify_scheduler_lanes(sched, location: str = "scheduler") -> Report:
@@ -236,6 +239,46 @@ def verify_scheduler_lanes(sched, location: str = "scheduler") -> Report:
         jnp.zeros((1, sched.prefill_chunk), jnp.int32), sched.pools,
         sched.hot, table, jnp.int32(0), jnp.int32(0), jnp.int32(1),
         location=f"{location}/prefill-lane"))
+    return report
+
+
+def verify_fused_attention(arch: str = "qwen2_7b", model=None) -> Report:
+    """The Eq.-1 HBM gate for the fused decode lane.
+
+    For packed q=4 codecs (DLIQ and MIP2Q) under a pallas-family backend
+    the scheduler must select ``cache:attn_fused``, and the traced decode
+    step's gather-class reads of the sealed pools must materialize exactly
+    the mask+hi+lo payload: no raw fp page bytes, no post-decode re-gather
+    (``dataflow/fp-page``), each pool decoded exactly once.  Byte counts
+    are per traced step — the layer-group scan body counts once, which is
+    exactly the per-executable granularity the telemetry counters use.
+    """
+    from repro.engine import cache as cache_mod
+    from repro.serving import pages as pages_mod
+
+    report = Report()
+    cfg, params = model or tiny_model(arch)
+    feat = pages_mod.attn_feat_dim(cfg)
+    for kv, label in ((_KVCFG, "dliq_q4"), (_KVCFG_MIP, "mip2q_L7")):
+        sched = build_tiny_scheduler(cfg, params, kv=kv,
+                                     cache_backend="interpret")
+        loc = f"{arch}/attn-fused[{label}]"
+        if sched.spec.attn_variant != "cache:attn_fused":
+            report.add("error", "attn/unfused-lane", loc,
+                       f"packed codec {kv.method} w={kv.w} q={kv.q} selected "
+                       f"{sched.spec.attn_variant!r}")
+            continue
+        ns, pps = sched.n_slots, sched.pages_per_seq
+        ppb = cache_mod.page_payload_bytes(sched.spec.page_size, feat, kv)
+        n_pools = sum(1 for v in sched.pools.values() if v)
+        table = jnp.zeros((ns, pps), jnp.int32)
+        report.extend(dataflow.verify(
+            sched._decode, sched.params,
+            jnp.zeros((ns, 1), jnp.int32), sched.pools, sched.hot,
+            jnp.zeros((ns,), jnp.int32), table,
+            jnp.ones((ns,), bool), location=f"{loc}/decode-lane",
+            expected_gather_packed_bytes=n_pools * 2 * ns * pps * ppb,
+            forbid_fp_pages=True))
     return report
 
 
@@ -319,6 +362,8 @@ def run_all(arches=("qwen2_7b",), passes=PASSES,
             if "dataflow" in passes:
                 report.extend(verify_scheduler_lanes(
                     sched, location=f"{arch}/scheduler"))
+                report.extend(verify_fused_attention(
+                    arch, model=(cfg, params)))
             if "recompile" in passes:
                 report.extend(recompile.lint_scheduler_recompiles(
                     sched=sched, location=f"{arch}/scheduler"))

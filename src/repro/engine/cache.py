@@ -47,10 +47,13 @@ from repro.engine.registry import (LeafInfo, register_kernel, resolve_backend,
                                    get_variant, select_variant)
 
 __all__ = ["CacheSpec", "build_cache_spec", "select_cache_variant",
-           "encode_page", "decode_pages", "gather_decode_pages",
+           "select_attn_variant", "encode_page", "decode_pages",
+           "gather_decode_pages", "attn_sealed_partial",
            "page_payload_bytes"]
 
 CACHE_PAYLOAD_KEYS = ("mask", "hi", "lo", "scale")
+
+NEG_INF = -1e30  # matches models.attention / kernels.strum_attention
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,6 +71,9 @@ class CacheSpec:
     variant: str = "cache:fp_passthrough"
     backend: Optional[str] = None       # backend the variant was selected
                                         # under (None = auto)
+    attn_variant: str = "cache:attn_unfused"  # fused-attention consumer of
+                                        # the sealed pools (the cache:attn_*
+                                        # partition) selected with the codec
 
     @property
     def packed(self) -> bool:
@@ -99,6 +105,15 @@ def select_cache_variant(cfg: Optional[StruMConfig], *, page_size: int,
     return select_variant(cfg, info, backend=backend)
 
 
+def select_attn_variant(cfg: Optional[StruMConfig], *, page_size: int,
+                        feat: int, backend: Optional[str] = None):
+    """Pick the ``cache:attn_*`` consumer of the sealed pools: the fused
+    flash-decode kernel where the codec supports it, the gather-then-einsum
+    fallback (``cache:attn_unfused``) everywhere else."""
+    info = LeafInfo(k_dim=page_size, n_out=feat, cache=True, attn=True)
+    return select_variant(cfg, info, backend=backend)
+
+
 def build_cache_spec(cfg: Optional[StruMConfig], *, page_size: int,
                      feat: int, backend: Optional[str] = None) -> CacheSpec:
     """Validate the (codec, page geometry) pair and select its decoder.
@@ -112,8 +127,10 @@ def build_cache_spec(cfg: Optional[StruMConfig], *, page_size: int,
                          f"cache codec's block width w={cfg.w}")
     variant = select_cache_variant(cfg, page_size=page_size, feat=feat,
                                    backend=backend)
+    attn = select_attn_variant(cfg, page_size=page_size, feat=feat,
+                               backend=backend)
     return CacheSpec(page_size=page_size, cfg=cfg, variant=variant.name,
-                     backend=backend)
+                     backend=backend, attn_variant=attn.name)
 
 
 # ------------------------------------------------------------- encode side --
@@ -261,3 +278,128 @@ def _pallas_decode(leaf, *, cfg, page_size, out_dtype=jnp.float32,
         w=cfg.w, n_low=cfg.n_low, q=cfg.q, method=cfg.method,
         interpret=interpret)
     return out.reshape(lead + out.shape[1:]).astype(out_dtype)
+
+
+# ------------------------------------------- fused-attention consumers --
+#
+# The ``cache:attn_*`` partition (LeafInfo.attn): variants that *consume*
+# the sealed pools as paged attention's sealed-page half instead of handing
+# decoded pages back.  Contract:
+#
+#   fn(pool, qf, page_table, n_valid, *, cfg, spec, backend, interpret)
+#       -> (acc, m, l)
+#
+#   pool        {"k": leaf, "v": leaf} pool arrays, page axis leading
+#   qf          (B, KV, R, hd) f32 query rows, pre-scaled by 1/sqrt(hd)
+#   page_table  (B, P) int32, -1 = unassigned
+#   n_valid     (B,) int32 — pages strictly before this are sealed & valid
+#
+# returning the unnormalized online-softmax state over all sealed pages
+# (acc (B, KV, R, hd); m, l (B, KV, R); m = NEG_INF / l = 0 where a slot
+# has no sealed page yet).  The caller runs the hot tail page + fresh token
+# as an fp epilogue and merges the two states — see models/attention.py.
+
+def attn_sealed_partial(pool: dict, qf: jnp.ndarray, page_table: jnp.ndarray,
+                        n_valid: jnp.ndarray, spec: CacheSpec, *,
+                        backend: Optional[str] = None):
+    """Sealed-page partial attention through the spec's ``cache:attn_*``
+    variant (per-call ``backend`` re-selects, same rule as decode)."""
+    if backend is None:
+        _, interpret = resolve_backend(spec.backend)
+        variant = get_variant(spec.attn_variant)
+    else:
+        _, interpret = resolve_backend(backend)
+        variant = select_attn_variant(spec.cfg, page_size=spec.page_size,
+                                      feat=1, backend=backend)
+    if telemetry.enabled():
+        telemetry.inc(f"attn/variant/{variant.name}")
+    span = variant.name.replace("cache:attn_", "attn:")
+    with telemetry.span(span, cat="attn"), jax.named_scope(span):
+        return variant.fn(pool, qf, page_table, n_valid, cfg=spec.cfg,
+                          spec=spec, backend=backend, interpret=interpret)
+
+
+@register_kernel(
+    "cache:attn_unfused", family="xla", priority=0, cache=True, attn=True,
+    redispatch=True,  # page decode re-selects with the caller's backend, so
+                      # landing here off-TPU / for fp pools isn't a datapath
+                      # substitution — the codec still runs packed
+    supports=lambda cfg, info: True,
+    description="gather-then-einsum fallback: decode sealed pages to dense "
+                "fp (through the codec variant), then run QK^T / softmax / "
+                "AV as XLA ops")
+def _attn_unfused(pool, qf, page_table, n_valid, *, cfg, spec, backend=None,
+                  interpret=None):
+    b, kv, r, hd = qf.shape
+    pp = page_table.shape[-1]
+    ps = spec.page_size
+    k_seq = gather_decode_pages(pool["k"], page_table, spec,
+                                backend=backend).reshape(b, pp * ps, kv, hd)
+    v_seq = gather_decode_pages(pool["v"], page_table, spec,
+                                backend=backend).reshape(b, pp * ps, kv, hd)
+    pos = jnp.arange(pp * ps, dtype=jnp.int32)
+    assigned = jnp.take(page_table, pos // ps, axis=1) >= 0      # (B, S)
+    valid = (pos[None, :] < (n_valid * ps)[:, None]) & assigned
+    sc = jnp.einsum("bgrd,bsgd->bgrs", qf, k_seq)
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    m = jnp.max(sc, axis=-1)                                     # (B,KV,R)
+    pexp = jnp.where(valid[:, None, None, :],
+                     jnp.exp(sc - m[..., None]), 0.0)
+    l = jnp.sum(pexp, axis=-1)
+    acc = jnp.einsum("bgrs,bsgd->bgrd", pexp, v_seq)
+    return acc, m, l
+
+
+def _gather_packed(pool: dict, page_table: jnp.ndarray, keys) -> dict:
+    """Per-(slot, page) packed payload gather — the *only* HBM read of the
+    sealed pools on the fused path, and it moves packed bytes only."""
+    ids = jnp.clip(page_table, 0, None)
+    return {k: jnp.take(pool[k], ids, axis=0) for k in keys}
+
+
+def _note_fused_bytes(gk: dict, gv: dict) -> None:
+    if telemetry.enabled():
+        telemetry.inc("attn/fused/packed_bytes",
+                      sum(int(d[k].size) for d in (gk, gv) for k in d
+                          if k != "scale"))
+
+
+@register_kernel(
+    "cache:attn_fused", family="pallas", priority=10, cache=True, attn=True,
+    supports=lambda cfg, info: (cfg is not None and not _is_identity(cfg)
+                                and cfg.w % 8 == 0),
+    description="flash-decode megakernel: page-gather of packed bytes -> "
+                "in-VMEM StruM decode -> QK^T -> online softmax -> AV, "
+                "sealed pages leave HBM only as mask/hi/lo")
+def _attn_fused(pool, qf, page_table, n_valid, *, cfg, spec, backend=None,
+                interpret=None):
+    from repro.kernels.strum_attention import strum_paged_attention_pallas
+    gk = _gather_packed(pool["k"], page_table, CACHE_PAYLOAD_KEYS)
+    gv = _gather_packed(pool["v"], page_table, CACHE_PAYLOAD_KEYS)
+    _note_fused_bytes(gk, gv)
+    return strum_paged_attention_pallas(
+        qf, gk["mask"], gk["hi"], gk["lo"], gk["scale"],
+        gv["mask"], gv["hi"], gv["lo"], gv["scale"],
+        page_table, n_valid, w=cfg.w, n_low=cfg.n_low, q=cfg.q,
+        method=cfg.method, interpret=interpret)
+
+
+@register_kernel(
+    "cache:attn_fused_maskfree", family="pallas", priority=20, cache=True,
+    attn=True,
+    supports=lambda cfg, info: (cfg is not None and not _is_identity(cfg)
+                                and cfg.n_low == cfg.w
+                                and cfg.method in ("dliq", "mip2q")),
+    description="p = 1.0 flash-decode specialization: no mask/hi streams, "
+                "the lo payload is the whole block in order")
+def _attn_fused_maskfree(pool, qf, page_table, n_valid, *, cfg, spec,
+                         backend=None, interpret=None):
+    from repro.kernels.strum_attention import (
+        strum_paged_attention_pallas_maskfree)
+    gk = _gather_packed(pool["k"], page_table, ("lo", "scale"))
+    gv = _gather_packed(pool["v"], page_table, ("lo", "scale"))
+    _note_fused_bytes(gk, gv)
+    return strum_paged_attention_pallas_maskfree(
+        qf, gk["lo"], gk["scale"], gv["lo"], gv["scale"],
+        page_table, n_valid, w=cfg.w, q=cfg.q, method=cfg.method,
+        interpret=interpret)

@@ -55,6 +55,10 @@ class LeafInfo(NamedTuple):
     cache: bool = False        # True selects from the ``cache:*`` family
                                # (paged KV-page codecs: k_dim is the page
                                # size, n_out the per-token feature dim)
+    attn: bool = False         # True selects the fused-attention partition
+                               # of the cache family (``cache:attn_*``):
+                               # page-pool consumers that run the whole
+                               # QK^T / softmax / AV loop, not bare codecs
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +83,15 @@ class KernelVariant:
     when ``info.cache`` is set, so page codecs and matmul lowerings never
     compete for the same leaf.
 
+    ``attn=True`` (implies ``cache=True``) marks a fused-attention consumer
+    of the page pools (the ``cache:attn_*`` partition): its ``fn`` computes
+    the *sealed-page partial* of paged attention —
+    ``fn(pool, qf, page_table, n_valid, *, cfg, spec, backend, interpret)
+    -> (acc, m, l)`` — returning an unnormalized online-softmax state
+    rather than decoded pages.  ``info.attn`` partitions selection the same
+    way ``info.cache`` does, so page codecs and attention consumers never
+    compete for the same call site.
+
     ``sharded=True`` marks a distributed variant (the ``sharded:*`` family):
     its ``fn`` takes the raw payload dict + activations plus mesh context
     (``fn(wleaf, x, *, cfg, mesh, fsdp, pattern, k_dim, backend, interpret,
@@ -100,6 +113,7 @@ class KernelVariant:
     sharded: bool = False
     redispatch: bool = False
     cache: bool = False
+    attn: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,7 +167,8 @@ _REGISTRY: dict[str, KernelVariant] = {}
 def register_kernel(name: str, *, supports: Callable, family: str = "pallas",
                     priority: int = 0, description: str = "",
                     grouped: bool = False, sharded: bool = False,
-                    redispatch: bool = False, cache: bool = False):
+                    redispatch: bool = False, cache: bool = False,
+                    attn: bool = False):
     """Decorator: register ``fn`` as kernel variant ``name``.
 
     Re-registering a name replaces the previous entry (latest wins), so a
@@ -161,12 +176,15 @@ def register_kernel(name: str, *, supports: Callable, family: str = "pallas",
     """
     if family not in ("pallas", "xla", "reference"):
         raise ValueError(f"unknown family {family!r}")
+    if attn and not cache:
+        raise ValueError("attn=True variants live in the cache family; "
+                         "pass cache=True as well")
 
     def deco(fn):
         _REGISTRY[name] = KernelVariant(
             name=name, fn=fn, supports=supports, family=family,
             priority=priority, description=description, grouped=grouped,
-            sharded=sharded, redispatch=redispatch, cache=cache)
+            sharded=sharded, redispatch=redispatch, cache=cache, attn=attn)
         return fn
     return deco
 
@@ -226,10 +244,12 @@ def select_variant(cfg: StruMConfig, info: LeafInfo,
     fam, _ = resolve_backend(backend)
     sharded = bool(info.fsdp)
     cache = bool(getattr(info, "cache", False))
+    attn = bool(getattr(info, "attn", False))
     for family in dict.fromkeys((fam, "xla")):
         cands = [v for v in _REGISTRY.values()
                  if v.family == family and v.sharded == sharded
-                 and v.cache == cache and v.supports(cfg, info)]
+                 and v.cache == cache and v.attn == attn
+                 and v.supports(cfg, info)]
         if cands:
             best = max(cands, key=lambda v: (v.priority, v.name))
             if family != fam and backend not in (None, "auto") \

@@ -25,11 +25,13 @@ Validated in ``interpret=True`` mode against the jnp packing decoder
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ops import default_interpret
 from repro.kernels.strum_matmul import _decode_tile, _mosaic_params, _scoped
 
 __all__ = ["strum_page_decode_pallas"]
@@ -45,7 +47,7 @@ def _kernel(mask_ref, hi_ref, lo_ref, scale_ref, o_ref, *, w, n_low, q,
 @_scoped("strum:page_decode")
 def strum_page_decode_pallas(mask, hi, lo, scale, *, w: int, n_low: int,
                              q: int, method: str, block_f: int = 512,
-                             interpret: bool = True) -> jnp.ndarray:
+                             interpret: Optional[bool] = None) -> jnp.ndarray:
     """Decode P packed pages to dense values.
 
     Operands are per-page PackedStruM fields with a leading page axis:
@@ -53,7 +55,13 @@ def strum_page_decode_pallas(mask, hi, lo, scale, *, w: int, n_low: int,
       lo    (P, nb, lb, F)   uint8,  scale (P, 1, F) f32.
     Returns (P, nb*w, F) f32 — ``nb*w`` is the page size (cache positions),
     ``F`` the per-token feature dim (e.g. ``n_kv_heads * head_dim``).
+
+    ``interpret=None`` (the default) defers to the engine-wide
+    ``default_interpret()`` / ``STRUM_INTERPRET`` convention, like the
+    matmul kernels — real-TPU runs compile instead of silently interpreting.
     """
+    if interpret is None:
+        interpret = default_interpret()
     p_pages, nb, mb, f = mask.shape
     assert mb == -(-w // 8), (mb, w)
     assert w % 8 == 0, "page decode requires byte-aligned mask rows"

@@ -183,25 +183,39 @@ def init_cache_spec(cfg, batch: int, max_len: int):
 # The serving runtime stores KV in fixed-size pages (repro.serving.pages):
 # sealed pages live in per-layer pools — packed via the engine's ``cache:*``
 # codecs or as raw fp — and each slot keeps one hot tail page it is writing.
-# The attention functions below gather-and-decode a request's pages instead
-# of slicing a monolithic (B, max_len, ...) buffer; positions beyond the
-# sequence length (unsealed pool slots, recycled pages of retired requests)
-# are masked to NEG_INF exactly like the dense path masks its zero padding,
-# so junk pages never reach the softmax and retired requests cannot leak
-# into their slot's successor.
+#
+# Paged attention splits into two partials merged by their online-softmax
+# states (flash-attention algebra — the merged result is bit-for-bit the
+# same softmax, just associatively regrouped):
+#
+#   sealed half   every fully-sealed page, computed through the engine's
+#                 ``cache:attn_*`` variant (repro.engine.cache): the fused
+#                 flash-decode Pallas kernel reads packed bytes only; the
+#                 unfused fallback gathers + decodes + einsums.  A sealed
+#                 page is either valid for *every* query row or skipped
+#                 (ids < 0 and pages at/after the tail mask to NEG_INF),
+#                 so junk pages and retired requests never reach softmax.
+#   fp epilogue   the hot tail page + fresh token (decode) or the chunk
+#                 itself (prefill) — fp values that never lived in a pool.
 
-def _assemble_pages(pool: dict, page_ids: jnp.ndarray, spec, nkv: int,
-                    hd: int, cache_backend=None):
-    """Gather + decode sealed pages -> (*ids_lead, pp*page_size, KV, hd) f32."""
-    from repro.engine.cache import gather_decode_pages
-    lead = page_ids.shape[:-1]
-    pp = page_ids.shape[-1]
+def _merge_partials(parts):
+    """Merge unnormalized online-softmax states [(acc, m, l), ...].
 
-    def one(name):
-        d = gather_decode_pages(pool[name], page_ids, spec,
-                                backend=cache_backend)
-        return d.reshape(lead + (pp * spec.page_size, nkv, hd))
-    return one("k"), one("v")
+    acc (..., R, hd), m/l (..., R).  Empty partials (m = NEG_INF, l = 0)
+    contribute nothing: at least one part is always non-empty (the epilogue
+    contains the fresh token / the chunk diagonal), so ``m_tot`` is finite
+    and the empty part's correction factor underflows to exactly 0.
+    """
+    m_tot = parts[0][1]
+    for _, m, _ in parts[1:]:
+        m_tot = jnp.maximum(m_tot, m)
+    acc_tot = jnp.zeros_like(parts[0][0])
+    l_tot = jnp.zeros_like(parts[0][2])
+    for acc, m, l in parts:
+        c = jnp.exp(m - m_tot)
+        acc_tot = acc_tot + acc * c[..., None]
+        l_tot = l_tot + l * c
+    return acc_tot / jnp.maximum(l_tot, 1e-30)[..., None]
 
 
 def decode_attention_paged(p: dict, x: jnp.ndarray, cfg, pool: dict,
@@ -214,43 +228,49 @@ def decode_attention_paged(p: dict, x: jnp.ndarray, cfg, pool: dict,
     ``(k_tail, v_tail)`` of shape (B, page_size, KV, hd); ``page_table``
     (B, pages_per_seq) int32 page ids (-1 = unassigned); ``cache_len`` (B,).
 
-    Functionally updates only the tails (the new token is appended at
-    ``cache_len % page_size``); sealing a full tail into the pool is the
-    scheduler's job, between steps.  Returns (y, (new_k_tail, new_v_tail)).
+    The sealed pages (indices < ``cache_len // page_size``) run through the
+    registry-selected ``cache:attn_*`` partial; the hot tail page — with the
+    fresh token appended at ``cache_len % page_size`` — is an fp epilogue
+    tile, and the two online-softmax states merge exactly.
+
+    Functionally updates only the tails; sealing a full tail into the pool
+    is the scheduler's job, between steps.  Returns
+    ``(y, (new_k_tail, new_v_tail))``.
     """
+    from repro.engine.cache import attn_sealed_partial
     b = x.shape[0]
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     rep = nh // nkv
     kt, vt = tails
     ps = spec.page_size
-    smax = page_table.shape[1] * ps
     positions = cache_len[:, None].astype(jnp.int32)
     q, k, v = _qkv(p, x, cfg, positions, **kw)
 
-    k_seq, v_seq = _assemble_pages(pool, page_table, spec, nkv, hd,
-                                   cache_backend)
-    # overlay the hot tail at its page slot (the page currently filling)
-    pos = jnp.arange(smax)
-    in_tail = (pos[None, :] // ps) == (cache_len // ps)[:, None]
-    sel = in_tail[..., None, None]
-    k_seq = jnp.where(sel, kt[:, pos % ps].astype(jnp.float32), k_seq)
-    v_seq = jnp.where(sel, vt[:, pos % ps].astype(jnp.float32), v_seq)
-    # append the fresh token at cache_len (tail + assembled view)
+    # append the fresh token into the hot tail
     rows = jnp.arange(b)
-    k_new = k[:, 0].astype(kt.dtype)
-    v_new = v[:, 0].astype(vt.dtype)
-    new_kt = kt.at[rows, cache_len % ps].set(k_new)
-    new_vt = vt.at[rows, cache_len % ps].set(v_new)
-    k_seq = k_seq.at[rows, cache_len].set(k_new.astype(jnp.float32))
-    v_seq = v_seq.at[rows, cache_len].set(v_new.astype(jnp.float32))
+    new_kt = kt.at[rows, cache_len % ps].set(k[:, 0].astype(kt.dtype))
+    new_vt = vt.at[rows, cache_len % ps].set(v[:, 0].astype(vt.dtype))
 
     qf = (q.astype(jnp.float32) / math.sqrt(hd)).reshape(b, nkv, rep, hd)
-    sc = jnp.einsum("bgrd,bsgd->bgrs", qf, k_seq)
-    valid = jnp.arange(smax)[None, None, None, :] \
-        <= cache_len[:, None, None, None]
-    sc = jnp.where(valid, sc, NEG_INF)
-    w = jax.nn.softmax(sc, axis=-1)
-    o = jnp.einsum("bgrs,bsgd->bgrd", w, v_seq)
+    n_valid = (cache_len // ps).astype(jnp.int32)
+    sealed = attn_sealed_partial(pool, qf, page_table, n_valid, spec,
+                                 backend=cache_backend)
+
+    # fp epilogue: the hot tail page (fresh token included); tail index i
+    # holds absolute position n_valid * ps + i
+    t_pos = (n_valid * ps)[:, None] + jnp.arange(ps)[None, :]   # (B, ps)
+    valid_t = (t_pos <= cache_len[:, None])[:, None, None, :]
+    kt_f = new_kt.astype(jnp.float32)                           # (B,ps,KV,hd)
+    vt_f = new_vt.astype(jnp.float32)
+    sc_t = jnp.einsum("bgrd,bpgd->bgrp", qf, kt_f)
+    sc_t = jnp.where(valid_t, sc_t, NEG_INF)
+    m_t = jnp.max(sc_t, axis=-1)                                # finite: the
+    pexp = jnp.exp(sc_t - m_t[..., None])                       # fresh token
+    pexp = jnp.where(valid_t, pexp, 0.0)                        # is valid
+    l_t = jnp.sum(pexp, axis=-1)
+    acc_t = jnp.einsum("bgrp,bpgd->bgrd", pexp, vt_f)
+
+    o = _merge_partials([sealed, (acc_t, m_t, l_t)])            # (B,KV,R,hd)
     o = o.reshape(b, 1, nh * hd).astype(x.dtype)
     y = linear(p["wo"], o, **dict(kw, tp_pattern="row"))
     return y, (new_kt, new_vt)
@@ -263,35 +283,45 @@ def prefill_attention_paged(p: dict, x: jnp.ndarray, cfg, pool: dict,
 
     The chunk's tokens sit at absolute positions ``start + [0, C)``; all
     earlier content is in sealed pages (chunk starts are page-aligned, so
-    there is never a partially-hot prefix).  Causality within the chunk and
-    against the cached pages is one ``k_pos <= q_pos`` mask; padded rows of
-    a ragged final chunk land at positions beyond the prompt, which every
-    valid query masks causally.  Returns ``(y, (k, v))`` with k/v
-    (1, C, KV, hd) — writing them into pages/tail is the caller's job.
+    there is never a partially-hot prefix) — which makes every sealed page
+    causally valid for *every* chunk row, so the same ``cache:attn_*``
+    partial serves prefill with the chunk's query rows flattened into the
+    kernel's R axis.  The chunk itself (intra-chunk causal) is the fp
+    epilogue; padded rows of a ragged final chunk land at positions beyond
+    the prompt, which every valid query masks causally.  Returns
+    ``(y, (k, v))`` with k/v (1, C, KV, hd) — writing them into pages/tail
+    is the caller's job.
     """
+    from repro.engine.cache import attn_sealed_partial
     b, c, _ = x.shape
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     rep = nh // nkv
     ps = spec.page_size
-    smax = table_row.shape[0] * ps
     positions = (start + jnp.arange(c, dtype=jnp.int32))[None, :]
     positions = jnp.broadcast_to(positions, (b, c))
     q, k, v = _qkv(p, x, cfg, positions, **kw)
 
-    k_seq, v_seq = _assemble_pages(pool, table_row[None, :], spec, nkv, hd,
-                                   cache_backend)
-    k_seq = jax.lax.dynamic_update_slice(
-        k_seq, k.astype(jnp.float32), (0, start, 0, 0))
-    v_seq = jax.lax.dynamic_update_slice(
-        v_seq, v.astype(jnp.float32), (0, start, 0, 0))
+    qf5 = (q.astype(jnp.float32) / math.sqrt(hd)).reshape(b, c, nkv, rep, hd)
+    # kernel R axis = (chunk row, rep) flattened: row i <-> (i // rep, i % rep)
+    qr = qf5.transpose(0, 2, 1, 3, 4).reshape(b, nkv, c * rep, hd)
+    n_valid = jnp.broadcast_to(start // ps, (b,)).astype(jnp.int32)
+    sealed = attn_sealed_partial(pool, qr, table_row[None, :], n_valid, spec,
+                                 backend=cache_backend)
 
-    q_pos = start + jnp.arange(c)
-    causal = jnp.arange(smax)[None, :] <= q_pos[:, None]        # (C, smax)
-    qf = (q.astype(jnp.float32) / math.sqrt(hd)).reshape(b, c, nkv, rep, hd)
-    sc = jnp.einsum("bqgrd,bsgd->bgrqs", qf, k_seq)
-    sc = jnp.where(causal[None, None, None], sc, NEG_INF)
-    w = jax.nn.softmax(sc, axis=-1)
-    o = jnp.einsum("bgrqs,bsgd->bgrqd", w, v_seq)
-    o = o.transpose(0, 3, 1, 2, 4).reshape(b, c, nh * hd).astype(x.dtype)
+    # fp epilogue: the chunk against itself, intra-chunk causal
+    kf = k.astype(jnp.float32)                                  # (b,c,KV,hd)
+    vf = v.astype(jnp.float32)
+    causal = jnp.arange(c)[:, None] >= jnp.arange(c)[None, :]   # (cq, ck)
+    sc_c = jnp.einsum("bqgrd,bkgd->bgqrk", qf5, kf)
+    sc_c = jnp.where(causal[None, None, :, None, :], sc_c, NEG_INF)
+    sc_c = sc_c.reshape(b, nkv, c * rep, c)
+    m_c = jnp.max(sc_c, axis=-1)            # finite: the diagonal is valid
+    pexp = jnp.exp(sc_c - m_c[..., None])   # NEG_INF rows underflow to 0
+    l_c = jnp.sum(pexp, axis=-1)
+    acc_c = jnp.einsum("bgik,bkgd->bgid", pexp, vf)
+
+    o = _merge_partials([sealed, (acc_c, m_c, l_c)])    # (b, KV, c*rep, hd)
+    o = o.reshape(b, nkv, c, rep, hd).transpose(0, 2, 1, 3, 4)
+    o = o.reshape(b, c, nh * hd).astype(x.dtype)
     y = linear(p["wo"], o, **dict(kw, tp_pattern="row"))
     return y, (k, v)

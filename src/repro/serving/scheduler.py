@@ -475,5 +475,6 @@ class BatchScheduler:
         out = pages_mod.cache_stats(self.pools, self.hot, self.spec,
                                     self.cfg, self.n_slots, self.max_len)
         out["allocator"] = self.allocator.defrag()
+        out["attn_variant"] = self.spec.attn_variant
         out["steps"] = self._steps
         return out
