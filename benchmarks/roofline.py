@@ -136,10 +136,78 @@ def fmt_attn_table(rows):
     return "\n".join(out)
 
 
+#: (label, w, p, q_bits) — packed *weight* codecs for the draft lane;
+#: draft modes read a strict byte-subset of the same payload
+SPEC_CODECS = [
+    ("dliq_q4_p0.5", 16, 0.5, 4),
+    ("mip2q_L5_p0.5", 16, 0.5, 4),
+]
+
+#: draft mode -> which payload streams it reads (scale is negligible)
+SPEC_MODES = [("histream", ("mask", "hi")), ("maskfree_p", ("hi",))]
+
+
+def _strum_bpe(w, p, q, fields=("mask", "hi", "lo")):
+    """Bytes/element of a StruM payload restricted to ``fields``."""
+    n_low = round(p * w)
+    per_block = {"mask": w // 8, "hi": w - n_low, "lo": -(-n_low * q // 8)}
+    return sum(per_block[f] for f in fields) / w
+
+
+def _spec_speedup(alpha, k, c):
+    """Geometric-acceptance identity: E[tokens/round] / (k drafts @ cost c
+    + 1 full verify) — mirrors ``repro.autotune.expected_speedup``."""
+    expected = k + 1.0 if alpha >= 1.0 - 1e-12 else \
+        (1.0 - alpha ** (k + 1)) / (1.0 - alpha)
+    return expected / (k * c + 1.0)
+
+
+def spec_decode_rows(alphas=(0.5, 0.7, 0.9), ks=(1, 2, 3, 4)):
+    """Analytic speculative-decode table: the draft lane's weight-byte cost
+    ratio ``c`` per (codec, mode), and the expected decode speedup at
+    acceptance ``α`` and draft length ``k``.  Decode is weight-bandwidth
+    bound, so per-token draft cost ≈ the byte ratio — drafting from the
+    SAME payload makes c < 1 free (no second checkpoint in HBM)."""
+    rows = []
+    for label, w, p, q in SPEC_CODECS:
+        full = _strum_bpe(w, p, q)
+        for mode, fields in SPEC_MODES:
+            c = _strum_bpe(w, p, q, fields) / full
+            best = max(((a, k, _spec_speedup(a, k, c))
+                        for a in alphas for k in ks), key=lambda t: t[2])
+            rows.append({
+                "codec": label, "mode": mode, "cost_ratio": c,
+                "draft_bpe": _strum_bpe(w, p, q, fields), "full_bpe": full,
+                "speedups": {(a, k): _spec_speedup(a, k, c)
+                             for a in alphas for k in ks},
+                "best": best,
+            })
+    return rows
+
+
+def fmt_spec_table(rows, alphas=(0.5, 0.7, 0.9), ks=(1, 2, 3, 4)):
+    hdr = (f"{'weight codec':16s}{'draft mode':12s}{'B/elem':>8s}{'c':>7s}"
+           + "".join(f"{f'a={a:.1f}':>8s}" for a in alphas)
+           + f"  {'best(a,k)':>12s}")
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        col = "".join(
+            f"{max(r['speedups'][(a, k)] for k in ks):8.2f}" for a in alphas)
+        a, k, sp = r["best"]
+        out.append(f"{r['codec']:16s}{r['mode']:12s}{r['draft_bpe']:8.3f}"
+                   f"{r['cost_ratio']:7.3f}{col}"
+                   f"  x{sp:.2f}@a={a:.1f},k={k}")
+    return "\n".join(out)
+
+
 def main():
     print("fused decode-attention arithmetic intensity "
           "(32k ctx, 32 heads / 8 KV, hd=128, per layer):")
     print(fmt_attn_table(attn_intensity_rows()))
+    print("\nself-speculative decode (draft:* reads a byte-subset of the "
+          "same packed payload;\ncells = best speedup over k at each "
+          "acceptance a):")
+    print(fmt_spec_table(spec_decode_rows()))
     if not os.path.exists(RESULTS):
         print(f"\n(no {RESULTS}: run the dry-run sweep for the full "
               f"per-cell roofline table)")

@@ -18,9 +18,10 @@ def _parse_args(argv):
                     "verification, registry audit, Pallas kernel lint, and "
                     "recompile lint — all without running a kernel.")
     ap.add_argument("--passes", default=",".join(
-        ("dataflow", "registry", "pallas", "recompile", "numerics")),
+        ("dataflow", "registry", "pallas", "recompile", "numerics",
+         "draft")),
         help="comma-separated subset of "
-             "dataflow,registry,pallas,recompile,numerics")
+             "dataflow,registry,pallas,recompile,numerics,draft")
     ap.add_argument("--arch", action="append", default=None,
                     help="model-zoo architecture(s) for the scheduler-lane "
                          "passes (default: qwen2_7b)")

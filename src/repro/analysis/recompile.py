@@ -39,6 +39,10 @@ def lane_trace_counts(sched) -> dict:
         "serial_prefill": sched._prefill,
         "seal": sched._seal,
     }
+    if getattr(sched, "speculative", 0):
+        lanes["draft_decode"] = sched._draft_decode
+        lanes["verify"] = sched._verify
+        lanes["commit"] = sched._commit
     return {name: _cache_size(fn) for name, fn in lanes.items()
             if _cache_size(fn) is not None}
 

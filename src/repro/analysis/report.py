@@ -89,6 +89,18 @@ RULES: dict[str, str] = {
     "numerics/unbounded":
         "an operation (division by a zero-spanning interval, rsqrt of a "
         "non-positive range) made the static bound unconstrained",
+    "draft/extra-bytes":
+        "a draft plan's payload is not byte-identical to the target plan's "
+        "— a drafted leaf's mask/hi/lo/scale arrays must be the SAME "
+        "buffers (zero additional weight bytes in HBM)",
+    "draft/stream-read":
+        "the traced draft decode step reads a payload stream its draft "
+        "mode declares skipped (e.g. histream touching lo) — the skipped "
+        "stream must stay a dead jaxpr input",
+    "draft/no-subset":
+        "the draft lane's live payload bytes are not a strict subset of "
+        "the full-fidelity lane's — drafting would read at least as many "
+        "weight bytes as plain decode",
 }
 
 

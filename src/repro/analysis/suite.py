@@ -36,9 +36,10 @@ from repro.core.policy import StruMConfig
 __all__ = ["PASSES", "run_all", "tiny_model", "verify_local_apply",
            "verify_sharded_variants", "verify_cache_codecs",
            "verify_scheduler_lanes", "verify_fused_attention",
-           "verify_numerics", "check_cache_pools"]
+           "verify_numerics", "verify_draft_payload", "check_cache_pools"]
 
-PASSES = ("dataflow", "registry", "pallas", "recompile", "numerics")
+PASSES = ("dataflow", "registry", "pallas", "recompile", "numerics",
+          "draft")
 
 _WCFG = StruMConfig(method="mip2q", w=16, p=0.5, L=5)
 _KVCFG = StruMConfig(method="dliq", w=16, p=0.5, q=4)
@@ -211,7 +212,8 @@ def check_cache_pools(pools: dict, spec, location: str) -> Report:
 
 def build_tiny_scheduler(cfg, params, *, kv=_KVCFG, wcfg=_WCFG,
                          n_slots: int = 2, max_len: int = 48,
-                         cache_backend=None):
+                         cache_backend=None, speculative: int = 0,
+                         draft=None):
     """A packed-weights, packed-KV scheduler for lane analysis."""
     from repro import engine
     from repro.serving import BatchScheduler
@@ -219,7 +221,8 @@ def build_tiny_scheduler(cfg, params, *, kv=_KVCFG, wcfg=_WCFG,
     plan = engine.build_plan(params, cfg=wcfg, float_only=True)
     return BatchScheduler(cfg, params, n_slots=n_slots, max_len=max_len,
                           plan=plan, kv_cache=kv, page_size=kv.w,
-                          cache_backend=cache_backend)
+                          cache_backend=cache_backend,
+                          speculative=speculative, draft=draft)
 
 
 def verify_scheduler_lanes(sched, location: str = "scheduler") -> Report:
@@ -279,6 +282,133 @@ def verify_fused_attention(arch: str = "qwen2_7b", model=None) -> Report:
             jnp.ones((ns,), bool), location=f"{loc}/decode-lane",
             expected_gather_packed_bytes=n_pools * 2 * ns * pps * ppb,
             forbid_fp_pages=True))
+    return report
+
+
+def _live_invars(jaxpr) -> set:
+    """Indices of ``jaxpr.invars`` that can reach computation or an output.
+
+    An invar is *live* iff it feeds some equation (recursively: feeding a
+    position a scan/pjit sub-jaxpr itself treats as dead does not count —
+    positional alignment of eqn invars to sub-jaxpr invars holds exactly
+    when the lengths match, which covers scan's ``consts ++ carry ++ xs``
+    layout) or is returned directly.  Packed payload streams a draft
+    variant skips must come out dead: the kernel never names them, so the
+    buffers never leave HBM.
+    """
+    idx = {id(v): i for i, v in enumerate(jaxpr.invars)}
+    live: set = set()
+    for eqn in jaxpr.eqns:
+        subs = list(dataflow._sub_jaxprs(eqn.params))
+        if len(subs) == 1 and len(subs[0].invars) == len(eqn.invars):
+            sub_live = _live_invars(subs[0])
+            for pos, v in enumerate(eqn.invars):
+                if id(v) in idx and pos in sub_live:
+                    live.add(idx[id(v)])
+        else:
+            for v in eqn.invars:
+                if id(v) in idx:
+                    live.add(idx[id(v)])
+    for v in jaxpr.outvars:
+        if id(v) in idx:
+            live.add(idx[id(v)])
+    return live
+
+
+def verify_draft_payload(sched, location: str = "scheduler") -> Report:
+    """Static proof that the draft lane reads a strict byte-subset of the
+    target payload — speculative decoding's "free draft model" claim.
+
+    Three checks on a ``speculative=k`` scheduler, all trace-time:
+
+    1. ``draft/extra-bytes`` — every packed leaf of the draft plan must
+       hold the *same* mask/hi/lo/scale buffers (by identity) as the
+       target plan: zero additional weight bytes resident in HBM.
+    2. ``draft/stream-read`` — in the jaxpr of the (unjitted) draft
+       decode step, each stream a leaf's draft mode declares skipped
+       (``histream`` → lo; ``maskfree_p`` → mask+lo) must be a dead
+       input: never fed to any equation, so it is never read.
+    3. ``draft/no-subset`` — summing live payload bytes over all packed
+       leaves must land strictly below the full payload AND agree with
+       ``draft_plan_bytes``'s declared draft bytes.
+    """
+    from jax.tree_util import tree_leaves, tree_map_with_path
+
+    from repro.core.apply import path_name
+    from repro.engine.draft import (_is_packed_leaf, draft_field_set,
+                                    draft_plan_bytes)
+    from repro.launch.steps import make_paged_decode_step
+
+    report = Report()
+    if not getattr(sched, "speculative", 0):
+        report.add("error", "draft/no-subset", location,
+                   "scheduler has no draft lane (speculative=0); nothing "
+                   "to prove")
+        return report
+    modes = sched.draft_plan.meta.get("draft", {})
+
+    def collect(tree):
+        leaves: dict = {}
+
+        def visit(path, leaf):
+            if _is_packed_leaf(leaf):
+                leaves[path_name(path)] = leaf
+            return leaf
+        tree_map_with_path(visit, tree, is_leaf=_is_packed_leaf)
+        return leaves
+
+    target = collect(sched.plan.params)
+    drafted = collect(sched._draft_params)
+    for name, dleaf in sorted(drafted.items()):
+        tleaf = target.get(name)
+        for f in ("mask", "hi", "lo", "scale"):
+            if tleaf is None or dleaf[f] is not tleaf[f]:
+                report.add("error", "draft/extra-bytes",
+                           f"{location}/{name}/{f}",
+                           "draft plan does not share the target plan's "
+                           "payload buffer — the draft would cost extra "
+                           "HBM residency")
+
+    step = make_paged_decode_step(sched.cfg, sched.spec)
+    ns, pps = sched.n_slots, sched.pages_per_seq
+    args = (sched._draft_params, jnp.zeros((ns, 1), jnp.int32), sched.pools,
+            sched.hot, jnp.zeros((ns,), jnp.int32),
+            jnp.zeros((ns, pps), jnp.int32), jnp.ones((ns,), bool))
+    closed = jax.make_jaxpr(step)(*args)
+    flat = tree_leaves(args)
+    assert len(flat) == len(closed.jaxpr.invars), \
+        (len(flat), len(closed.jaxpr.invars))
+    pos_of = {id(a): i for i, a in enumerate(flat)}
+    live = _live_invars(closed.jaxpr)
+
+    live_bytes = full_bytes = 0
+    for name, dleaf in sorted(drafted.items()):
+        mode = modes.get(name, "")
+        streamed = set(draft_field_set(mode)) if mode else \
+            {"mask", "hi", "lo"}
+        for f in ("mask", "hi", "lo"):
+            i = pos_of.get(id(dleaf[f]))
+            is_live = i is not None and i in live
+            full_bytes += int(dleaf[f].size)
+            if is_live:
+                live_bytes += int(dleaf[f].size)
+            if mode and f not in streamed and is_live:
+                report.add("error", "draft/stream-read",
+                           f"{location}/{name}/{f}",
+                           f"draft mode {mode!r} declares the {f} stream "
+                           f"skipped, but the traced draft decode step "
+                           f"reads it")
+
+    decl = draft_plan_bytes(sched.draft_plan)
+    if not any(modes.values()) or live_bytes >= full_bytes:
+        report.add("error", "draft/no-subset", location,
+                   f"draft lane live payload {live_bytes} B is not a "
+                   f"strict subset of the full payload {full_bytes} B")
+    elif live_bytes != decl["draft_bytes"]:
+        report.add("error", "draft/no-subset", location,
+                   f"traced live payload {live_bytes} B != declared draft "
+                   f"bytes {decl['draft_bytes']} B "
+                   f"(draft_plan_bytes drifted from the traced truth)")
     return report
 
 
@@ -367,4 +497,18 @@ def run_all(arches=("qwen2_7b",), passes=PASSES,
             if "recompile" in passes:
                 report.extend(recompile.lint_scheduler_recompiles(
                     sched=sched, location=f"{arch}/scheduler"))
+    if "draft" in passes:
+        for arch in arches:
+            cfg, params = tiny_model(arch)
+            for mode in ("histream", "maskfree_p"):
+                sched = build_tiny_scheduler(cfg, params, speculative=2,
+                                             draft=mode)
+                report.extend(verify_draft_payload(
+                    sched, location=f"{arch}/draft[{mode}]"))
+            if "recompile" in passes:
+                # the speculative lanes (draft decode / verify / commit)
+                # must hold the one-executable invariant too
+                sched = build_tiny_scheduler(cfg, params, speculative=2)
+                report.extend(recompile.lint_scheduler_recompiles(
+                    sched=sched, location=f"{arch}/spec-scheduler"))
     return report, audit_data

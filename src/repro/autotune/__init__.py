@@ -24,6 +24,9 @@ from repro.autotune.search import (Budget, Candidate, pareto_frontier,
 from repro.autotune.sensitivity import (DEFAULT_GRID, cache_info, clear_cache,
                                         int8_sqnr_db, output_error_profile,
                                         profile_array, profile_tree)
+from repro.autotune.speculative import (draft_error_profile, expected_speedup,
+                                        predicted_acceptance,
+                                        search_draft_schedule)
 
 __all__ = [
     "CostEstimate", "config_cost", "level_savings",
@@ -31,4 +34,6 @@ __all__ = [
     "Budget", "Candidate", "pareto_frontier", "search_schedule",
     "DEFAULT_GRID", "cache_info", "clear_cache", "int8_sqnr_db",
     "output_error_profile", "profile_array", "profile_tree",
+    "draft_error_profile", "expected_speedup", "predicted_acceptance",
+    "search_draft_schedule",
 ]

@@ -1,0 +1,146 @@
+"""Acceptance-rate-aware draft-schedule search for self-speculative decoding.
+
+A draft schedule is a :class:`repro.engine.DraftPolicy` (which reduced
+decode each leaf runs) plus a draft length ``k``.  Both trade the same two
+quantities:
+
+* **cost** ``c`` — the draft lane's weight-byte read ratio vs full
+  fidelity (``draft_plan_bytes``; e.g. ``histream`` streams mask+hi,
+  skipping lo), the bandwidth-bound per-token cost of a draft step;
+* **acceptance** ``α`` — how often a draft token survives full-fidelity
+  verification, which falls as the draft's output error grows.
+
+The predicted output error composes exactly like the quantization
+abstract interpreter's (PR 8): per-leaf noise power — here the *measured*
+mean-square difference between the full and draft decodes of the same
+packed payload — scaled by the leaf's output noise gain
+(:func:`repro.analysis.numerics.output_gains`, the same gains
+``output_error_profile`` uses) and summed.  Acceptance is a monotone map
+of that total; only the *ordering* across schedules is load-bearing (the
+calibration test pins it against measured acceptance), the absolute value
+just has the right limits (α→1 as err→0, α→0 as err→∞).
+
+The expected wall-clock speedup of greedy speculative decoding at
+acceptance ``α``, draft length ``k`` and relative draft cost ``c`` is the
+standard geometric-acceptance identity::
+
+    E[tokens/round] = (1 - α^(k+1)) / (1 - α)        (k+1 when α = 1)
+    cost/round      = k·c + 1                         (k drafts + 1 verify)
+    speedup         = E[tokens/round] / (k·c + 1)
+
+:func:`search_draft_schedule` sweeps ``policies × ks`` and returns the
+rows plus the argmax — the deployable ``(DraftPolicy, k)``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.engine.draft import (DraftPolicy, build_draft_plan,
+                                draft_dequant_leaf, draft_plan_bytes,
+                                _is_packed_leaf)
+
+__all__ = ["draft_error_profile", "predicted_acceptance", "expected_speedup",
+           "search_draft_schedule"]
+
+
+def draft_error_profile(plan, policy: DraftPolicy, gains=None) -> dict:
+    """Predicted draft output-error power for one policy.
+
+    Per drafted leaf: ``gain(name) * mean((W_full - W_draft)^2) /
+    mean(W_full^2)`` over the *actual* packed payload (no proxy
+    distributions — the draft decode is deterministic, so the noise power
+    is measured exactly, only its propagation uses the static gain).
+    Normalizing by the leaf's signal power makes the error relative —
+    O(1) when a draft mode destroys a leaf, small when it barely
+    perturbs it — so :func:`predicted_acceptance` sees sanely scaled
+    arguments whatever the weight magnitudes.  Leaves the policy leaves
+    at full fidelity (or that no draft variant expresses) contribute
+    exactly 0.
+    """
+    import jax
+
+    from repro.core.apply import path_name
+
+    dplan = build_draft_plan(plan, policy)
+    modes = dplan.meta["draft"]
+    per_leaf: dict = {}
+
+    def visit(path, leaf):
+        if _is_packed_leaf(leaf):
+            name = path_name(path)
+            mode = modes.get(name, "")
+            if mode:
+                wf = draft_dequant_leaf(leaf, "")
+                wd = draft_dequant_leaf(leaf, mode)
+                g = float(gains.get(name, 1.0)) if gains else 1.0
+                sig = float(jnp.mean(wf ** 2)) or 1.0
+                per_leaf[name] = g * float(jnp.mean((wf - wd) ** 2)) / sig
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, plan.params,
+                                     is_leaf=_is_packed_leaf)
+    return {"total_err2": float(sum(per_leaf.values())),
+            "per_leaf": per_leaf, "modes": modes,
+            **draft_plan_bytes(dplan)}
+
+
+def predicted_acceptance(total_err2: float) -> float:
+    """Monotone-decreasing map err2 -> α ∈ (0, 1].  Only the ordering
+    across schedules is contractual (see module docstring)."""
+    return 1.0 / (1.0 + float(total_err2))
+
+
+def expected_speedup(alpha: float, k: int, c: float) -> float:
+    """Tokens-per-cost ratio of (k drafts @ cost c + 1 verify) vs plain
+    decode, at per-token acceptance ``alpha``."""
+    alpha = min(max(float(alpha), 0.0), 1.0)
+    if alpha >= 1.0 - 1e-12:
+        expected = k + 1.0
+    else:
+        expected = (1.0 - alpha ** (k + 1)) / (1.0 - alpha)
+    return expected / (k * c + 1.0)
+
+
+def _label(policy: DraftPolicy) -> str:
+    if not policy.overrides:
+        return policy.mode
+    ov = ",".join(f"{pat}={m or 'full'}" for pat, m in policy.overrides)
+    return f"{policy.mode}[{ov}]"
+
+
+def search_draft_schedule(plan, *, policies=None, ks=(1, 2, 3, 4),
+                          gains=None, fn=None, fn_args=(), **fn_kwargs):
+    """Pick ``(DraftPolicy, k)`` by predicted speculative speedup.
+
+    ``gains`` maps leaf name -> output noise gain; pass the model forward
+    as ``fn(params, *fn_args, **fn_kwargs)`` to compute them with
+    :func:`repro.analysis.numerics.output_gains` (what
+    ``output_error_profile`` uses), or omit both for uniform gains.
+    Returns ``{"rows", "profiles", "best"}`` where ``best`` carries the
+    winning ``policy`` object, ``k``, and its predicted α / c / speedup.
+    """
+    if policies is None:
+        policies = (DraftPolicy(mode="histream"),
+                    DraftPolicy(mode="maskfree_p"))
+    if gains is None and fn is not None:
+        from repro.analysis import numerics
+        names = tuple(sorted(plan.entries))
+        gains = numerics.output_gains(fn, plan.params, *fn_args, names=names,
+                                      location="autotune.draft_schedule",
+                                      **fn_kwargs)
+    rows, profiles = [], {}
+    best = None
+    for policy in policies:
+        prof = draft_error_profile(plan, policy, gains=gains)
+        label = _label(policy)
+        profiles[label] = prof
+        alpha = predicted_acceptance(prof["total_err2"])
+        for k in ks:
+            sp = expected_speedup(alpha, k, prof["ratio"])
+            row = {"policy": label, "k": int(k), "alpha_pred": alpha,
+                   "cost_ratio": prof["ratio"], "err2": prof["total_err2"],
+                   "speedup_pred": sp}
+            rows.append(row)
+            if best is None or sp > best["speedup_pred"]:
+                best = dict(row, policy=policy)
+    return {"rows": rows, "profiles": profiles, "best": best}

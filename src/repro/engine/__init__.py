@@ -33,14 +33,17 @@ selects a decoder per ``(codec, page geometry)`` and records it in a
 static :class:`CacheSpec`.
 
 The legacy entrypoints (``core.apply.pack_tree`` / ``fake_quantize_tree``,
-``models.quantize.strum_serve_params``, ``models.quantize.gather_dequant``)
-remain as thin deprecated shims over plan construction / the registry.
+``models.quantize.strum_serve_params``) remain as thin deprecated shims
+over plan construction; the old ``models.quantize.gather_dequant`` shim is
+gone — the registry's ``sharded:*`` family owns the compressed gather.
 """
 from repro.engine.cache import (CacheSpec, build_cache_spec, decode_pages,
                                 encode_page, gather_decode_pages,
                                 select_cache_variant)
 from repro.engine.dispatch import (apply, dequant_leaf, dispatch,
                                    dispatch_grouped, leaf_spec)
+from repro.engine.draft import (DraftPolicy, build_draft_plan,
+                                draft_dequant_leaf, draft_plan_bytes)
 from repro.engine.plan import (ExecutionPlan, PlanEntry, build_plan,
                                fake_quantize)
 from repro.engine.registry import (BACKENDS, ExecSpec, KernelVariant,
@@ -60,4 +63,6 @@ __all__ = [
     "dense_gather_bytes", "tp_pattern_for",
     "CacheSpec", "build_cache_spec", "select_cache_variant",
     "encode_page", "decode_pages", "gather_decode_pages",
+    "DraftPolicy", "build_draft_plan", "draft_dequant_leaf",
+    "draft_plan_bytes",
 ]

@@ -27,6 +27,12 @@ __all__ = ["dispatch", "dispatch_grouped", "apply", "dequant_leaf",
 PAYLOAD_KEYS = ("mask", "hi", "lo", "scale")
 
 
+def _draft_mode_of(variant_name: str) -> str:
+    """'draft:histream' / 'draft:xla_histream' -> 'histream'."""
+    tail = variant_name.split(":", 1)[-1]
+    return tail[4:] if tail.startswith("xla_") else tail
+
+
 def _note_dispatch(variant, wleaf: dict, *, sharded: bool = False) -> None:
     """Count one dispatch through ``variant`` into the active recorders.
 
@@ -36,13 +42,22 @@ def _note_dispatch(variant, wleaf: dict, *, sharded: bool = False) -> None:
     is the mask+hi+lo payload (the Eq.-1 numerator; uint8/int8 fields, so
     ``size`` is bytes); for ``sharded:*`` calls the same payload is what
     the FSDP gather moves, mirrored under a dedicated counter (the runtime
-    twin of :func:`repro.telemetry.all_gather_stats`).
+    twin of :func:`repro.telemetry.all_gather_stats`).  ``draft:*`` calls
+    stream only their mode's field subset, counted as such and mirrored
+    under ``spec/draft_packed_bytes`` (the speculative draft lane's weight
+    read).
     """
     if not telemetry.enabled():
         return
     telemetry.inc(f"dispatch/variant/{variant.name}")
-    payload = sum(int(wleaf[k].size) for k in ("mask", "hi", "lo")
-                  if k in wleaf)
+    if getattr(variant, "draft", False):
+        from repro.kernels.ops import draft_field_set
+        fields = draft_field_set(_draft_mode_of(variant.name))
+        payload = sum(int(wleaf[k].size) for k in fields if k in wleaf)
+        telemetry.inc("spec/draft_packed_bytes", payload)
+    else:
+        payload = sum(int(wleaf[k].size) for k in ("mask", "hi", "lo")
+                      if k in wleaf)
     telemetry.inc("dispatch/packed_bytes", payload)
     if sharded:
         telemetry.inc("dispatch/sharded/gathered_packed_bytes", payload)
@@ -119,6 +134,14 @@ def _pick(cfg: StruMConfig, info: LeafInfo, spec: Optional[ExecSpec],
         if variant.sharded == bool(info.fsdp):
             return variant, interpret
         backend = spec.backend
+    if spec is not None and not getattr(info, "draft", ""):
+        # a per-call backend override must not silently promote a draft
+        # leaf to full fidelity: re-select inside the same draft partition
+        try:
+            if get_variant(spec.variant).draft:
+                info = info._replace(draft=_draft_mode_of(spec.variant))
+        except KeyError:
+            pass
     _, interpret = resolve_backend(backend)
     return select_variant(cfg, info, backend=backend), interpret
 

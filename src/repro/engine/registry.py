@@ -59,6 +59,10 @@ class LeafInfo(NamedTuple):
                                # of the cache family (``cache:attn_*``):
                                # page-pool consumers that run the whole
                                # QK^T / softmax / AV loop, not bare codecs
+    draft: str = ""            # non-empty selects from the ``draft:*``
+                               # family — reduced-fidelity lowerings over
+                               # the same packed payload ("histream" |
+                               # "maskfree_p"); the speculative draft lane
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,6 +105,14 @@ class KernelVariant:
     marks a sharded wrapper that re-enters variant selection *after* its
     gather with the caller's backend — cross-family fallback onto such a
     variant is not a datapath substitution and emits no warning.
+
+    ``draft=True`` marks a reduced-fidelity lowering (the ``draft:*``
+    family): same ``fn`` contract as a 2-D matmul variant, but it streams a
+    strict subset of the packed payload's fields (skipping lo, or mask+lo).
+    Selection only considers draft variants when ``info.draft`` names a
+    mode, so full-fidelity and draft lowerings never compete — a draft
+    variant's ``supports`` should additionally match ``info.draft`` so the
+    modes don't compete with each other.
     """
 
     name: str
@@ -114,6 +126,7 @@ class KernelVariant:
     redispatch: bool = False
     cache: bool = False
     attn: bool = False
+    draft: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,7 +181,7 @@ def register_kernel(name: str, *, supports: Callable, family: str = "pallas",
                     priority: int = 0, description: str = "",
                     grouped: bool = False, sharded: bool = False,
                     redispatch: bool = False, cache: bool = False,
-                    attn: bool = False):
+                    attn: bool = False, draft: bool = False):
     """Decorator: register ``fn`` as kernel variant ``name``.
 
     Re-registering a name replaces the previous entry (latest wins), so a
@@ -184,7 +197,8 @@ def register_kernel(name: str, *, supports: Callable, family: str = "pallas",
         _REGISTRY[name] = KernelVariant(
             name=name, fn=fn, supports=supports, family=family,
             priority=priority, description=description, grouped=grouped,
-            sharded=sharded, redispatch=redispatch, cache=cache, attn=attn)
+            sharded=sharded, redispatch=redispatch, cache=cache, attn=attn,
+            draft=draft)
         return fn
     return deco
 
@@ -245,10 +259,12 @@ def select_variant(cfg: StruMConfig, info: LeafInfo,
     sharded = bool(info.fsdp)
     cache = bool(getattr(info, "cache", False))
     attn = bool(getattr(info, "attn", False))
+    draft = bool(getattr(info, "draft", ""))
     for family in dict.fromkeys((fam, "xla")):
         cands = [v for v in _REGISTRY.values()
                  if v.family == family and v.sharded == sharded
                  and v.cache == cache and v.attn == attn
+                 and v.draft == draft
                  and v.supports(cfg, info)]
         if cands:
             best = max(cands, key=lambda v: (v.priority, v.name))

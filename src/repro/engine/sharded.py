@@ -26,8 +26,8 @@ onto this family, and the ``backend=`` override resolves which member wins
 the per-call override then *also* reaches the post-gather kernel, fixing
 the old path where the gather branch returned before variant selection.
 
-TP layout conventions (unchanged from the historical
-``models.quantize.gather_dequant``):
+TP layout conventions (unchanged from the historical model-level gather
+path this family replaced):
 
 'col' (wq/wk/wv, mlp wi/wg, ssm in_proj): K FSDP-sharded (block axis 0),
     N TP-sharded — gather payload axis 0; result keeps N on ``model``.
@@ -108,8 +108,8 @@ def gather_dequant_leaf(wleaf: dict, scfg: StruMConfig, mesh, pattern: str,
     all-gather and moves f32 weights over ICI; wrapping the gather in
     shard_map pins it to the packed uint8/int8 payloads, so the wire cost
     is the paper's r × int8 (§Perf knob 3).  The registry entry
-    ``sharded:gather_dequant`` wraps this with the trailing dot; the
-    deprecated ``models.quantize.gather_dequant`` shim calls it directly.
+    ``sharded:gather_dequant`` wraps this with the trailing dot; tests and
+    tools that want the dense local weight call it directly.
     """
     fsdp = tuple(fsdp) if fsdp else _fsdp_axes(mesh)
     tp = _tp_axis(mesh)

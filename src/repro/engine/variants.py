@@ -95,6 +95,71 @@ def _grouped_dense(xg, packed, *, out_dtype=None, interpret=None,
                                     interpret=interpret, variant="dense")
 
 
+# ------------------------------------------------------------------ draft --
+#
+# Reduced-fidelity lowerings over the SAME packed payload (self-speculative
+# decoding's free draft model).  Selection is partitioned by ``info.draft``
+# (a mode string set by ``engine.draft.build_draft_plan``), and each
+# variant's predicate pins its own mode so the two never compete.  The xla
+# twins decode only the streamed fields, so the draft lane keeps its
+# byte-subset property on every backend.
+
+def _draft_mode(mode):
+    def pred(cfg, info):
+        return (_two_d(cfg, info)
+                and getattr(info, "draft", "") == mode
+                and 0 < cfg.n_low < cfg.w)
+    return pred
+
+
+@register_kernel(
+    "draft:histream", family="pallas", priority=10, draft=True,
+    supports=lambda cfg, info: _draft_mode("histream")(cfg, info)
+    and cfg.w % 8 == 0,
+    description="draft: mask+hi stream only, lo decodes to zero")
+def _draft_histream(x2, packed, *, out_dtype=None, interpret=None,
+                    accum_dtype=None):
+    return ops.strum_matmul_draft(x2, packed, mode="histream",
+                                  out_dtype=out_dtype, interpret=interpret)
+
+
+@register_kernel(
+    "draft:maskfree_p", family="pallas", priority=10, draft=True,
+    supports=_draft_mode("maskfree_p"),
+    description="draft: hi stream only, block treated as all-high")
+def _draft_maskfree_p(x2, packed, *, out_dtype=None, interpret=None,
+                      accum_dtype=None):
+    return ops.strum_matmul_draft(x2, packed, mode="maskfree_p",
+                                  out_dtype=out_dtype, interpret=interpret)
+
+
+def _draft_xla(mode):
+    from repro.engine.draft import draft_dequant_packed
+
+    def fn(x2, packed, *, out_dtype=None, interpret=None,
+           accum_dtype=jnp.float32):
+        out_dtype = out_dtype or x2.dtype
+        wd = draft_dequant_packed(packed, mode, x2.dtype)
+        return jnp.dot(x2, wd,
+                       preferred_element_type=accum_dtype or jnp.float32
+                       ).astype(out_dtype)
+    return fn
+
+
+register_kernel(
+    "draft:xla_histream", family="xla", priority=0, draft=True,
+    supports=lambda cfg, info: _draft_mode("histream")(cfg, info)
+    and cfg.w % 8 == 0,
+    description="draft fallback: mask+hi decode + XLA dot, lo never read")(
+        _draft_xla("histream"))
+
+register_kernel(
+    "draft:xla_maskfree_p", family="xla", priority=0, draft=True,
+    supports=_draft_mode("maskfree_p"),
+    description="draft fallback: hi-only decode + XLA dot, mask/lo never "
+                "read")(_draft_xla("maskfree_p"))
+
+
 @register_kernel(
     "xla:dequant", family="xla", priority=0,
     supports=lambda cfg, info: True,

@@ -29,12 +29,19 @@ from repro.kernels.strum_matmul import (strum_matmul_pallas,
                                         strum_matmul_pallas_grouped,
                                         strum_matmul_pallas_grouped_dense,
                                         strum_matmul_pallas_grouped_maskfree,
-                                        strum_matmul_pallas_maskfree)
+                                        strum_matmul_pallas_histream,
+                                        strum_matmul_pallas_maskfree,
+                                        strum_matmul_pallas_maskfree_p)
 
 __all__ = ["strum_matmul", "strum_gemv", "strum_grouped_matmul",
-           "default_interpret", "PALLAS_VARIANTS"]
+           "strum_matmul_draft", "strum_gemv_draft", "draft_field_set",
+           "default_interpret", "PALLAS_VARIANTS", "DRAFT_MODES"]
 
 PALLAS_VARIANTS = ("onehot", "maskfree", "dense")
+
+#: reduced-fidelity draft lowerings over the same payload; each streams a
+#: strict subset of the packed fields (see ``draft_field_set``)
+DRAFT_MODES = ("histream", "maskfree_p")
 
 
 def default_interpret() -> bool:
@@ -161,6 +168,79 @@ def strum_matmul(x: jnp.ndarray, packed: PackedStruM, *,
             x2, hi, scale, w=w,
             block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
     return y[:m, :n].reshape(lead + (n,)).astype(out_dtype)
+
+
+def draft_field_set(mode: str) -> tuple:
+    """The packed payload fields a draft mode streams (the rest are never
+    touched — not even padded — so they stay dead in the traced jaxpr)."""
+    if mode == "histream":
+        return ("mask", "hi")
+    if mode == "maskfree_p":
+        return ("hi",)
+    raise ValueError(f"unknown draft mode {mode!r}; want one of {DRAFT_MODES}")
+
+
+def strum_matmul_draft(x: jnp.ndarray, packed: PackedStruM, *, mode: str,
+                       out_dtype=None, block_m: int = 128, block_n: int = 256,
+                       block_k: int = 256,
+                       interpret: bool | None = None) -> jnp.ndarray:
+    """Reduced-fidelity y = x @ draft_dequant(packed), same payload buffers.
+
+    The deliberately separate prepare path touches *only* the fields the
+    draft mode streams: skipped streams (lo; also mask for
+    ``maskfree_p``) never enter the traced program, which is what the
+    ``verify_draft_payload`` analysis pass proves statically.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    out_dtype = out_dtype or x.dtype
+    if mode not in DRAFT_MODES:
+        raise ValueError(f"unknown draft mode {mode!r}; "
+                         f"want one of {DRAFT_MODES}")
+    if packed.n_low >= packed.w:
+        raise ValueError(f"draft modes need high values to stream "
+                         f"(n_low={packed.n_low} w={packed.w})")
+
+    lead = x.shape[:-1]
+    k_in = x.shape[-1]
+    if k_in != packed.k_dim:
+        raise ValueError(f"x K={k_in} vs packed k_dim={packed.k_dim}")
+    x2 = x.reshape(-1, k_in)
+    m, n = x2.shape[0], packed.n_out
+    w = packed.w
+
+    k_pad = packed.hi.shape[0] * w                 # padded K (block multiple)
+    x2 = _pad_axis(x2, 1, k_pad) if k_pad != k_in else x2
+    bm = _pick_block(m, block_m, 8)
+    bn = _pick_block(n, block_n, 128)
+    bk = _pick_block(k_pad, block_k, w)
+    x2 = _pad_axis(_pad_axis(x2, 0, bm), 1, bk)
+
+    hi = _pad_axis(_pad_axis(packed.hi, 0, bk // w), 2, bn)
+    scale = _pad_axis(packed.scale, 1, bn)
+    if mode == "histream":
+        if w % 8:
+            raise ValueError(f"histream draft needs byte-aligned mask rows "
+                             f"(w={w})")
+        mask = _pad_axis(_pad_axis(packed.mask, 0, bk // w), 2, bn)
+        y = strum_matmul_pallas_histream(
+            x2, mask, hi, scale, w=w, n_low=packed.n_low,
+            block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    else:
+        y = strum_matmul_pallas_maskfree_p(
+            x2, hi, scale, w=w, n_low=packed.n_low,
+            block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    return y[:m, :n].reshape(lead + (n,)).astype(out_dtype)
+
+
+def strum_gemv_draft(x: jnp.ndarray, packed: PackedStruM, *, mode: str,
+                     out_dtype=None,
+                     interpret: bool | None = None) -> jnp.ndarray:
+    """Decode-path draft matvec: the fidelity knob where it pays — the op is
+    HBM-bound, so the skipped streams' bytes convert 1:1 into latency."""
+    return strum_matmul_draft(x, packed, mode=mode, out_dtype=out_dtype,
+                              block_m=8, block_n=512, block_k=512,
+                              interpret=interpret)
 
 
 def strum_grouped_matmul(x: jnp.ndarray, packed: PackedStruM, *,

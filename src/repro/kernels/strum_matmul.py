@@ -78,6 +78,8 @@ __all__ = [
     "strum_matmul_pallas",
     "strum_matmul_pallas_maskfree",
     "strum_matmul_pallas_dense",
+    "strum_matmul_pallas_histream",
+    "strum_matmul_pallas_maskfree_p",
     "strum_matmul_pallas_grouped",
     "strum_matmul_pallas_grouped_maskfree",
     "strum_matmul_pallas_grouped_dense",
@@ -300,6 +302,132 @@ def strum_matmul_pallas_dense(x, hi, scale, *, w: int,
         in_specs=[
             pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bnb, w, block_n), lambda i, j, kk: (kk, 0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+        compiler_params=_mosaic_params(interpret),
+    )(x, hi, scale)
+
+
+# ----------------------------------------------------------------- draft --
+#
+# Reduced-fidelity lowerings over the *same* packed payload — the draft half
+# of self-speculative decoding.  Each streams a strict subset of the target
+# payload's fields and never touches the rest (no pad, no load, no BlockSpec
+# entry), so a traced draft step provably reads fewer HBM bytes than the
+# full-fidelity step it shares buffers with:
+#
+# ``strum_matmul_pallas_histream``   mask + hi + scale: high values land at
+#                                    their true positions, low positions
+#                                    decode to zero (the sparsity decode of
+#                                    an arbitrary codec).  Skips the lo
+#                                    stream entirely.
+# ``strum_matmul_pallas_maskfree_p`` hi + scale only: the block is treated
+#                                    as all-high with the hi codes at the
+#                                    leading positions — position-scrambled
+#                                    and lossier, but mask- and lo-free.
+
+def _kernel_histream(x_ref, mask_ref, hi_ref, scale_ref, o_ref, *, w):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    high = _unpack_mask(mask_ref[...], w)                    # (bnb, w, bn)
+    vals = _scatter_onehot(hi_ref[...].astype(jnp.float32), high)
+    bnb, _, bn = vals.shape
+    wv = vals.reshape(bnb * w, bn) * scale_ref[...]
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x, wv, preferred_element_type=jnp.float32)
+
+
+@_scoped("strum:draft_histream")
+def strum_matmul_pallas_histream(x, mask, hi, scale, *, w: int, n_low: int,
+                                 block_m: int = 128, block_n: int = 128,
+                                 block_k: int = 128, interpret: bool = True):
+    """Draft decode: hi codes at their masked positions, lo set to zero.
+
+    Streams mask + hi + scale — the lo payload never appears as an
+    operand, so the draft step's HBM read is the Eq.-1 payload minus the
+    ``ceil(n_low*q/8)`` bytes/block of the lo stream.
+    """
+    m, k_dim = x.shape
+    nb = mask.shape[0]
+    n = mask.shape[2]
+    assert k_dim == nb * w, (k_dim, nb, w)
+    assert w % 8 == 0, "histream path requires byte-aligned mask rows"
+    assert block_k % w == 0
+    assert m % block_m == 0 and n % block_n == 0 and k_dim % block_k == 0
+    bnb = block_k // w
+    grid = (m // block_m, n // block_n, k_dim // block_k)
+    kern = functools.partial(_kernel_histream, w=w)
+    n_high = w - n_low
+    mb = w // 8
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bnb, mb, block_n), lambda i, j, kk: (kk, 0, j)),
+            pl.BlockSpec((bnb, max(n_high, 1), block_n),
+                         lambda i, j, kk: (kk, 0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+        compiler_params=_mosaic_params(interpret),
+    )(x, mask, hi, scale)
+
+
+def _kernel_maskfree_p(x_ref, hi_ref, scale_ref, o_ref, *, w, n_high):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    hv = hi_ref[...].astype(jnp.float32)                     # (bnb, n_high, bn)
+    bnb, _, bn = hv.shape
+    if n_high < w:
+        hv = jnp.concatenate(
+            [hv, jnp.zeros((bnb, w - n_high, bn), jnp.float32)], axis=1)
+    wv = hv.reshape(bnb * w, bn) * scale_ref[...]
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.dot(x, wv, preferred_element_type=jnp.float32)
+
+
+@_scoped("strum:draft_maskfree_p")
+def strum_matmul_pallas_maskfree_p(x, hi, scale, *, w: int, n_low: int,
+                                   block_m: int = 128, block_n: int = 128,
+                                   block_k: int = 128, interpret: bool = True):
+    """Draft decode: hi codes at the leading block positions, rest zero.
+
+    Streams hi + scale only — neither the mask header nor the lo payload is
+    an operand.  Positions are scrambled relative to the true layout (the
+    mask is what orders them), so this is the cheapest *and* lossiest
+    fidelity level in the family.
+    """
+    m, k_dim = x.shape
+    nb, rows, n = hi.shape
+    n_high = w - n_low
+    assert n_high >= 1, "maskfree_p draft needs at least one high value"
+    assert rows == n_high, (rows, n_high)
+    assert k_dim == nb * w, (k_dim, nb, w)
+    assert block_k % w == 0
+    assert m % block_m == 0 and n % block_n == 0 and k_dim % block_k == 0
+    bnb = block_k // w
+    grid = (m // block_m, n // block_n, k_dim // block_k)
+    kern = functools.partial(_kernel_maskfree_p, w=w, n_high=n_high)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bnb, rows, block_n), lambda i, j, kk: (kk, 0, j)),
             pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),

@@ -109,6 +109,16 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--prefill", default="chunked",
                     choices=["chunked", "serial"])
+    ap.add_argument("--speculative", type=int, default=0, metavar="K",
+                    help="(--paged) self-speculative decoding: draft up to "
+                         "K tokens per slot per tick from the packed "
+                         "payload read at reduced fidelity, then verify at "
+                         "full fidelity (token-identical greedy output)")
+    ap.add_argument("--draft", default="histream",
+                    choices=["histream", "maskfree_p"],
+                    help="(--speculative) which streams the draft lane "
+                         "reads: histream = mask+hi (skip lo), "
+                         "maskfree_p = hi only (skip mask+lo)")
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="record telemetry and write a Chrome-trace JSON "
                          "to PATH at exit (same as STRUM_TRACE=PATH); "
@@ -131,6 +141,7 @@ def main(argv=None):
         mesh = make_host_mesh(data=data, model=model)
         rules = rules_for_mesh(mesh)
 
+    plan = None
     if args.schedule is not None or args.strum != "none":
         from repro.launch.steps import build_serving_plan
         if args.schedule is not None:
@@ -170,8 +181,10 @@ def main(argv=None):
         max_len = args.prompt_len + args.gen + args.page_size
         sched = BatchScheduler(cfg, params, n_slots=args.batch,
                                max_len=max_len, mesh=mesh, rules=rules,
-                               kv_cache=kv, page_size=args.page_size,
-                               prefill=args.prefill)
+                               plan=plan, kv_cache=kv,
+                               page_size=args.page_size,
+                               prefill=args.prefill,
+                               speculative=args.speculative, draft=args.draft)
         for i in range(args.batch):
             sched.submit(Request(uid=i, prompt=prompt[i],
                                  max_new_tokens=args.gen + 1))
@@ -182,6 +195,13 @@ def main(argv=None):
         print(f"paged serve: {len(done)} requests in {dt*1e3:.1f} ms "
               f"({st['steps']} ticks, {args.prefill} prefill); cache "
               f"{st['codec']} x{st['ratio_vs_int8']:.3f} vs int8 pages")
+        if args.speculative:
+            rec = telemetry.current()
+            if rec is not None and rec.counter("spec/drafted"):
+                acc = rec.counter("spec/accepted") / rec.counter("spec/drafted")
+                print(f"speculative: k={args.speculative} draft={args.draft} "
+                      f"acceptance {acc:.3f} "
+                      f"(payload ratio {st['speculative']['ratio']:.3f})")
         print("sample:", done[0].output[:16])
         _print_telemetry()
         return 0

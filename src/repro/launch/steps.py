@@ -17,7 +17,7 @@ from repro.runtime import compression as gcomp
 
 __all__ = ["make_train_step", "make_prefill_step", "make_decode_step",
            "make_paged_decode_step", "make_chunked_prefill_step",
-           "build_serving_plan"]
+           "make_verify_step", "build_serving_plan"]
 
 
 def build_serving_plan(params, *, schedule=None, cfg=None, policy=None,
@@ -115,4 +115,20 @@ def make_chunked_prefill_step(cfg, spec, mesh=None,
                                       slot, start, valid_len, spec, cfg,
                                       mesh=mesh, rules=rules,
                                       cache_backend=cache_backend)
+    return step
+
+
+def make_verify_step(cfg, spec, mesh=None, rules: Optional[Rules] = None,
+                     cache_backend: Optional[str] = None):
+    """Verify lane of self-speculative decoding: one fixed-shape (1, k+1)
+    step that scores a slot's draft window at full fidelity without
+    mutating any cache state — the scheduler commits accepted KV rows
+    itself (its rollback)."""
+    rules = rules or (rules_for_mesh(mesh) if mesh is not None else None)
+
+    def step(params, tokens, pools, hot, page_table, slot, start):
+        return tfm.verify_chunk_step(params, tokens, pools, hot, page_table,
+                                     slot, start, spec, cfg, mesh=mesh,
+                                     rules=rules,
+                                     cache_backend=cache_backend)
     return step

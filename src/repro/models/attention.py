@@ -22,7 +22,8 @@ import jax.numpy as jnp
 from repro.models.layers import apply_rope, linear, linear_def
 
 __all__ = ["attn_def", "attention", "decode_attention", "init_cache_spec",
-           "decode_attention_paged", "prefill_attention_paged"]
+           "decode_attention_paged", "prefill_attention_paged",
+           "verify_attention_paged"]
 
 NEG_INF = -1e30
 
@@ -321,6 +322,70 @@ def prefill_attention_paged(p: dict, x: jnp.ndarray, cfg, pool: dict,
     acc_c = jnp.einsum("bgik,bkgd->bgid", pexp, vf)
 
     o = _merge_partials([sealed, (acc_c, m_c, l_c)])    # (b, KV, c*rep, hd)
+    o = o.reshape(b, nkv, c, rep, hd).transpose(0, 2, 1, 3, 4)
+    o = o.reshape(b, c, nh * hd).astype(x.dtype)
+    y = linear(p["wo"], o, **dict(kw, tp_pattern="row"))
+    return y, (k, v)
+
+
+def verify_attention_paged(p: dict, x: jnp.ndarray, cfg, pool: dict,
+                           tails: tuple, spec, table_row: jnp.ndarray,
+                           start: jnp.ndarray, cache_backend=None, **kw):
+    """Speculation-verify attention for ONE slot.  x: (1, C, D).
+
+    Like :func:`prefill_attention_paged`, but ``start`` (the slot's
+    committed length) is NOT page-aligned: the committed prefix splits
+    into ``start // ps`` sealed pages plus a partially-filled hot tail, so
+    the merge takes THREE online-softmax partials — sealed pages, the
+    tail's committed rows (tail index ``i`` holds absolute position
+    ``(start // ps) * ps + i``, valid *strictly* below ``start``; rows
+    at/after ``start`` may be stale draft KV and must not score), and the
+    intra-chunk causal block at query positions ``start + [0, C)``.  Every
+    sealed page and committed tail row precedes every query, so only the
+    chunk partial needs a causal mask.  Nothing is mutated — the caller
+    commits accepted rows of the returned ``(k, v)`` itself.
+    """
+    from repro.engine.cache import attn_sealed_partial
+    b, c, _ = x.shape
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    rep = nh // nkv
+    ps = spec.page_size
+    positions = (start + jnp.arange(c, dtype=jnp.int32))[None, :]
+    positions = jnp.broadcast_to(positions, (b, c))
+    q, k, v = _qkv(p, x, cfg, positions, **kw)
+
+    qf5 = (q.astype(jnp.float32) / math.sqrt(hd)).reshape(b, c, nkv, rep, hd)
+    qr = qf5.transpose(0, 2, 1, 3, 4).reshape(b, nkv, c * rep, hd)
+    n_valid = jnp.broadcast_to(start // ps, (b,)).astype(jnp.int32)
+    sealed = attn_sealed_partial(pool, qr, table_row[None, :], n_valid, spec,
+                                 backend=cache_backend)
+
+    # committed hot-tail prefix (empty when start is page-aligned: the
+    # all-masked partial merges to an exact no-op, see _merge_partials)
+    kt, vt = tails                                          # (1, ps, KV, hd)
+    t_pos = (start // ps) * ps + jnp.arange(ps)
+    valid_t = (t_pos < start)[None, None, None, :]
+    sc_t = jnp.einsum("bgid,bpgd->bgip", qr, kt.astype(jnp.float32))
+    sc_t = jnp.where(valid_t, sc_t, NEG_INF)
+    m_t = jnp.max(sc_t, axis=-1)
+    pexp_t = jnp.exp(sc_t - m_t[..., None])
+    pexp_t = jnp.where(valid_t, pexp_t, 0.0)
+    l_t = jnp.sum(pexp_t, axis=-1)
+    acc_t = jnp.einsum("bgip,bpgd->bgid", pexp_t, vt.astype(jnp.float32))
+
+    # the chunk against itself, intra-chunk causal (as in prefill)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    causal = jnp.arange(c)[:, None] >= jnp.arange(c)[None, :]
+    sc_c = jnp.einsum("bqgrd,bkgd->bgqrk", qf5, kf)
+    sc_c = jnp.where(causal[None, None, :, None, :], sc_c, NEG_INF)
+    sc_c = sc_c.reshape(b, nkv, c * rep, c)
+    m_c = jnp.max(sc_c, axis=-1)            # finite: the diagonal is valid
+    pexp = jnp.exp(sc_c - m_c[..., None])
+    l_c = jnp.sum(pexp, axis=-1)
+    acc_c = jnp.einsum("bgik,bkgd->bgid", pexp, vf)
+
+    o = _merge_partials([sealed, (acc_t, m_t, l_t), (acc_c, m_c, l_c)])
     o = o.reshape(b, nkv, c, rep, hd).transpose(0, 2, 1, 3, 4)
     o = o.reshape(b, c, nh * hd).astype(x.dtype)
     y = linear(p["wo"], o, **dict(kw, tp_pattern="row"))

@@ -7,10 +7,12 @@ pieces the engine builds on:
 ``_pack_leaf``        (..., K, N) kernel -> compressed serving-layout arrays
                       (lead dims preserved so ``lax.scan`` / expert indexing
                       slice them exactly like dense params).
-``gather_dequant``    deprecated shim — the TP/FSDP compressed-gather path
-                      lives in the engine's ``sharded:*`` registry family
-                      (:mod:`repro.engine.sharded`).
 ``packed_model_defs`` dry-run ParamDefs with exact packed shapes/shardings.
+
+The TP/FSDP compressed-gather path lives in the engine's ``sharded:*``
+registry family (:mod:`repro.engine.sharded`); the old ``gather_dequant``
+shim here is gone — call ``engine.dispatch(leaf, x, mesh=...,
+tp_pattern=...)`` or ``repro.engine.sharded.gather_dequant_leaf``.
 
 The model's ``linear`` recognizes compressed leaves and dispatches through
 :mod:`repro.engine` — no other model code changes, which is the point:
@@ -89,32 +91,6 @@ def strum_serve_params(params, cfg, policy: Optional[LayerPolicy] = None,
     return build_plan(params, schedule=schedule,
                       policy=policy if schedule is None else None,
                       cfg=scfg).params
-
-
-def gather_dequant(wleaf: dict, scfg: StruMConfig, mesh, pattern: str,
-                   k_dim: int, dtype=jnp.bfloat16):
-    """Deprecated shim over the registry's ``sharded:gather_dequant`` entry.
-
-    The compressed FSDP gather is now an engine-native kernel family
-    (:mod:`repro.engine.sharded`): ``engine.dispatch(leaf, x, mesh=mesh,
-    tp_pattern=...)`` selects ``sharded:gather_dequant`` /
-    ``sharded:gather_pallas`` by capability predicate, and mesh-aware plans
-    (``build_plan(..., mesh=mesh)``) record the layout per leaf.  This shim
-    keeps the historical weight-returning signature: it runs the registry
-    entry's gather+dequant (without the trailing dot) and returns the dense
-    local weight.
-    """
-    import warnings
-
-    warnings.warn(
-        "models.quantize.gather_dequant is deprecated; dispatch through "
-        "repro.engine (mesh=/tp_pattern=) — the registry's sharded:* "
-        "variants own the compressed FSDP gather",
-        DeprecationWarning, stacklevel=2)
-    from repro.engine.registry import get_variant
-    get_variant("sharded:gather_dequant")   # the registry owns this path now
-    from repro.engine.sharded import gather_dequant_leaf
-    return gather_dequant_leaf(wleaf, scfg, mesh, pattern, k_dim, dtype=dtype)
 
 
 def packed_model_defs(cfg, policy: Optional[LayerPolicy] = None):

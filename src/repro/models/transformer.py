@@ -26,7 +26,7 @@ from repro.models.sharding import Rules, constrain
 
 __all__ = ["period", "n_groups", "model_defs", "forward_train",
            "prefill", "decode_step", "cache_defs", "loss_fn",
-           "decode_step_paged", "prefill_chunk_step"]
+           "decode_step_paged", "prefill_chunk_step", "verify_chunk_step"]
 
 
 def period(cfg) -> int:
@@ -468,3 +468,63 @@ def prefill_chunk_step(params: dict, tokens: jnp.ndarray, pools: dict,
     x = apply_norm(params["final_norm"], x, cfg)
     lg = logits(params.get("lm_head"), params["embed"], x)
     return lg, new_hot, chunk_kv
+
+
+def verify_chunk_step(params: dict, tokens: jnp.ndarray, pools: dict,
+                      hot: dict, page_table: jnp.ndarray, slot: jnp.ndarray,
+                      start: jnp.ndarray, spec, cfg, mesh=None, rules=None,
+                      cache_backend=None, **kw):
+    """Score a speculative token window for ONE slot.  tokens: (1, C) int32.
+
+    The verify lane of self-speculative decoding: ``tokens[0]`` is the
+    slot's next input token and ``tokens[1:]`` the draft continuation,
+    sitting at absolute positions ``start + [0, C)`` where ``start`` is the
+    slot's committed length.  Full-fidelity weights, so
+    ``argmax(logits[0, j])`` is bit-identical to what plain decode would
+    emit after teacher-forcing the same prefix — the acceptance rule that
+    keeps speculative output token-exact.  Nothing is mutated: the
+    scheduler commits accepted rows of ``chunk_kv`` into the hot tails
+    itself (its KV rollback).  Attention-only stacks — SSM state cannot
+    roll back a rejected window.  Returns ``(logits (1, C, V), chunk_kv)``.
+    """
+    kw = _common_kw(cfg, mesh, kw)
+    if tokens.ndim == 3:
+        x = tokens.astype(cfg.activation_dtype)
+    else:
+        x = embed_lookup(params["embed"], tokens, cfg.activation_dtype)
+    p = period(cfg)
+
+    def group(carry, xs):
+        x = carry
+        gp, pool_g, hot_g = xs
+        chunk_kv = {}
+        for i in range(p):
+            bp, pool_i, hot_i = (gp[f"pos{i}"], pool_g[f"pos{i}"],
+                                 hot_g[f"pos{i}"])
+            if "attn" not in bp:
+                raise NotImplementedError(
+                    "speculative verify needs an attention-only stack: SSM "
+                    "recurrent state cannot roll back a rejected window")
+            h = apply_norm(bp["norm1"], x, cfg)
+            tails = (hot_i["k_tail"][slot][None], hot_i["v_tail"][slot][None])
+            h, (ck, cv) = attn_mod.verify_attention_paged(
+                bp["attn"], h, cfg, pool_i, tails, spec, page_table[slot],
+                start, cache_backend=cache_backend, **kw)
+            chunk_kv[f"pos{i}"] = {
+                "k": ck.astype(hot_i["k_tail"].dtype),
+                "v": cv.astype(hot_i["v_tail"].dtype)}
+            x = x + h
+            if cfg.d_ff > 0:
+                h = apply_norm(bp["norm2"], x, cfg)
+                if "moe" in bp:
+                    h, _ = moe.moe_apply(bp["moe"], h, cfg, mesh=mesh, **kw)
+                else:
+                    h = mlp(bp["mlp"], h, cfg, **kw)
+                x = x + h
+            x = constrain(x, ("batch", None, None), rules)
+        return x, chunk_kv
+
+    x, chunk_kv = _scan_groups(group, x, (params["blocks"], pools, hot), cfg)
+    x = apply_norm(params["final_norm"], x, cfg)
+    lg = logits(params.get("lm_head"), params["embed"], x)
+    return lg, chunk_kv

@@ -46,7 +46,8 @@ import numpy as np
 
 from repro import telemetry
 from repro.launch.steps import (make_chunked_prefill_step,
-                                make_paged_decode_step, make_prefill_step)
+                                make_paged_decode_step, make_prefill_step,
+                                make_verify_step)
 from repro.serving import pages as pages_mod
 from repro.serving.pages import PageAllocator, PagesExhausted
 
@@ -103,13 +104,25 @@ class BatchScheduler:
 
     Weight knobs are unchanged from the monolithic scheduler: ``plan=`` /
     ``schedule=`` / ``backend=`` / ``mesh=`` / ``rules=``.
+
+    Speculative knobs: ``speculative=k`` (k > 0) turns the decode lane into
+    a draft/verify round — up to ``k`` draft tokens per slot per tick from
+    the *same* packed payload read at reduced fidelity
+    (:func:`repro.engine.build_draft_plan`; ``draft=`` picks the mode or a
+    full :class:`repro.engine.DraftPolicy`), then one fixed-shape
+    ``(1, k+1)`` full-fidelity verify step scores the window and the
+    longest accepted prefix commits.  Greedy output is token-identical to
+    plain decode; rejected KV never commits (the verify lane mutates
+    nothing, accepted rows are written back explicitly).  Attention-only
+    stacks — SSM state cannot roll back.
     """
 
     def __init__(self, cfg, params, n_slots: int = 4, max_len: int = 256,
                  mesh=None, rules=None, schedule=None, plan=None,
                  backend=None, kv_cache=None, page_size: int = 16,
                  n_pages: Optional[int] = None, prefill: str = "chunked",
-                 prefill_chunk: Optional[int] = None, cache_backend=None):
+                 prefill_chunk: Optional[int] = None, cache_backend=None,
+                 speculative: int = 0, draft=None):
         if plan is not None and schedule is not None:
             raise ValueError("pass plan= or schedule=, not both")
         if plan is not None and backend is not None:
@@ -165,6 +178,33 @@ class BatchScheduler:
         self._chunk_prefill = jax.jit(make_chunked_prefill_step(
             cfg, self.spec, mesh, rules, cache_backend=cache_backend))
         self._prefill = jax.jit(make_prefill_step(cfg, mesh, rules))
+
+        # ---- speculative lanes ----------------------------------------
+        self.speculative = int(speculative)
+        self.draft_plan = None
+        self.draft_policy = None
+        self._draft_decode = self._verify = self._commit = None
+        if self.speculative:
+            from repro import engine
+            if plan is None:
+                raise ValueError(
+                    "speculative=k needs a weight plan (plan= or schedule=):"
+                    " the draft model is the plan's packed payload read at "
+                    "reduced fidelity")
+            if any(cfg.layer_kind(i) != "attn" for i in range(cfg.n_layers)):
+                raise ValueError(
+                    "speculative decoding needs an attention-only stack: "
+                    "SSM recurrent state cannot roll back a rejected window")
+            pol = (draft if isinstance(draft, engine.DraftPolicy)
+                   else engine.DraftPolicy(mode=draft or "histream"))
+            self.draft_policy = pol
+            self.draft_plan = engine.build_draft_plan(plan, pol)
+            self._draft_params = self.draft_plan.params
+            self._draft_decode = jax.jit(make_paged_decode_step(
+                cfg, self.spec, mesh, rules, cache_backend=cache_backend))
+            self._verify = jax.jit(make_verify_step(
+                cfg, self.spec, mesh, rules, cache_backend=cache_backend))
+            self._commit = jax.jit(self._make_commit(ps))
 
         # ---- queue / slots --------------------------------------------
         self.queue: list[Request] = []
@@ -424,6 +464,131 @@ class BatchScheduler:
                 continue
             self._tokens[s] = req._feed(len(req.output) - 1, tok)
 
+    # -------------------------------------------------------- speculative --
+    @staticmethod
+    def _make_commit(ps: int):
+        """One jitted writer: copy the first ``n_acc`` verify KV rows of
+        ``slot``'s window into its hot tail at offset ``r`` — the rollback
+        that makes rejected draft KV unobservable (it is simply never
+        written)."""
+        def commit(hot, chunk_kv, slot, r, n_acc):
+            t = jnp.arange(ps)
+            sel = (t >= r) & (t < r + n_acc)
+            sel_b = sel[None, :, None, None]
+            new_hot = {}
+            for pos, hp in hot.items():
+                if "k_tail" not in hp:
+                    new_hot[pos] = hp
+                    continue
+                ck = chunk_kv[pos]["k"][:, 0]        # (g, C, KV, hd)
+                cv = chunk_kv[pos]["v"][:, 0]
+                src = jnp.clip(t - r, 0, ck.shape[1] - 1)
+                kt = jnp.where(sel_b, jnp.take(ck, src, axis=1),
+                               hp["k_tail"][:, slot])
+                vt = jnp.where(sel_b, jnp.take(cv, src, axis=1),
+                               hp["v_tail"][:, slot])
+                new_hot[pos] = {"k_tail": hp["k_tail"].at[:, slot].set(kt),
+                                "v_tail": hp["v_tail"].at[:, slot].set(vt)}
+            return new_hot
+        return commit
+
+    def _run_speculative(self, active: list) -> None:
+        """One draft/verify round over the decoding slots.
+
+        Per slot: up to ``k_eff`` draft tokens (reduced-fidelity plan,
+        batched through the draft decode lane), then a fixed-shape
+        ``(1, k+1)`` verify step at full fidelity whose greedy predictions
+        both judge the drafts (longest accepted prefix) and supply the
+        bonus token — so every emitted token equals what plain greedy
+        decode would have emitted.  ``k_eff`` caps at the hot tail's
+        remaining room (``page_size - 1 - len % page_size``) so one round
+        commits into one page, plus the request's token budget and the
+        serving window.
+        """
+        ps = self.page_size
+        C = self.speculative + 1
+        base = {s: self.slots[s].len for s in active}
+        k_eff = {}
+        for s in active:
+            sl = self.slots[s]
+            k_eff[s] = max(0, min(
+                self.speculative,
+                ps - 1 - sl.len % ps,
+                sl.req.max_new_tokens - len(sl.req.output) - 1,
+                (self.max_len - 2) - sl.len - 1))
+        max_k = max(k_eff.values(), default=0)
+        drafts: dict = {s: [] for s in active}
+        cache_len = np.zeros((self.n_slots,), np.int32)
+        for s in range(self.n_slots):
+            if self.slots[s] is not None:
+                cache_len[s] = self.slots[s].len
+        if max_k:
+            # draft lane: the tail rows it writes are provisional — the
+            # snapshot restore below rolls them back before verify
+            hot0 = self.hot
+            cur = np.array(self._tokens, np.int64)
+            with telemetry.span("spec:draft", n_active=len(active), k=max_k):
+                for j in range(max_k):
+                    mask = np.zeros((self.n_slots,), bool)
+                    cl = cache_len.copy()
+                    for s in active:
+                        mask[s] = j < k_eff[s]
+                        cl[s] = base[s] + j
+                    lg, self.hot = self._draft_decode(
+                        self._draft_params,
+                        jnp.asarray(cur, jnp.int32)[:, None], self.pools,
+                        self.hot, jnp.asarray(cl), jnp.asarray(self._table),
+                        jnp.asarray(mask))
+                    nxt = np.asarray(
+                        jnp.argmax(lg[:, -1, :self.cfg.vocab_size], axis=-1))
+                    for s in active:
+                        if j < k_eff[s]:
+                            drafts[s].append(int(nxt[s]))
+                            cur[s] = int(nxt[s])
+            self.hot = hot0
+            telemetry.inc("spec/drafted", sum(k_eff.values()))
+        for s in active:
+            sl = self.slots[s]
+            req = sl.req
+            start = base[s]
+            toks = np.zeros((1, C), np.int32)
+            toks[0, 0] = self._tokens[s]
+            toks[0, 1:1 + len(drafts[s])] = drafts[s]
+            with telemetry.span("spec:verify", slot=s, k=k_eff[s]):
+                lg, chunk_kv = self._verify(
+                    self.params, jnp.asarray(toks), self.pools, self.hot,
+                    jnp.asarray(self._table), jnp.int32(s), jnp.int32(start))
+                g = np.asarray(
+                    jnp.argmax(lg[0, :, :self.cfg.vocab_size], axis=-1))
+            n_acc = 0
+            retired = False
+            for j in range(k_eff[s] + 1):
+                tok = int(g[j])
+                req.output.append(tok)
+                telemetry.request_event(req.uid, "token", slot=s)
+                n_acc = j + 1
+                if ((req.eos_id is not None and tok == req.eos_id)
+                        or len(req.output) >= req.max_new_tokens
+                        or start + n_acc >= self.max_len - 2):
+                    retired = True
+                    break
+                fed = req._feed(len(req.output) - 1, tok)
+                # a draft survives iff it matches what plain decode would
+                # FEED next (== the greedy token, unless teacher-forced)
+                if j < k_eff[s] and drafts[s][j] == fed:
+                    continue
+                self._tokens[s] = fed
+                break
+            self.hot = self._commit(self.hot, chunk_kv, jnp.int32(s),
+                                    jnp.int32(start % ps), jnp.int32(n_acc))
+            sl.len = start + n_acc
+            telemetry.inc("spec/rounds")
+            telemetry.inc("spec/accepted", n_acc - 1)
+            if sl.len % ps == 0 and sl.len // ps <= len(sl.pages):
+                self._seal_tails(s)
+            if retired:
+                self._retire(s)
+
     # -------------------------------------------------------------- drive --
     def step(self) -> int:
         """One scheduler tick: admit, advance one prefill chunk, decode all
@@ -455,7 +620,10 @@ class BatchScheduler:
             active = self._decode_slots()
             telemetry.gauge("sched/lane/decode_active", len(active))
             if active:
-                self._run_decode(active)
+                if self.speculative:
+                    self._run_speculative(active)
+                else:
+                    self._run_decode(active)
                 progressed += len(active)
             self._steps += 1
             return progressed
@@ -477,4 +645,9 @@ class BatchScheduler:
         out["allocator"] = self.allocator.defrag()
         out["attn_variant"] = self.spec.attn_variant
         out["steps"] = self._steps
+        if self.speculative:
+            from repro.engine import draft_plan_bytes
+            out["speculative"] = dict(
+                k=self.speculative, mode=self.draft_policy.mode,
+                **draft_plan_bytes(self.draft_plan))
         return out

@@ -21,8 +21,9 @@ def test_gather_dequant_both_patterns_match_local():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.core.policy import StruMConfig
+        from repro.engine.sharded import gather_dequant_leaf
         from repro.launch.mesh import make_host_mesh
-        from repro.models.quantize import _pack_leaf, gather_dequant
+        from repro.models.quantize import _pack_leaf
         from repro.core.apply import fake_quantize_array
 
         scfg = StruMConfig(method="mip2q", p=0.5, L=5)
@@ -39,7 +40,7 @@ def test_gather_dequant_both_patterns_match_local():
                 sh = {k: jax.device_put(v, NamedSharding(mesh, spec if k != "scale"
                       else (P(None, "model") if pattern == "col" else P(None, ("data",)))))
                       for k, v in leaf.items()}
-                got = jax.jit(lambda l: gather_dequant(
+                got = jax.jit(lambda l: gather_dequant_leaf(
                     l, scfg, mesh, pattern, K, dtype=jnp.float32))(sh)
                 err = float(jnp.max(jnp.abs(got - want)))
                 print(pattern, "ERR", err)

@@ -395,19 +395,21 @@ def test_moe_body_threads_plan_backend_to_post_gather_kernel():
     assert "GPROBE" in out
 
 
-def test_gather_dequant_shim_warns_and_matches_registry():
-    """models.quantize.gather_dequant still works, emits DeprecationWarning,
-    and routes through the registry implementation."""
+def test_gather_dequant_shim_removed_registry_owns_path():
+    """The deprecated models.quantize.gather_dequant shim is gone; the
+    registry's sharded:* family is the only compressed-gather path and
+    gather_dequant_leaf still matches the fake-quant reference."""
     out = _run("""
-        import warnings
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import NamedSharding, PartitionSpec as P
         from repro import engine
         from repro.core.apply import fake_quantize_array
         from repro.core.policy import StruMConfig
+        from repro.engine.sharded import gather_dequant_leaf
         from repro.launch.mesh import make_host_mesh
-        from repro.models.quantize import _pack_leaf, gather_dequant
+        from repro.models.quantize import _pack_leaf
+        import repro.models.quantize as mq
 
+        assert not hasattr(mq, "gather_dequant")
         assert "sharded:gather_dequant" in engine.list_variants()
         assert "sharded:gather_pallas" in engine.list_variants()
         assert "sharded:grouped_gather" in engine.list_variants()
@@ -420,12 +422,8 @@ def test_gather_dequant_shim_warns_and_matches_registry():
         leaf = _pack_leaf(w, scfg)
         want = fake_quantize_array(w, scfg)
         with mesh:
-            with warnings.catch_warnings(record=True) as rec:
-                warnings.simplefilter("always")
-                got = jax.jit(lambda l: gather_dequant(
-                    l, scfg, mesh, "col", K, dtype=jnp.float32))(leaf)
-        assert any(issubclass(r.category, DeprecationWarning) for r in rec), \\
-            [str(r.message) for r in rec]
+            got = jax.jit(lambda l: gather_dequant_leaf(
+                l, scfg, mesh, "col", K, dtype=jnp.float32))(leaf)
         err = float(jnp.max(jnp.abs(got - want)))
         print("SHIM_ERR", err)
         assert err < 1e-5

@@ -1,0 +1,164 @@
+"""Self-speculative decoding: draft/verify must be a pure perf transform.
+
+The draft lane reads a byte-subset of the SAME packed payload (no second
+checkpoint); longest-accepted-prefix verification keeps greedy decode
+token-identical to the plain lane, whatever the draft's fidelity.  These
+tests pin that contract per packed weight codec, across scheduler edge
+cases (rollback, EOS inside an accepted prefix, slot recycling), and
+calibrate the autotune acceptance predictor's ordering against measured
+acceptance on a trained tiny LM.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine, telemetry
+from repro.configs import get_smoke_config
+from repro.core.policy import StruMConfig
+from repro.models import model_defs
+from repro.models.params import init_params
+from repro.serving import BatchScheduler, Request
+
+WCFGS = [
+    ("dliq_q4", StruMConfig(method="dliq", w=16, p=0.5, q=4)),
+    ("mip2q_q4", StruMConfig(method="mip2q", w=16, p=0.5, L=5)),
+]
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_smoke_config("qwen2_7b"), dtype="float32")
+    params = init_params(model_defs(cfg), seed=0, dtype_override="float32")
+    return cfg, params
+
+
+def _drain(cfg, params, plan, reqs, speculative=0, draft=None, n_slots=2,
+           max_len=48):
+    sched = BatchScheduler(cfg, params, n_slots=n_slots, max_len=max_len,
+                           plan=plan, page_size=16, speculative=speculative,
+                           draft=draft)
+    with telemetry.recording() as rec:
+        for r in reqs:
+            sched.submit(r)
+        done = sched.run_to_completion(max_steps=500)
+    return {r.uid: list(r.output) for r in done}, rec, sched
+
+
+def _reqs(cfg, n=3, max_new=12, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i, prompt=jnp.asarray(
+        rng.integers(0, cfg.vocab_size, size=(5 + 2 * i,)), jnp.int32),
+        max_new_tokens=max_new, **kw) for i in range(n)]
+
+
+@pytest.mark.parametrize("label,wcfg", WCFGS)
+def test_teacher_forced_parity_per_codec(setup, label, wcfg):
+    """Teacher-forced decode: plain and speculative lanes must *record*
+    the identical prediction stream per position, per packed codec —
+    forced feeding pins both lanes onto the same trajectory, so any
+    divergence is a verify/commit bug, not a sampling artifact."""
+    cfg, params = setup
+    plan = engine.build_plan(params, cfg=wcfg, float_only=True)
+    rng = np.random.default_rng(3)
+    force = [int(t) for t in rng.integers(0, cfg.vocab_size, size=(12,))]
+    base, _, _ = _drain(cfg, params, plan,
+                        _reqs(cfg, max_new=12, force_tokens=force))
+    for mode in ("histream", "maskfree_p"):
+        got, rec, _ = _drain(cfg, params, plan,
+                             _reqs(cfg, max_new=12, force_tokens=force),
+                             speculative=2, draft=mode)
+        assert got == base, (label, mode, got, base)
+        assert rec.counter("spec/drafted") > 0
+
+
+def test_greedy_parity_and_rollback_progress(setup):
+    """Greedy (non-forced) parity on an untrained model: near-uniform
+    logits make the draft's argmax disagree constantly, so acceptance sits
+    near zero — every all-rejected round must still commit exactly the
+    verify lane's one token (rollback leaves no stale draft KV) and the
+    stream must equal plain decode token-for-token."""
+    cfg, params = setup
+    plan = engine.build_plan(params, cfg=WCFGS[0][1], float_only=True)
+    base, _, _ = _drain(cfg, params, plan, _reqs(cfg, max_new=20))
+    got, rec, _ = _drain(cfg, params, plan, _reqs(cfg, max_new=20),
+                         speculative=3, draft="maskfree_p")
+    assert got == base, (got, base)
+    drafted = rec.counter("spec/drafted")
+    accepted = rec.counter("spec/accepted")
+    assert drafted > 0 and accepted < drafted, (accepted, drafted)
+
+
+def test_speculative_zero_is_plain_lane(setup):
+    """speculative=0 builds no draft machinery and takes the plain path."""
+    cfg, params = setup
+    plan = engine.build_plan(params, cfg=WCFGS[0][1], float_only=True)
+    _, _, sched = _drain(cfg, params, plan, _reqs(cfg, n=1, max_new=4),
+                         speculative=0)
+    assert sched.draft_plan is None and sched._draft_decode is None
+
+
+def test_eos_inside_accepted_prefix_retires(setup):
+    """An EOS the verify step emits mid-prefix must retire the request at
+    that position — identically to plain decode — not leak the rest of
+    the accepted tokens into the output."""
+    cfg, params = setup
+    plan = engine.build_plan(params, cfg=WCFGS[0][1], float_only=True)
+    base, _, _ = _drain(cfg, params, plan, _reqs(cfg, n=2, max_new=10))
+    eos = base[0][3]        # a token plain decode emits mid-stream
+    b2, _, _ = _drain(cfg, params, plan,
+                      _reqs(cfg, n=2, max_new=10, eos_id=eos))
+    got, _, _ = _drain(cfg, params, plan,
+                       _reqs(cfg, n=2, max_new=10, eos_id=eos),
+                       speculative=3, draft="histream")
+    assert got == b2, (got, b2)
+    assert len(b2[0]) <= 4 and b2[0][-1] == eos, b2
+
+
+def test_recycled_slot_isolation_under_rollback(setup):
+    """More requests than slots under the speculative lane: rolled-back
+    draft KV from a retired request must never contaminate the next
+    request admitted into the same slot."""
+    cfg, params = setup
+    plan = engine.build_plan(params, cfg=WCFGS[0][1], float_only=True)
+    base, _, _ = _drain(cfg, params, plan, _reqs(cfg, n=5, max_new=6),
+                        n_slots=2)
+    got, _, _ = _drain(cfg, params, plan, _reqs(cfg, n=5, max_new=6),
+                       n_slots=2, speculative=2, draft="maskfree_p")
+    assert got == base, (got, base)
+    assert sorted(got) == [0, 1, 2, 3, 4]
+
+
+def test_acceptance_predictor_ordering_on_trained_lm():
+    """Calibration: across three draft schedules the *measured* acceptance
+    ordering on a trained tiny LM must match the autotune predictor's
+    (absolute α is not contractual, the ordering is — see
+    repro.autotune.speculative)."""
+    from benchmarks.common import trained_tiny_lm
+    from repro import autotune
+
+    cfg, params, _ = trained_tiny_lm(steps=150)
+    plan = engine.build_plan(params, cfg=WCFGS[0][1], float_only=True)
+    schedules = [
+        ("histream", engine.DraftPolicy(mode="histream")),
+        ("mixed", engine.DraftPolicy(mode="maskfree_p",
+                                     overrides=(("attn", "histream"),))),
+        ("maskfree_p", engine.DraftPolicy(mode="maskfree_p")),
+    ]
+    pred, meas = {}, {}
+    for label, pol in schedules:
+        prof = autotune.draft_error_profile(plan, pol)
+        pred[label] = autotune.predicted_acceptance(prof["total_err2"])
+        _, rec, _ = _drain(cfg, params, plan,
+                           _reqs(cfg, n=4, max_new=16, seed=7), max_len=64,
+                           speculative=3, draft=pol)
+        drafted = rec.counter("spec/drafted")
+        assert drafted > 0, label
+        meas[label] = rec.counter("spec/accepted") / drafted
+    # histream reads strictly more payload than mixed, mixed more than
+    # maskfree_p — the predictor must order them that way, and measured
+    # acceptance must not invert the predicted order
+    assert pred["histream"] > pred["mixed"] > pred["maskfree_p"], pred
+    assert meas["histream"] >= meas["mixed"] >= meas["maskfree_p"], \
+        (meas, pred)
